@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, CSV rows, CPU-scale dataset caps.
+
+The paper's experiments ran multi-million-row datasets on a server CPU with
+a C implementation; this container is a single Python-driven CPU core, so
+each table uses size-capped presets by default (row-for-row with the paper's
+dataset list) and ``--full`` lifts the caps.  Quality metrics (objective
+deviations, balance statistics) are scale-representative either way; wall
+times are indicative only and the TPU path is evaluated via the dry-run
+roofline instead.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return out, (time.time() - t0) / repeats
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def dev_pct(ref: float, other: float) -> float:
+    return (other - ref) / abs(ref) * 100.0
+
+
+def kmeans_labels(x: np.ndarray, k: int, iters: int = 10,
+                  seed: int = 0) -> np.ndarray:
+    """Tiny Lloyd's k-means (paper Section 5.4 derives categories this way)."""
+    rng = np.random.default_rng(seed)
+    centers = x[rng.choice(len(x), k, replace=False)]
+    for _ in range(iters):
+        d = ((x[:, None, :] - centers[None]) ** 2).sum(-1) if len(x) < 20000 \
+            else np.stack([((x - c) ** 2).sum(1) for c in centers], 1)
+        lab = d.argmin(1)
+        for g in range(k):
+            pts = x[lab == g]
+            if len(pts):
+                centers[g] = pts.mean(0)
+    return lab.astype(np.int32)

@@ -1,0 +1,39 @@
+"""Kernel + solver microbenchmarks.
+
+The Pallas kernels only *interpret* on CPU, so wall-times here cover the
+jnp reference paths and the auction solver; the kernels' performance story
+on TPU is carried by the roofline analysis (BlockSpec arithmetic intensity,
+see EXPERIMENTS.md S`Roofline).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.assignment import auction_solve, scipy_solve
+from repro.kernels import cdist_ref
+
+from benchmarks.common import row, timed
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(0)
+    for m, k, d in [(512, 512, 64), (1024, 1024, 256)]:
+        x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        _, t = timed(lambda: cdist_ref(x, c).block_until_ready(), repeats=5)
+        ai = (2 * m * k * d) / ((m * d + k * d + m * k) * 4)
+        row(f"kernel/cdist_ref/{m}x{k}x{d}", t,
+            f"arith_intensity={ai:.1f}flops_per_byte")
+    for n in (64, 128, 256) + ((512,) if full else ()):
+        cmat = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+        _, t_a = timed(lambda: auction_solve(cmat).block_until_ready(),
+                       repeats=3)
+        cn = np.asarray(cmat)
+        _, t_s = timed(lambda: scipy_solve(cn), repeats=3)
+        row(f"solver/auction/{n}", t_a, f"scipy_lapjv_us={t_s*1e6:.0f}")
+
+
+if __name__ == "__main__":
+    run()

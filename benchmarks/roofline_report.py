@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md S`Dry-run / S`Roofline tables from
+dryrun_results.json (produced by repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def lever(r) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    if arch == "aba-pipeline":
+        return "Lemma-1 hierarchical plan cuts auction rounds (S`Perf C: 5.1x)"
+    ssm = arch.startswith(("falcon", "jamba"))
+    if dom == "collective_s":
+        return ("batch/multi-token decode amortizes the per-step psum "
+                "latency of tiny SSM state updates")
+    if shape == "train_4k":
+        if ssm:
+            return ("chunked selective scan keeps SSM state in registers "
+                    "(S`Perf A: 9.8x); Pallas fused-backward kernel next")
+        return ("sequence-parallel residuals + larger flash kv-chunks "
+                "(S`Perf B: 3.0x); Pallas flash kernel keeps acc in VMEM")
+    if shape == "prefill_32k":
+        return ("flash loop-carry traffic scales with S/ck: larger kv "
+                "chunks; Pallas attention kernel removes acc round-trips")
+    if shape in ("decode_32k", "long_500k"):
+        if "deepseek" in arch:
+            return ("already MLA-compressed cache (9x smaller than GQA); "
+                    "quantized (int8) cache next")
+        return ("cache streaming is the floor: MLA-style compression or "
+                "int8 KV cache; sliding-window layers could ring-buffer")
+    return "-"
+
+
+def render(path="dryrun_results.json", mesh="16x16"):
+    rs = json.load(open(path))
+    rows = [r for r in rs if r["mesh"] == mesh]
+    out = []
+    out.append("| arch | shape | status | compute_s | memory_s | coll_s | "
+               "dominant | MODEL/HLO | HBM/dev | temp/dev | lever |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                       f"{r.get('reason', '')[:40]} | | | | | | | | |")
+            continue
+        t = r["terms"]
+        mem = r.get("memory", {})
+        ratio = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+            f"| {ratio:.3f} | {fmt_bytes(r['bytes_per_device'])} "
+            f"| {fmt_bytes(mem.get('temp_bytes'))} | {lever(r)} |")
+    return "\n".join(out)
+
+
+def summary(path="dryrun_results.json"):
+    rs = json.load(open(path))
+    ok = [r for r in rs if r["status"] == "ok"]
+    sk = [r for r in rs if r["status"] == "skipped"]
+    er = [r for r in rs if r["status"] == "error"]
+    lines = [f"cells: {len(rs)} total, {len(ok)} compiled ok, "
+             f"{len(sk)} skipped (documented), {len(er)} errors"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    lines.append(f"dominant terms: {doms}")
+    worst = sorted((r for r in ok if r["mesh"] == "16x16"),
+                   key=lambda r: r.get("useful_flops_ratio") or 9)[:5]
+    lines.append("worst MODEL/HLO flop ratios (16x16): " + ", ".join(
+        f"{r['arch']}/{r['shape']}={r.get('useful_flops_ratio'):.3f}"
+        for r in worst))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    p = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    print(summary(p))
+    print()
+    print("## 16x16 (single pod)")
+    print(render(p, "16x16"))
+    print()
+    print("## 2x16x16 (multi-pod)")
+    print(render(p, "2x16x16"))

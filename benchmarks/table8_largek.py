@@ -1,0 +1,40 @@
+"""Paper Table 8: very large K via hierarchical decomposition (the mini-batch
+regime: anticluster size down to 2-3) vs random partitioning."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import aba_auto, objective_centroid
+from repro.core.baselines import random_partition
+from repro.data import synthetic
+
+from benchmarks.common import dev_pct, row
+
+
+def run(full: bool = False):
+    n = 1_281_167 if full else 131_072
+    d = 192 if full else 48
+    x = synthetic.make("lowrank", n, d, seed=0)
+    xj = jnp.asarray(x)
+    ks = [n // 128, n // 32, n // 8, n // 4, n // 2]  # sizes 128 ... 2
+    print(f"# table8: imagenet-like n={n} d={d}: K,min_sz,max_sz,"
+          "cpu_aba_s,ofv_aba,ofv_rand,dev%")
+    for k in ks:
+        t0 = time.time()
+        labels = np.asarray(aba_auto(xj, k, max_k=256))
+        dt = time.time() - t0
+        counts = np.bincount(labels, minlength=k)
+        oa = float(objective_centroid(xj, jnp.asarray(labels), k))
+        lr = random_partition(n, k, seed=0)
+        orr = float(objective_centroid(xj, jnp.asarray(lr), k))
+        print(f"table8,{k},{counts.min()},{counts.max()},{dt:.2f},"
+              f"{oa:.2f},{orr:.2f},{dev_pct(oa, orr):+.4f}", flush=True)
+        row(f"table8/k{k}", dt, f"ofv={oa:.1f};dev_rand={dev_pct(oa, orr):+.2f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,2 @@
+"""One config module per assigned architecture (exact public specs) plus the
+paper's own ABA workload presets (repro.configs.aba_presets)."""

@@ -1,0 +1,200 @@
+"""Linear assignment solvers for ABA.
+
+The paper's reference implementation uses LAPJV (Jonker-Volgenant), a
+branch-heavy serial algorithm that maps poorly onto TPU vector/matrix units.
+Following the paper's own future-work pointer (Bertsekas' auction algorithm,
+Section 6), we implement a fully vectorized **Jacobi auction** with
+epsilon-scaling: every round is a dense top-2 reduction over the cost matrix
+plus scatter-max bidding -- VPU/MXU friendly, `vmap`-able, and usable inside
+`lax.scan`/`shard_map`.
+
+All solvers MAXIMIZE total cost (anticlustering assigns batches to the
+*farthest* centroids).
+
+Solvers
+-------
+- ``auction_solve``      eps-optimal, jit/vmap-safe, the production solver.
+- ``greedy_solve``       O(n^3) vectorized greedy, cheap lower-quality option.
+- ``scipy_solve``        exact Hungarian via scipy (host-side oracle/tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -1e30  # sentinel "minus infinity" that survives f32 arithmetic
+
+
+class AuctionConfig(NamedTuple):
+    """Epsilon-scaling schedule for the auction solver.
+
+    eps runs ``n_phases`` geometric steps from ``span/eps_start_div`` down to
+    ``span/(eps_end_mul * n)``.  An eps-optimal assignment is within
+    ``n * eps`` of the optimum; the default schedule gives objective parity
+    with the Hungarian oracle to ~1e-6 relative on random instances.
+
+    ``fixed_rounds > 0`` replaces the convergence while-loop with a
+    fixed-length scan (the round update is a no-op at the converged fixed
+    point).  Used by the dry-run so XLA knows every trip count, and on TPU it
+    avoids host round-trips for the loop predicate.
+    """
+
+    n_phases: int = 4
+    eps_start_div: float = 8.0
+    eps_end_mul: float = 4.0
+    max_rounds: int = 0  # 0 -> auto (50 * n + 1000)
+    fixed_rounds: int = 0
+
+
+def _top2_masked(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Row-wise (best value, best index, second value) of a (m, n) matrix."""
+    j1 = jnp.argmax(values, axis=1)
+    v1 = jnp.take_along_axis(values, j1[:, None], axis=1)[:, 0]
+    masked = values.at[jnp.arange(values.shape[0]), j1].set(_NEG)
+    v2 = jnp.max(masked, axis=1)
+    return v1, j1, v2
+
+
+def _auction_phase(cost: jnp.ndarray, prices: jnp.ndarray, eps: jnp.ndarray,
+                   max_rounds: int, fixed_rounds: int = 0,
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One epsilon phase of Jacobi forward auction (maximization).
+
+    Returns (row_to_col, prices).  All rows start unassigned; prices persist
+    across phases (standard eps-scaling).
+    """
+    n = cost.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    cols = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        assign, _owner, _prices, it = state
+        return jnp.logical_and(jnp.any(assign < 0), it < max_rounds)
+
+    def body(state):
+        assign, owner, prices, it = state
+        unassigned = assign < 0
+        values = cost - prices[None, :]
+        v1, j1, v2 = _top2_masked(values)
+        # Bid: raise the price of the favourite object past the point of
+        # indifference with the runner-up, plus eps.
+        bids = cost[rows, j1] - v2 + eps
+        bid_val = jnp.where(unassigned, bids, _NEG)
+        # Per-object best bid (scatter-max) and winning row (min row index
+        # among rows achieving the best bid -- deterministic tie-break).
+        best = jnp.full((n,), _NEG, cost.dtype).at[j1].max(bid_val)
+        is_best = jnp.logical_and(unassigned, bid_val >= best[j1])
+        cand = jnp.where(is_best, rows, n)
+        winner = jnp.full((n,), n, jnp.int32).at[j1].min(cand)
+        got_bid = winner < n
+        # Rows whose object was just outbid become unassigned.  (They were
+        # assigned, hence did not bid, hence cannot also be winners.)
+        safe_assign = jnp.where(assign >= 0, assign, 0)
+        lost = jnp.logical_and(assign >= 0,
+                               jnp.logical_and(got_bid[safe_assign],
+                                               winner[safe_assign] != rows))
+        assign = jnp.where(lost, -1, assign)
+        # Winners take their objects at the winning bid.
+        winner_safe = jnp.where(got_bid, winner, n)
+        assign = assign.at[winner_safe].set(cols, mode="drop")
+        owner = jnp.where(got_bid, winner, owner)
+        prices = jnp.where(got_bid, best, prices)
+        return assign, owner, prices, it + 1
+
+    assign0 = jnp.full((n,), -1, jnp.int32)
+    owner0 = jnp.full((n,), -1, jnp.int32)
+    if fixed_rounds:
+        # converged state is a fixed point of body (no bids -> no updates)
+        def scan_body(state, _):
+            return body(state), None
+        (assign, _owner, prices, _it), _ = jax.lax.scan(
+            scan_body, (assign0, owner0, prices, jnp.int32(0)),
+            None, length=fixed_rounds)
+    else:
+        assign, _owner, prices, _it = jax.lax.while_loop(
+            cond, body, (assign0, owner0, prices, jnp.int32(0)))
+    return assign, prices
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def auction_solve(cost: jnp.ndarray,
+                  config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+    """eps-optimal max-cost assignment of a square (n, n) cost matrix.
+
+    Returns ``row_to_col`` (n,) int32.  Safe under ``vmap`` and inside
+    ``lax.scan``.  Rectangular problems must be padded by the caller
+    (constant-cost dummy rows are neutral: any column suits them).
+    """
+    cost = cost.astype(jnp.float32)
+    n = cost.shape[0]
+    if n == 1:
+        return jnp.zeros((1,), jnp.int32)
+    finite = jnp.where(cost <= _NEG / 2, 0.0, cost)
+    span = jnp.maximum(jnp.max(finite) - jnp.min(finite), 1e-6)
+    eps_hi = span / config.eps_start_div
+    eps_lo = span / (config.eps_end_mul * n)
+    n_phases = max(int(config.n_phases), 1)
+    if n_phases > 1:
+        ratio = (eps_lo / eps_hi) ** (1.0 / (n_phases - 1))
+        eps_sched = eps_hi * ratio ** jnp.arange(n_phases, dtype=jnp.float32)
+    else:
+        eps_sched = eps_lo[None]
+    max_rounds = config.max_rounds or (50 * n + 1000)
+
+    def phase(prices, eps):
+        assign, prices = _auction_phase(cost, prices, eps, max_rounds,
+                                        config.fixed_rounds)
+        return prices, assign
+
+    prices0 = jnp.zeros((n,), jnp.float32)
+    _prices, assigns = jax.lax.scan(phase, prices0, eps_sched)
+    assign = assigns[-1]
+    # Safety net: if the round cap was hit, columns may be unassigned; patch
+    # them greedily so the result is always a permutation.
+    return _repair_permutation(assign)
+
+
+def _repair_permutation(assign: jnp.ndarray) -> jnp.ndarray:
+    """Fill any ``-1`` rows with the unused columns (order-preserving)."""
+    n = assign.shape[0]
+    used = jnp.zeros((n,), jnp.bool_).at[jnp.where(assign >= 0, assign, 0)].set(
+        assign >= 0)
+    free_cols = jnp.argsort(used, stable=True)  # unused columns first
+    need = assign < 0
+    slot = jnp.cumsum(need) - 1  # index into free_cols per needy row
+    return jnp.where(need, free_cols[slot], assign).astype(jnp.int32)
+
+
+@jax.jit
+def greedy_solve(cost: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized global-greedy max assignment: n rounds of masked argmax."""
+    n = cost.shape[0]
+    def body(_i, state):
+        c, assign = state
+        flat = jnp.argmax(c)
+        r, col = flat // n, flat % n
+        assign = assign.at[r].set(col.astype(jnp.int32))
+        c = c.at[r, :].set(_NEG).at[:, col].set(_NEG)
+        return c, assign
+    _c, assign = jax.lax.fori_loop(
+        0, n, body, (cost.astype(jnp.float32), jnp.full((n,), -1, jnp.int32)))
+    return assign
+
+
+def scipy_solve(cost: np.ndarray) -> np.ndarray:
+    """Exact max-cost assignment (Hungarian) -- host-side oracle."""
+    from scipy.optimize import linear_sum_assignment
+
+    rows, cols = linear_sum_assignment(np.asarray(cost), maximize=True)
+    out = np.empty(cost.shape[0], dtype=np.int32)
+    out[rows] = cols
+    return out
+
+
+def assignment_value(cost: np.ndarray, row_to_col: np.ndarray) -> float:
+    return float(np.asarray(cost)[np.arange(len(row_to_col)), row_to_col].sum())

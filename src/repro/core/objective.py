@@ -1,0 +1,87 @@
+"""Anticlustering objectives and diversity statistics (paper Section 2 + Fact 1).
+
+Two equivalent forms (Fact 1):
+  pairwise form :  W(C) = sum_k sum_{i<i' in C_k} ||x_i - x_i'||^2
+  centroid form :  W(C) = sum_k n_k * sum_{i in C_k} ||x_i - mu_k||^2
+
+The paper's experiment tables report ``ofv`` as the *centroid* sum
+``sum_k sum_{i in C_k} ||x_i - mu_k||^2`` (without the n_k factor, see
+Section 5.3) while Table 11 (balanced k-cut) uses the pairwise W(C).  We
+expose all three plus the per-cluster diversity stats (sd / range) used in
+Tables 6 and 10.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cluster_sizes(labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    return jnp.zeros((k,), jnp.int32).at[labels].add(1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def centroids(x: jnp.ndarray, labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(k, d) cluster centroids via segment-sum."""
+    sums = jax.ops.segment_sum(x, labels, num_segments=k)
+    counts = cluster_sizes(labels, k)
+    return sums / jnp.maximum(counts, 1)[:, None].astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def diversity_per_cluster(x: jnp.ndarray, labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    """d_k = sum_{i in C_k} ||x_i - mu_k||^2  (the paper's per-cluster diversity)."""
+    mu = centroids(x, labels, k)
+    sq = jnp.sum((x - mu[labels]) ** 2, axis=-1)
+    return jax.ops.segment_sum(sq, labels, num_segments=k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def objective_centroid(x: jnp.ndarray, labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    """sum_k sum_{i in C_k} ||x_i - mu_k||^2  -- the tables' ``ofv``."""
+    return jnp.sum(diversity_per_cluster(x, labels, k))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def objective_pairwise(x: jnp.ndarray, labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    """W(C) = sum_k n_k * d_k  (Fact 1) -- Table 11's W(C)."""
+    div = diversity_per_cluster(x, labels, k)
+    counts = cluster_sizes(labels, k).astype(x.dtype)
+    return jnp.sum(counts * div)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def diversity_stats(x: jnp.ndarray, labels: jnp.ndarray, k: int):
+    """(sd, range) of the k per-cluster diversities (Tables 6/10)."""
+    div = diversity_per_cluster(x, labels, k)
+    return jnp.std(div), jnp.max(div) - jnp.min(div)
+
+
+@jax.jit
+def total_pairwise(x: jnp.ndarray) -> jnp.ndarray:
+    """sum_{i<i'} ||x_i - x_i'||^2 = N * sum_i ||x_i - mu||^2 (Fact 1, K=1)."""
+    mu = jnp.mean(x, axis=0)
+    return x.shape[0] * jnp.sum((x - mu[None]) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cut_cost(x: jnp.ndarray, labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Balanced k-cut cost on the complete sq-Euclidean graph (Section 5.5).
+
+    cut = total pairwise - within pairwise; minimizing it == maximizing W(C).
+    """
+    return total_pairwise(x) - objective_pairwise(x, labels, k)
+
+
+def balance_ok(labels, k: int, n: int | None = None) -> bool:
+    """Check constraint (2): all sizes in {floor(N/K), ceil(N/K)}."""
+    import numpy as np
+
+    labels = np.asarray(labels)
+    n = n or labels.shape[0]
+    counts = np.bincount(labels, minlength=k)
+    return counts.min() >= n // k and counts.max() <= -(-n // k)

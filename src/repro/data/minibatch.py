@@ -1,0 +1,76 @@
+"""ABA mini-batch sequencing for SGD -- the paper's headline ML application.
+
+Each anticluster is one mini-batch: K = steps-per-epoch, so every batch is a
+diverse, representative sample of the dataset (Section 1; the Imagenet32
+rows of Tables 4/8 are exactly this workload).  Because ABA is deterministic,
+the batch schedule is reproducible bit-for-bit after a restart -- the
+fault-tolerance story of the training loop leans on this.
+
+Two modes:
+  * single-host: hierarchical ABA over the example embeddings;
+  * sharded: each data-parallel shard anticlusters its local rows via
+    ``repro.core.sharded.sharded_aba`` (collective-free; the host sharding is
+    the top hierarchy level).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.hierarchical import aba_auto, default_plan
+from repro.core.aba import aba
+from repro.core.objective import diversity_per_cluster
+
+
+class ABABatchSequencer:
+    """Deterministic diverse mini-batch schedule over a dataset.
+
+    Args:
+      features: (N, D) embedding used for anticlustering (e.g. the doc/topic
+        features from synthetic.lm_token_stream, pixel features, or an
+        encoder embedding).
+      batch_size: examples per step; K = floor(N / batch_size) anticlusters.
+      epoch_shuffle: reshuffle the *order of batches* per epoch with a
+        counter-based rng (batch membership stays fixed and deterministic).
+    """
+
+    def __init__(self, features: np.ndarray, batch_size: int, *,
+                 max_k: int = 512, seed: int = 0):
+        n = features.shape[0]
+        self.batch_size = batch_size
+        self.k = max(n // batch_size, 1)
+        self.n_used = self.k * batch_size
+        self.seed = seed
+        labels = np.asarray(aba_auto(jnp.asarray(features[:self.n_used]),
+                                     self.k, max_k=max_k))
+        order = np.argsort(labels, kind="stable")
+        self.batches = order.reshape(self.k, -1) if self.k > 1 else (
+            order[None, :])
+        # anticluster sizes are all exactly batch_size when K | N
+        self._features = features
+
+    def diversity_stats(self):
+        f = jnp.asarray(self._features[:self.n_used])
+        lab = np.zeros(self.n_used, np.int32)
+        for b, idx in enumerate(self.batches):
+            lab[idx] = b
+        div = np.asarray(diversity_per_cluster(f, jnp.asarray(lab), self.k))
+        return float(div.std()), float(div.max() - div.min())
+
+    def epoch(self, epoch_idx: int):
+        """Yield batch index arrays; order rotated deterministically."""
+        rng = np.random.default_rng(self.seed * 100003 + epoch_idx)
+        for b in rng.permutation(self.k):
+            yield self.batches[b]
+
+    def __len__(self):
+        return self.k
+
+
+def random_sequencer_batches(n: int, batch_size: int, seed: int = 0):
+    """Baseline: the standard random-shuffle batching."""
+    k = n // batch_size
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(k * batch_size)
+    return order.reshape(k, batch_size)

@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body in Python -- correct
+but slow, so the wrappers fall back to the jnp reference for *large* CPU
+inputs while tests pin ``force="pallas"`` to exercise the kernel path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bid_top2 import bid_top2_pallas
+from repro.kernels.cdist import cdist_pallas
+from repro.kernels.ref import bid_top2_ref, cdist_ref
+
+_CPU_INTERPRET_BUDGET = 1 << 22  # elements; above this CPU uses the ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def cdist(x: jnp.ndarray, c: jnp.ndarray, *, force: str | None = None,
+          **block_kw) -> jnp.ndarray:
+    """Squared-distance cost matrix; kernel on TPU, ref fallback on big-CPU."""
+    if force == "ref":
+        return cdist_ref(x, c)
+    if force == "pallas" or _backend() == "tpu":
+        return cdist_pallas(x, c, interpret=_backend() != "tpu", **block_kw)
+    if x.shape[0] * c.shape[0] <= _CPU_INTERPRET_BUDGET:
+        return cdist_pallas(x, c, interpret=True, **block_kw)
+    return cdist_ref(x, c)
+
+
+def bid_top2(x: jnp.ndarray, c: jnp.ndarray, prices: jnp.ndarray, *,
+             force: str | None = None, **block_kw):
+    """Fused auction bidding reduction (v1, j1, v2 per row)."""
+    if force == "ref":
+        return bid_top2_ref(x, c, prices)
+    if force == "pallas" or _backend() == "tpu":
+        return bid_top2_pallas(x, c, prices, interpret=_backend() != "tpu",
+                               **block_kw)
+    if x.shape[0] * c.shape[0] <= _CPU_INTERPRET_BUDGET:
+        return bid_top2_pallas(x, c, prices, interpret=True, **block_kw)
+    return bid_top2_ref(x, c, prices)

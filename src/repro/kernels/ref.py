@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+@jax.jit
+def cdist_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(m, d), (n, d) -> (m, n) squared Euclidean distances."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xn = jnp.sum(x * x, axis=1)[:, None]
+    cn = jnp.sum(c * c, axis=1)[None, :]
+    return xn - 2.0 * (x @ c.T) + cn
+
+
+@jax.jit
+def bid_top2_ref(x: jnp.ndarray, c: jnp.ndarray, prices: jnp.ndarray):
+    """Reference for the fused bidding kernel (row constant dropped)."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    vals = -2.0 * (x @ c.T) + jnp.sum(c * c, axis=1)[None, :] - prices[None, :]
+    j1 = jnp.argmax(vals, axis=1).astype(jnp.int32)
+    v1 = jnp.take_along_axis(vals, j1[:, None], axis=1)[:, 0]
+    masked = vals.at[jnp.arange(vals.shape[0]), j1].set(_NEG)
+    v2 = jnp.max(masked, axis=1)
+    return v1, j1, v2
+
+
+@jax.jit
+def ssm_scan_ref(dt, b_in, c_out, x_in, a_mat):
+    """Reference selective scan: dt/x (B, S, di), b/c (B, S, ds), a (di, ds).
+    Returns (y (B, S, di), h_final (B, di, ds))."""
+    bsz, _seq, di = dt.shape
+    ds = a_mat.shape[1]
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        da = jnp.exp(dt_t[:, :, None] * a_mat[None])
+        h = h * da + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        return h, jnp.sum(h * c_t[:, None, :], axis=-1)
+
+    xs = tuple(t.transpose(1, 0, 2).astype(jnp.float32)
+               for t in (dt, b_in, c_out, x_in))
+    h, ys = jax.lax.scan(step, jnp.zeros((bsz, di, ds), jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init.  (Override for quick local tests via DRYRUN_DEVICES.)
+if os.environ.get("DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+on placeholder devices, record memory/cost/collective analysis for the
+roofline (EXPERIMENTS.md S`Dry-run / S`Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Results are appended incrementally to the JSON cache so a crash loses at most
+one cell and re-runs skip completed cells.
+"""
+
+import argparse
+import gc
+import gzip
+import json
+import os.path
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import hlo_cost
+from repro.launch import inputs as I
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.registry import ARCHS, get_config
+from repro.sharding.specs import to_pspec
+from repro.train.optimizer import OptConfig, opt_abstract
+from repro.train.train_step import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+
+# --- TPU v5e-class hardware model (per chip) --------------------------------
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (result-shape sizes)."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def _active_params(cfg, abstract) -> tuple[int, int]:
+    """(total, active) param counts; active discounts unrouted experts."""
+    flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    total = sum(l.size for _, l in flat)
+    expert = sum(l.size for p, l in flat
+                 if "mlp" in str(p) and l.ndim == 4)
+    if cfg.moe and expert:
+        frac = cfg.moe.top_k / cfg.moe.n_experts
+        active = total - expert + int(expert * frac)
+    else:
+        active = total
+    embed = cfg.vocab_size * cfg.d_model
+    return total, active - embed  # embedding gather is not matmul FLOPs
+
+
+def model_flops(cfg, cell, abstract) -> float:
+    total, active = _active_params(cfg, abstract)
+    if cfg.tie_embeddings:
+        active += cfg.vocab_size * cfg.d_model  # unembed matmul reuses table
+    tokens = cell.batch * (cell.seq if cell.kind in ("train", "prefill") else 1)
+    mult = 6 if cell.kind == "train" else 2
+    flops = mult * active * tokens
+    # attention score/AV term (only what's actually attended)
+    att_layers = sum(1 for s in cfg.pattern if s.mixer in ("attn", "mla"))
+    att_layers = att_layers * cfg.n_blocks
+    hd = cfg.head_dim if cfg.mla is None else (
+        cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim + cfg.mla.v_dim)
+    if cell.kind == "train":
+        flops += (mult / 2) * 2 * 2 * att_layers * cfg.n_heads * hd \
+            * cell.batch * cell.seq ** 2 * 0.5
+    elif cell.kind == "prefill":
+        flops += 2 * 2 * att_layers * cfg.n_heads * hd * cell.batch \
+            * cell.seq ** 2 * 0.5
+    else:  # decode: one query against the cache
+        flops += 2 * 2 * att_layers * cfg.n_heads * hd * cell.batch * cell.seq
+    return flops
+
+
+def _fix_batch(mesh, sharding_tree, batch):
+    """Replicate the batch dim when it doesn't divide the dp shard count."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if batch % dp == 0:
+        return sharding_tree
+    dp_vals = {("pod", "data"), ("data",), "data", ("pod",)}
+
+    def fix(ns):
+        entries = tuple(None if (e in dp_vals or e == ("pod", "data")) else e
+                        for e in ns.spec)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(fix, sharding_tree,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
+# --- ABA data-pipeline cell: the paper's technique on the production mesh ---
+ABA_CELLS = {
+    # imagenet8-scale mini-batch generation: 1M objects, D=192, K=8192
+    # anticlusters (batch size 128).  Auction modeled at 320 Jacobi
+    # rounds/phase (fixed_rounds -> known trip counts for the profiler;
+    # 320 measured sufficient for valid permutations at 512 columns).
+    "aba_1m": dict(n=1 << 20, d=192, k=8192, rounds=320),
+}
+
+
+def lower_aba_cell(shape_name: str, *, multi_pod: bool):
+    from repro.core.assignment import AuctionConfig
+    from repro.core.sharded import sharded_aba
+    spec = ABA_CELLS[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    acfg = AuctionConfig(fixed_rounds=spec["rounds"])
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def fn(x):
+        return sharded_aba(x, spec["k"], mesh, data_axes=("pod", "data"),
+                           auction_config=acfg)
+
+    x_sh = NamedSharding(mesh, P(dp_axes, None))
+    out_sh = NamedSharding(mesh, P(dp_axes))
+    jitted = jax.jit(fn, in_shardings=(x_sh,), out_shardings=out_sh)
+    args = (jax.ShapeDtypeStruct((spec["n"], spec["d"]), jnp.float32),)
+    return mesh, jitted, args, spec
+
+
+def aba_model_flops(spec, mesh) -> float:
+    shards = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            shards *= mesh.shape[a]
+    k_local = spec["k"] // shards
+    return 2.0 * spec["n"] * k_local * spec["d"]
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               overrides: dict | None = None):
+    """Build (jitted, abstract_args) for one cell."""
+    cfg = get_config(arch, **(overrides or {}))
+    cell = I.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    an = mesh.axis_names
+
+    def nsh(*tags):
+        return NamedSharding(mesh, to_pspec(tags, an))
+
+    p_sh = I.param_shardings(cfg, mesh)
+    p_abs = T.abstract_params(cfg)
+    scalar = NamedSharding(mesh, P())
+
+    if cell.kind == "train":
+        step = make_train_step(cfg, mesh, OptConfig(), microbatches=1)
+        o_sh = {"m": p_sh, "v": p_sh, "step": scalar}
+        b_abs = I.batch_specs(cfg, cell)
+        b_sh = _fix_batch(mesh, I.batch_shardings(cfg, cell, mesh), cell.batch)
+        metric_sh = {"loss": scalar, "lr": scalar, "grad_norm": scalar}
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, metric_sh),
+                         donate_argnums=(0, 1))
+        args = (p_abs, opt_abstract(p_abs), b_abs)
+    elif cell.kind == "decode":
+        step = make_serve_step(cfg, mesh)
+        c_abs = I.abstract_cache(cfg, cell)
+        c_sh = _fix_batch(mesh, I.cache_shardings(cfg, cell, mesh), cell.batch)
+        tok = jax.ShapeDtypeStruct((cell.batch, 1), jnp.int32)
+        tok_sh = _fix_batch(mesh, {"t": nsh("dp", None)}, cell.batch)["t"]
+        logit_sh = _fix_batch(
+            mesh, {"l": nsh("dp", None, "tp")}, cell.batch)["l"]
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, scalar, tok_sh),
+                         out_shardings=(tok_sh, logit_sh, c_sh),
+                         donate_argnums=(1,))
+        args = (p_abs, c_abs, jax.ShapeDtypeStruct((), jnp.int32), tok)
+    elif cell.kind == "prefill":
+        step = make_prefill_step(cfg, mesh, cell.seq)
+        b_abs = I.batch_specs(cfg, cell)
+        b_sh = _fix_batch(mesh, I.batch_shardings(cfg, cell, mesh), cell.batch)
+        c_sh = _fix_batch(mesh, I.cache_shardings(cfg, cell, mesh), cell.batch)
+        logit_sh = _fix_batch(
+            mesh, {"l": nsh("dp", None, "tp")}, cell.batch)["l"]
+        extra = b_abs.get("extra_embeds")
+        frames = b_abs.get("enc_frames")
+        jitted = jax.jit(
+            lambda p, t, e, f: step(p, t, e, f),
+            in_shardings=(p_sh, b_sh["tokens"],
+                          b_sh.get("extra_embeds"), b_sh.get("enc_frames")),
+            out_shardings=((logit_sh, c_sh)))
+        args = (p_abs, b_abs["tokens"], extra, frames)
+    else:
+        raise ValueError(cell.kind)
+    return cfg, cell, mesh, jitted, args
+
+
+def _save_hlo(arch, shape, mesh_name, text):
+    os.makedirs("hlo_cache", exist_ok=True)
+    path = f"hlo_cache/{arch}_{shape}_{mesh_name}.hlo.gz"
+    with gzip.open(path, "wt") as f:
+        f.write(text)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             keep_text: bool = False, save_hlo: bool = False,
+             overrides: dict | None = None) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "devices": 512 if multi_pod else 256}
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    if arch != "aba-pipeline":
+        cfg = get_config(arch)
+        ok, why = I.cell_applicable(cfg, shape_name)
+        if not ok:
+            rec.update(status="skipped", reason=why)
+            return rec
+    try:
+        chips = rec["devices"]
+        if arch == "aba-pipeline":
+            mesh, jitted, args, spec = lower_aba_cell(
+                shape_name, multi_pod=multi_pod)
+            cfg, cell = None, None
+        else:
+            cfg, cell, mesh, jitted, args = lower_cell(
+                arch, shape_name, multi_pod=multi_pod, overrides=overrides)
+        t0 = time.time()
+        with mesh:
+            lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        text = compiled.as_text()
+        # trip-aware re-analysis (XLA's cost_analysis counts loop bodies once)
+        hc = hlo_cost.analyze(text)
+        coll = hc["collectives"]
+        flops = float(hc["flops"])
+        bytes_acc = float(hc["bytes"])
+        coll_total = float(hc["collective_bytes"])
+        if arch == "aba-pipeline":
+            mf = aba_model_flops(spec, mesh)
+        else:
+            mf = model_flops(cfg, cell, args[0])
+        terms = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / LINK_BW,
+        }
+        dominant = max(terms, key=terms.get)
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            flops_per_device=flops, bytes_per_device=bytes_acc,
+            xla_flops_per_device=float(cost.get("flops", 0.0)),
+            unknown_trip_whiles=hc["unknown_trip_whiles"],
+            collective_bytes_per_device=coll,
+            memory=dict(
+                argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+                output_bytes=getattr(mem, "output_size_in_bytes", None),
+                temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+                alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+                code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+            ),
+            terms=terms, dominant=dominant,
+            model_flops_total=mf,
+            hlo_flops_total=flops * chips,
+            useful_flops_ratio=(mf / (flops * chips)) if flops else None,
+        )
+        if keep_text:
+            rec["hlo_kib"] = len(text) // 1024
+        if save_hlo:
+            _save_hlo(arch, shape_name, rec["mesh"], text)
+        del compiled, lowered, jitted, text
+        gc.collect()
+    except Exception as e:  # record and continue -- these ARE the bugs
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    return rec
+
+
+def all_cells(multi_pod_levels=(False, True)):
+    for arch in ARCHS:
+        for shape in I.SHAPES:
+            for mp in multi_pod_levels:
+                yield arch, shape, mp
+    for shape in ABA_CELLS:
+        for mp in multi_pod_levels:
+            yield "aba-pipeline", shape, mp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute metrics from hlo_cache without compiling")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        results = json.load(open(args.out))
+        for rec in results:
+            if rec.get("status") != "ok":
+                continue
+            path = (f"hlo_cache/{rec['arch']}_{rec['shape']}_"
+                    f"{rec['mesh']}.hlo.gz")
+            if not os.path.exists(path):
+                continue
+            text = gzip.open(path, "rt").read()
+            hc = hlo_cost.analyze(text)
+            flops, bytes_acc = float(hc["flops"]), float(hc["bytes"])
+            coll_total = float(hc["collective_bytes"])
+            rec["flops_per_device"] = flops
+            rec["bytes_per_device"] = bytes_acc
+            rec["collective_bytes_per_device"] = hc["collectives"]
+            rec["terms"] = {
+                "compute_s": flops / PEAK_FLOPS,
+                "memory_s": bytes_acc / HBM_BW,
+                "collective_s": coll_total / LINK_BW,
+            }
+            rec["dominant"] = max(rec["terms"], key=rec["terms"].get)
+            if rec.get("model_flops_total") and flops:
+                rec["hlo_flops_total"] = flops * rec["devices"]
+                rec["useful_flops_ratio"] = (rec["model_flops_total"]
+                                             / (flops * rec["devices"]))
+            print(f"[reanalyzed] {rec['arch']} {rec['shape']} {rec['mesh']}"
+                  f" dom={rec['dominant']}", flush=True)
+        with open(args.out + ".tmp", "w") as f:
+            json.dump(results, f, indent=1)
+        os.replace(args.out + ".tmp", args.out)
+        return
+
+    try:
+        done = {(r["arch"], r["shape"], r["mesh"])
+                for r in json.load(open(args.out))}
+        results = json.load(open(args.out))
+    except Exception:
+        done, results = set(), []
+
+    if args.all:
+        cells = list(all_cells((False, True) if args.both_meshes
+                               else (args.multi_pod,)))
+    else:
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if (arch, shape, mesh_name) in done:
+            print(f"[skip-cached] {arch} {shape} {mesh_name}", flush=True)
+            continue
+        print(f"[run] {arch} {shape} {mesh_name}", flush=True)
+        rec = run_cell(arch, shape, multi_pod=mp, save_hlo=args.save_hlo)
+        line = {k: rec.get(k) for k in
+                ("status", "lower_s", "compile_s", "dominant", "error")}
+        print(f"  -> {line}", flush=True)
+        results.append(rec)
+        with open(args.out + ".tmp", "w") as f:
+            json.dump(results, f, indent=1)
+        os.replace(args.out + ".tmp", args.out)
+
+
+if __name__ == "__main__":
+    main()

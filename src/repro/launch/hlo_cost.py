@@ -1,0 +1,268 @@
+"""Trip-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified on this
+jax/XLA build), which under-counts scanned transformer stacks by ~n_blocks
+and scanned attention by the chunk counts.  This module re-derives
+FLOPs / HBM bytes / collective bytes from ``compiled.as_text()`` with loop
+multipliers taken from XLA's ``known_trip_count`` backend config.
+
+Methodology (documented in EXPERIMENTS.md):
+- FLOPs: 2*M*N*K for every ``dot`` (including dots inside fusions);
+  convolutions as 2 * out_elems * kernel_elems; elementwise ops ignored
+  (matmuls dominate every assigned arch).
+- HBM bytes: operands + results of *top-level* (post-fusion) ops; fusion
+  internals are registers/VMEM.  dynamic-update-slice counts the updated
+  slice, not the full buffer.  parameter/tuple/gte/bitcast/reshape are free.
+- Collectives: result bytes of all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute, times enclosing trip counts.
+- while bodies and conditions multiply by known_trip_count (default 1 +
+  ``unknown_trips`` flag when absent); conditionals take the max branch.
+
+Everything is per-device: the module text is the SPMD-partitioned program.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+# tuple types may contain /*index=N*/ comments -- allow anything but parens
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR = re.compile(
+    r"(?:body|to_apply|calls)=\{?%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(
+    r"(?:true_computation|false_computation|branch_computations=\{[^}]*)"
+    r"=?%?([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start")
+
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "reshape", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "custom-call", "get-dimension-size"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            stripped = line.strip()
+            m = _COMP_HDR.match(stripped)
+            if m and line.rstrip().endswith("{") and "->" in stripped:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    dims = _shape_dims(op.type_str) or []
+    for d in dims:
+        out_elems *= d
+    # contracted size from lhs operand shape
+    cm = _CONTRACT.search(op.rest)
+    k = 1
+    if cm:
+        lhs_name = op.rest.split("%", 1)
+        first_operand = re.match(r"\s*%?([\w\.\-]+)", op.rest)
+        if first_operand:
+            lhs = comp.by_name.get(first_operand.group(1))
+            if lhs is not None:
+                ldims = _shape_dims(lhs.type_str) or []
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        k *= ldims[int(ci)]
+        del lhs_name
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    for d in (_shape_dims(op.type_str) or []):
+        out_elems *= d
+    first_two = re.findall(r"%?([\w\.\-]+)", op.rest)[:2]
+    k = 1
+    if len(first_two) == 2:
+        rhs = comp.by_name.get(first_two[1])
+        if rhs is not None:
+            for d in (_shape_dims(rhs.type_str) or []):
+                k *= d
+    return 2.0 * out_elems * k
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        if self.entry is None or self.entry not in self.comps:
+            cands = [n for n in self.comps if "main" in n]
+            self.entry = cands[0] if cands else max(
+                self.comps, key=lambda n: len(self.comps[n].ops))
+        self._memo: dict[str, dict] = {}
+        self.unknown_trips = 0
+
+    def _operand_bytes(self, op: Op, comp: Computation) -> int:
+        total = 0
+        for name in re.findall(r"%([\w\.\-]+)", op.rest.split(")", 1)[0]):
+            ref = comp.by_name.get(name)
+            if ref is not None:
+                total += _shape_bytes(ref.type_str)
+        return total
+
+    def comp_cost(self, name: str) -> dict:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        out = {"flops": 0.0, "bytes": 0.0, "coll": {}, "transcendentals": 0.0}
+        self._memo[name] = out
+        if comp is None:
+            return out
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    self.unknown_trips += 1
+                cm = _CALL_ATTR.search(op.rest)
+                cond = _COND_ATTR.search(op.rest)
+                for sub, mult in ((cm, trips), (cond, trips + 1)):
+                    if sub:
+                        c = self.comp_cost(sub.group(1))
+                        out["flops"] += mult * c["flops"]
+                        out["bytes"] += mult * c["bytes"]
+                        for k, v in c["coll"].items():
+                            out["coll"][k] = out["coll"].get(k, 0) + mult * v
+                continue
+            if kind == "conditional":
+                subs = _BRANCHES.findall(op.rest)
+                if subs:
+                    costs = [self.comp_cost(s) for s in subs]
+                    best = max(costs, key=lambda c: c["flops"] + c["bytes"])
+                    out["flops"] += best["flops"]
+                    out["bytes"] += best["bytes"]
+                    for k, v in best["coll"].items():
+                        out["coll"][k] = out["coll"].get(k, 0) + v
+                continue
+            if kind in ("call", "async-start"):
+                cm = _CALL_ATTR.search(op.rest)
+                if cm:
+                    c = self.comp_cost(cm.group(1))
+                    out["flops"] += c["flops"]
+                    out["bytes"] += c["bytes"]
+                    for k, v in c["coll"].items():
+                        out["coll"][k] = out["coll"].get(k, 0) + v
+                continue
+            if kind == "fusion":
+                cm = _CALL_ATTR.search(op.rest)
+                if cm:
+                    c = self.comp_cost(cm.group(1))
+                    out["flops"] += c["flops"]  # dots inside fusions count
+                out["bytes"] += (_shape_bytes(op.type_str)
+                                 + self._operand_bytes(op, comp))
+                continue
+            if kind == "dot":
+                out["flops"] += _dot_flops(op, comp)
+                out["bytes"] += (_shape_bytes(op.type_str)
+                                 + self._operand_bytes(op, comp))
+                continue
+            if kind == "convolution":
+                out["flops"] += _conv_flops(op, comp)
+                out["bytes"] += (_shape_bytes(op.type_str)
+                                 + self._operand_bytes(op, comp))
+                continue
+            if kind in COLLECTIVES:
+                b = _shape_bytes(op.type_str)
+                key = kind.replace("-start", "")
+                out["coll"][key] = out["coll"].get(key, 0) + b
+                out["bytes"] += b + self._operand_bytes(op, comp)
+                continue
+            if kind == "dynamic-update-slice":
+                names = re.findall(r"%([\w\.\-]+)", op.rest)
+                upd = comp.by_name.get(names[1]) if len(names) > 1 else None
+                b = _shape_bytes(upd.type_str) if upd else 0
+                out["bytes"] += 2 * b
+                continue
+            if kind in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced/gathered elements, not the operand
+                # (a scan step slicing its xs must not be charged the whole
+                # sequence -- that error inflated SSM traffic by ~30x)
+                out["bytes"] += 2 * _shape_bytes(op.type_str)
+                continue
+            if kind in _FREE_OPS or kind.endswith("-done"):
+                continue
+            # generic materializing op (copy, gather, scatter, slice, ...)
+            out["bytes"] += (_shape_bytes(op.type_str)
+                             + self._operand_bytes(op, comp))
+        return out
+
+    def total(self) -> dict:
+        c = self.comp_cost(self.entry)
+        return {"flops": c["flops"], "bytes": c["bytes"],
+                "collectives": dict(c["coll"]),
+                "collective_bytes": float(sum(c["coll"].values())),
+                "unknown_trip_whiles": self.unknown_trips}
+
+
+def analyze(text: str) -> dict:
+    return HloCost(text).total()

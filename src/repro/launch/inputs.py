@@ -1,0 +1,101 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+No device allocation happens here -- everything is abstract, exactly what
+``jax.jit(...).lower()`` needs.  The modality frontends are stubs per the
+assignment: [vlm] gets precomputed patch embeddings, [audio] gets precomputed
+frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models import transformer as T
+from repro.sharding.specs import to_pspec
+
+
+class ShapeCell(NamedTuple):
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode", 32768, 128),
+    "long_500k": ShapeCell("decode", 524288, 1),
+}
+
+# long_500k needs a sub-quadratic path: run only for SSM/hybrid (DESIGN.md
+# notes the skip rationale for the full-attention archs).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+VLM_PATCHES = 256  # stub patch-embedding prefix length for [vlm] train/prefill
+
+
+def cell_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, ("full-attention arch: no sub-quadratic path at 500k "
+                       "(see DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg, cell: ShapeCell) -> dict:
+    """Abstract training/serving batch for one cell."""
+    b, s = cell.batch, cell.seq
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if cell.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32)
+    if cfg.mrope_sections:
+        out["positions"] = _sds((b, s, 3), jnp.int32)
+    if cfg.frontend == "vision" and cell.kind in ("train", "prefill"):
+        out["extra_embeds"] = _sds((b, VLM_PATCHES, cfg.d_model),
+                                   jnp.dtype(cfg.compute_dtype))
+    if cfg.enc_layers and cell.kind in ("train", "prefill"):
+        out["enc_frames"] = _sds((b, cfg.enc_ctx, cfg.d_model),
+                                 jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def batch_shardings(cfg, cell: ShapeCell, mesh: Mesh) -> dict:
+    an = mesh.axis_names
+
+    def sh(*tags):
+        return NamedSharding(mesh, to_pspec(tags, an))
+
+    out = {"tokens": sh("dp", None)}
+    if cell.kind == "train":
+        out["labels"] = sh("dp", None)
+    if cfg.mrope_sections:
+        out["positions"] = sh("dp", None, None)
+    if cfg.frontend == "vision" and cell.kind in ("train", "prefill"):
+        out["extra_embeds"] = sh("dp", None, None)
+    if cfg.enc_layers and cell.kind in ("train", "prefill"):
+        out["enc_frames"] = sh("dp", None, None)
+    return out
+
+
+def param_shardings(cfg, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        T.param_pspecs(cfg, mesh.axis_names))
+
+
+def cache_shardings(cfg, cell: ShapeCell, mesh: Mesh):
+    enc_len = cfg.enc_ctx if cfg.enc_layers else 0
+    specs = T.cache_pspecs(cfg, cell.batch, cell.seq, mesh.axis_names,
+                           enc_len=enc_len)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def abstract_cache(cfg, cell: ShapeCell):
+    enc_len = cfg.enc_ctx if cfg.enc_layers else 0
+    return T.abstract_cache(cfg, cell.batch, cell.seq, enc_len=enc_len)

@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (jax locks the device count on first init, and smoke tests
+must see 1 CPU device while the dry-run forces 512 placeholders).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(dp: int = 1, tp: int = 1):
+    """Small mesh over the locally available devices (tests / CPU runs)."""
+    n = dp * tp
+    devs = jax.devices()[:n]
+    assert len(devs) == n, f"need {n} devices, have {len(jax.devices())}"
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devs).reshape(dp, tp), ("data", "model"))

@@ -1,0 +1,355 @@
+"""Shared neural building blocks: norms, RoPE/M-RoPE, blockwise (flash)
+attention, GQA attention, gated MLP.
+
+Parameters are plain dict pytrees.  Each module exposes ``<name>_defs(cfg)``
+returning ``{name: PD(shape, logical_axes, fan_in)}`` and an ``apply``
+function; the stack (`transformer.py`) stacks the defs per block pattern and
+derives init / abstract shapes / PartitionSpecs from the same metadata.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+class PD(NamedTuple):
+    """Parameter definition: shape + logical sharding tags + init fan-in."""
+    shape: tuple
+    axes: tuple       # logical tags per dim: 'fsdp' | 'tp' | 'sp' | None
+    fan_in: int = 0   # 0 -> zeros/ones init decided by name ('norm'/'bias')
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_apply(cfg, w, x, b=None):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * w
+        if b is not None:
+            out = out + b
+    else:  # rmsnorm (gemma-style 1+w so zero-init == identity)
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * (1.0 + w)
+    return out.astype(x.dtype)
+
+
+def norm_defs(cfg, name="norm"):
+    d = {name: PD((cfg.d_model,), (None,))}
+    if cfg.norm == "layernorm":
+        d[name + "_b"] = PD((cfg.d_model,), (None,))
+    return d
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg, head_dim: int):
+    half = head_dim // 2
+    return cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / head_dim)
+
+
+def apply_rope(cfg, x, positions, head_dim=None):
+    """x: (B, S, H, hd); positions: (B, S) or (B, S, 3) for M-RoPE."""
+    hd = head_dim or x.shape[-1]
+    half = hd // 2
+    inv = rope_freqs(cfg, hd)  # (half,)
+    if cfg.mrope_sections and positions.ndim == 3:
+        # frequency i belongs to section stream_id[i] (temporal / h / w)
+        sections = cfg.mrope_sections
+        stream = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(stream[None, None, :],
+                             positions.shape[:2] + (half,)).astype(jnp.int32),
+            axis=2)  # (B, S, half)
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        pos = positions.astype(jnp.float32)[:, :, None]  # (B, S, 1)
+    ang = pos * inv[None, None, :]            # (B, S, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:hd]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if hd < x.shape[-1]:
+        rot = jnp.concatenate([rot, x[..., hd:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise ("flash") attention in pure JAX
+# ---------------------------------------------------------------------------
+
+def _softcap(s, cap):
+    return cap * jnp.tanh(s / cap) if cap else s
+
+
+def _flash_shard(qc, kc, vc, mesh):
+    """Constrain the chunked attention tensors so the S^2 einsums stay
+    TP-sharded (GSPMD loses the fused-weight sharding at the head reshape
+    and otherwise replicates attention -- measured 13x flop blowup).
+
+    Preference: shard the KV-head dim when it divides the axis (no k/v
+    gather); otherwise shard q rows within each chunk and replicate k/v
+    (GQA k/v chunks are small)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return qc, kc, vc
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tp = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+    b = qc.shape[1]
+    bs = dp_axes if (b % dp_total == 0) else None
+
+    def c(t, spec):
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    kv, cq = qc.shape[3], qc.shape[2]
+    if kv % tp == 0:
+        qc = c(qc, P(None, bs, None, "model", None, None))
+        kc = c(kc, P(None, bs, None, "model", None))
+        vc = c(vc, P(None, bs, None, "model", None))
+    elif cq % tp == 0:
+        qc = c(qc, P(None, bs, "model", None, None, None))
+        kc = c(kc, P(None, bs, None, None, None))
+        vc = c(vc, P(None, bs, None, None, None))
+    return qc, kc, vc
+
+
+def _flash_out_anchor(out, mesh, kv, cq):
+    """Anchor the per-q-chunk output sharding so GSPMD doesn't bounce the
+    inner einsums between q-row sharding and a propagated partial-KV
+    sharding (S`Perf B5: the 'involuntary full rematerialization' copies
+    were full qc replications -- the dominant collective cost on qwen)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return out
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tp = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+    bs = dp_axes if (out.shape[0] % dp_total == 0) else None
+    if kv % tp == 0:
+        spec = P(bs, None, "model", None, None)
+    elif cq % tp == 0:
+        spec = P(bs, "model", None, None, None)
+    else:
+        return out
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, spec))
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, chunk_q=512, chunk_kv=1024, q_offset=0,
+                    mesh=None):
+    """Online-softmax attention with O(chunk^2) live scores.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H % KV == 0 (GQA).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    Exact (same math as full softmax); used for train/prefill where the full
+    score matrix would not fit.  Decode (Sq == 1) uses `attend_one` instead.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]  # may differ from hd (MLA expanded form)
+    g = h // kv
+    scale = scale or (1.0 / math.sqrt(hd))
+    cq, ck = min(chunk_q, sq), min(chunk_kv, skv)
+    nq, nk = -(-sq // cq), -(-skv // ck)
+
+    qp = jnp.pad(q, ((0, 0), (0, nq * cq - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * ck - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * ck - skv), (0, 0), (0, 0)))
+    # (nq, B, cq, KV, G, hd)
+    qc = qp.reshape(b, nq, cq, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(b, nk, ck, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, ck, kv, vd).transpose(1, 0, 2, 3, 4)
+    qc, kc, vc = _flash_shard(qc, kc, vc, mesh)
+    kpos = (jnp.arange(nk * ck) + 0).reshape(nk, ck)
+
+    def q_block(qi, qt):
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        @jax.checkpoint
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kt, vt, kpos_t = inp
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qt, kt,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos_t[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos_t[None, :] > qpos[:, None] - window
+            mask &= (kpos_t < skv + 0)[None, :]
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vt.dtype), vt,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, cq, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (kc, vc, kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4)  # (B, cq, KV, G, vd)
+        return qi + 1, _flash_out_anchor(out, mesh, kv, cq)
+
+    _, outs = jax.lax.scan(q_block, 0, qc)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, vd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attend_one(q, k, v, *, softcap=0.0, scale=None, kv_len=None, window=0):
+    """Single-token decode attention; k/v are the full cache (B, S, KV, hd).
+
+    ``kv_len``: number of valid cache entries (scalar or (B,)); the rest is
+    masked.  ``window``: sliding-window size (gemma2 local layers) -- only
+    the last ``window`` cache entries are attended.  Memory is O(B*H*S)
+    scores -- fine sharded; with the cache seq dim sharded over 'model' this
+    is GSPMD flash-decode.
+    """
+    b, sq, h, hd = q.shape
+    assert sq == 1
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale or (1.0 / math.sqrt(hd))
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    if kv_len is not None:
+        pos = jnp.arange(k.shape[1])
+        lens = (kv_len if jnp.ndim(kv_len) else jnp.full((b,), kv_len))
+        valid = pos[None] < lens[:, None]
+        if window:
+            # q sits at position lens-1: training mask is kpos > qpos - window
+            valid = jnp.logical_and(
+                valid, pos[None] > lens[:, None] - 1 - window)
+        s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg):
+    """QKV/O weights in FUSED (H*hd) layout (Megatron convention).
+
+    Head counts like 40/15/28/24 don't divide the 16-way 'model' axis, but
+    H*hd does for every assigned arch -- and jit in_shardings requires even
+    division.  The per-head view is recovered by reshape inside attn_apply;
+    GSPMD propagates internal shardings (uneven is fine internally).
+    """
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": PD((d, h * hd), ("fsdp", "tp"), d),
+        "wk": PD((d, kv * hd), ("fsdp", "tp"), d),
+        "wv": PD((d, kv * hd), ("fsdp", "tp"), d),
+        "wo": PD((h * hd, d), ("tp", "fsdp"), h * hd),
+    }
+    if cfg.qkv_bias:
+        defs |= {
+            "bq": PD((h * hd,), ("tp",)),
+            "bk": PD((kv * hd,), ("tp",)),
+            "bv": PD((kv * hd,), ("tp",)),
+        }
+    return defs
+
+
+def attn_apply(cfg, p, x, positions, *, spec, cache=None, kv_len=None,
+               kv_override=None, mesh=None):
+    """x: (B, S, D).  cache: (k, v) each (B, S_cache, KV, hd) for decode.
+
+    kv_override: (k, v) from the encoder for cross-attention.
+    Returns (out, new_cache_entry or None).
+    """
+    b, s, _ = x.shape
+    cd = x.dtype
+    h_n, kv_n, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+    q = q.reshape(b, s, h_n, hd)
+    if kv_override is None:
+        k = (x @ p["wk"].astype(cd))
+        v = (x @ p["wv"].astype(cd))
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(cd)
+            v = v + p["bv"].astype(cd)
+        k = k.reshape(b, s, kv_n, hd)
+        v = v.reshape(b, s, kv_n, hd)
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+    else:
+        k, v = kv_override
+    causal = kv_override is None and not spec_is_encoder(spec)
+
+    if cache is not None and kv_override is None:
+        ck, cv = cache
+        idx = kv_len if jnp.ndim(kv_len) == 0 else kv_len[0]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), idx, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), idx, 1)
+        out = attend_one(q, ck, cv, softcap=cfg.attn_softcap,
+                         kv_len=kv_len + s, window=spec.sliding_window)
+        new_cache = (ck, cv)
+    else:
+        if s == 1 and kv_override is not None:
+            out = attend_one(q, k, v, softcap=cfg.attn_softcap)
+        else:
+            out = flash_attention(
+                q, k, v, causal=causal, window=spec.sliding_window,
+                softcap=cfg.attn_softcap, chunk_q=cfg.attn_chunk_q,
+                chunk_kv=cfg.attn_chunk_kv, mesh=mesh)
+        new_cache = None
+    y = out.reshape(b, s, h_n * hd) @ p["wo"].astype(cd)
+    return y, new_cache
+
+
+def spec_is_encoder(spec) -> bool:
+    return getattr(spec, "encoder", False)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi": PD((d, f), ("fsdp", "tp"), d),
+        "wg": PD((d, f), ("fsdp", "tp"), d),
+        "wo": PD((f, d), ("tp", "fsdp"), f),
+    }
+
+
+def mlp_apply(cfg, p, x):
+    cd = x.dtype
+    act = jax.nn.silu if cfg.mlp_act == "silu" else (
+        lambda t: jax.nn.gelu(t, approximate=True))
+    h = act(x @ p["wg"].astype(cd)) * (x @ p["wi"].astype(cd))
+    return h @ p["wo"].astype(cd)

@@ -1,0 +1,136 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b; jamba's SSM layers).
+
+Training/prefill runs the selective scan sequentially over time with
+``lax.scan`` (fp32 carry); the per-step state is (B, d_inner, d_state) --
+tiny -- and all wide activations are TP-sharded on d_inner, so the scan is
+memory-light.  Decode keeps (conv window, ssm state) and is O(1) per token:
+this is what makes the long_500k cell feasible for the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PD
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    s = cfg.ssm
+    dtr = cfg.dt_rank
+    return {
+        "in_proj": PD((d, 2 * di), ("fsdp", "tp"), d),
+        "conv_w": PD((s.d_conv, di), (None, "tp"), s.d_conv),
+        "conv_b": PD((di,), ("tp",)),
+        "x_proj": PD((di, dtr + 2 * s.d_state), ("tp", None), di),
+        "dt_w": PD((dtr, di), (None, "tp"), dtr),
+        "dt_b": PD((di,), ("tp",)),
+        "a_log": PD((di, s.d_state), ("tp", None)),
+        "d_skip": PD((di,), ("tp",)),
+        "out_proj": PD((di, d), ("tp", "fsdp"), di),
+    }
+
+
+def _split_xproj(cfg, xdbc):
+    dtr, ds = cfg.dt_rank, cfg.ssm.d_state
+    return (xdbc[..., :dtr], xdbc[..., dtr:dtr + ds], xdbc[..., dtr + ds:])
+
+
+def _ssm_inputs(cfg, p, xc):
+    """Common path after conv: returns (dt, b_in, c_out) with dt softplused."""
+    cd = xc.dtype
+    xdbc = xc @ p["x_proj"].astype(cd)
+    dt_r, b_in, c_out = _split_xproj(cfg, xdbc)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["dt_w"].astype(jnp.float32) + p["dt_b"])
+    return dt, b_in.astype(jnp.float32), c_out.astype(jnp.float32)
+
+
+def _anchor(t, mesh, spec_tags):
+    """Keep the d_inner sharding alive inside the (transposed) scan --
+    without this GSPMD replicates the backward chunk tensors (S`Perf A4)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return t
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding.specs import to_pspec
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, to_pspec(spec_tags, mesh.axis_names)))
+
+
+def mamba_apply(cfg, p, x, *, state=None, mesh=None):
+    """x: (B, S, D).  state=None -> full sequence (train/prefill); returns
+    (out, final_state).  state=(conv_buf (B, d_conv-1, di), h (B, di, ds))
+    -> single-step decode (S == 1), returns (out, new_state).
+    """
+    s = cfg.ssm
+    di = cfg.d_inner
+    cd = x.dtype
+    b, seq, _d = x.shape
+    xz = x @ p["in_proj"].astype(cd)
+    x_in, z = xz[..., :di], xz[..., di:]
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, ds)
+
+    if state is None:
+        # causal depthwise conv over the full sequence
+        xpad = jnp.pad(x_in, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        xc = sum(xpad[:, i:i + seq, :] * p["conv_w"][i].astype(cd)
+                 for i in range(s.d_conv)) + p["conv_b"].astype(cd)
+        xc = jax.nn.silu(xc)
+        dt, b_in, c_out = _ssm_inputs(cfg, p, xc)
+
+        chunk = max(int(getattr(s, "scan_chunk", 1)), 1)
+        chunk = chunk if seq % chunk == 0 else 1
+
+        def step(h, inp):
+            dt_t, b_t, c_t, x_t = inp  # each (C, B, ...)
+            ys = []
+            for t in range(chunk):  # unrolled: h stays in registers, XLA
+                da = jnp.exp(dt_t[t][:, :, None] * a_mat[None])  # fuses chunk
+                h = h * da + (dt_t[t] * x_t[t])[:, :, None] * b_t[t][:, None, :]
+                ys.append(jnp.sum(h * c_t[t][:, None, :], axis=-1))
+            h = _anchor(h, mesh, ("dp", "tp", None))
+            ys = _anchor(jnp.stack(ys), mesh, (None, "dp", "tp"))
+            return h, ys
+
+        if chunk > 1:
+            step = jax.checkpoint(step)
+
+        def to_xs(a):  # (B, S, F) -> (S/C, C, B, F)
+            a = a.transpose(1, 0, 2)
+            return a.reshape(seq // chunk, chunk, *a.shape[1:])
+
+        h0 = _anchor(jnp.zeros((b, di, s.d_state), jnp.float32), mesh,
+                     ("dp", "tp", None))
+        xs = (
+            _anchor(to_xs(dt), mesh, (None, None, "dp", "tp")),
+            _anchor(to_xs(b_in), mesh, (None, None, "dp", None)),   # (.., ds)
+            _anchor(to_xs(c_out), mesh, (None, None, "dp", None)),  # (.., ds)
+            _anchor(to_xs(x_in.astype(jnp.float32)), mesh,
+                    (None, None, "dp", "tp")),
+        )
+        h_fin, ys = jax.lax.scan(step, h0, xs)
+        y = (ys.reshape(seq, b, di).transpose(1, 0, 2)
+             + x_in.astype(jnp.float32) * p["d_skip"])
+        out = (y.astype(cd) * jax.nn.silu(z)) @ p["out_proj"].astype(cd)
+        conv_buf = xpad[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else (
+            jnp.zeros((b, 0, di), cd))
+        return out, (conv_buf.astype(cd), h_fin)
+
+    # ---- single-step decode -------------------------------------------------
+    conv_buf, h = state
+    assert seq == 1
+    window = jnp.concatenate([conv_buf, x_in.astype(conv_buf.dtype)], axis=1)
+    xc = (jnp.einsum("btd,td->bd", window.astype(cd),
+                     p["conv_w"].astype(cd)) + p["conv_b"].astype(cd))
+    xc = jax.nn.silu(xc)[:, None, :]
+    dt, b_in, c_out = _ssm_inputs(cfg, p, xc)
+    dt_t, b_t, c_t = dt[:, 0], b_in[:, 0], c_out[:, 0]
+    x_t = x_in[:, 0].astype(jnp.float32)
+    da = jnp.exp(dt_t[:, :, None] * a_mat[None])
+    h = h * da + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+    y = jnp.sum(h * c_t[:, None, :], axis=-1) + x_t * p["d_skip"]
+    out = (y[:, None, :].astype(cd) * jax.nn.silu(z)) @ p["out_proj"].astype(cd)
+    return out, (window[:, 1:, :], h)

@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (deepseek-v2).
+
+Train/prefill use the expanded form (materialize per-head K/V from the
+compressed latent); decode uses the **absorbed** form against a compressed
+cache of (c_kv, k_rope) -- (kv_lora + rope_dim) floats per token instead of
+2*H*head_dim, the memory trick that makes deepseek-v2 decode fit.  The cache
+seq dim is sharded over 'model' ('sp'), giving flash-decode partial softmax.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PD, apply_rope, flash_attention
+
+_NEG = -1e30
+
+
+def mla_defs(cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    defs = {}
+    if m.q_lora:
+        defs["wq_down"] = PD((d, m.q_lora), ("fsdp", None), d)
+        defs["q_norm"] = PD((m.q_lora,), (None,))
+        defs["wq_up"] = PD((m.q_lora, h, qk), (None, "tp", None), m.q_lora)
+    else:
+        defs["wq"] = PD((d, h, qk), ("fsdp", "tp", None), d)
+    defs |= {
+        "wkv_down": PD((d, m.kv_lora + m.qk_rope_dim), ("fsdp", None), d),
+        "kv_norm": PD((m.kv_lora,), (None,)),
+        "wkv_up": PD((m.kv_lora, h, m.qk_nope_dim + m.v_dim),
+                    (None, "tp", None), m.kv_lora),
+        "wo": PD((h, m.v_dim, d), ("tp", None, "fsdp"), h * m.v_dim),
+    }
+    return defs
+
+
+def _queries(cfg, p, x, positions):
+    m = cfg.mla
+    cd = x.dtype
+    if m.q_lora:
+        ql = x @ p["wq_down"].astype(cd)
+        qlf = ql.astype(jnp.float32)
+        ql = (qlf * jax.lax.rsqrt(
+            jnp.mean(qlf * qlf, -1, keepdims=True) + cfg.norm_eps)
+              * (1.0 + p["q_norm"])).astype(cd)
+        q = jnp.einsum("bsl,lhk->bshk", ql, p["wq_up"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(cfg, q_rope, positions)
+    return q_nope, q_rope
+
+
+def _latents(cfg, p, x, positions):
+    m = cfg.mla
+    cd = x.dtype
+    kv = x @ p["wkv_down"].astype(cd)
+    c_kv, k_rope = kv[..., :m.kv_lora], kv[..., m.kv_lora:]
+    cf = c_kv.astype(jnp.float32)
+    c_kv = (cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True)
+                               + cfg.norm_eps) * (1.0 + p["kv_norm"])).astype(cd)
+    k_rope = apply_rope(cfg, k_rope[:, :, None, :], positions)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(cfg, p, x, positions, *, cache=None, kv_len=None, mesh=None):
+    """Returns (out, new_cache or None).  cache = (c_kv, k_rope) buffers."""
+    m = cfg.mla
+    cd = x.dtype
+    h = cfg.n_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = _queries(cfg, p, x, positions)
+
+    if cache is None:
+        # expanded form (train / prefill without cache)
+        c_kv, k_rope = _latents(cfg, p, x, positions)
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv,
+                            p["wkv_up"][..., :m.qk_nope_dim].astype(cd))
+        v = jnp.einsum("bsl,lhv->bshv", c_kv,
+                       p["wkv_up"][..., m.qk_nope_dim:].astype(cd))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + (m.qk_rope_dim,))],
+            axis=-1)
+        out = flash_attention(q, k, v, causal=True, scale=scale,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_kv=cfg.attn_chunk_kv, mesh=mesh)
+        y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(cd))
+        return y, None
+
+    # absorbed decode: score/combine directly in latent space
+    ckv_buf, krope_buf = cache
+    c_new, r_new = _latents(cfg, p, x, positions)
+    idx = kv_len if jnp.ndim(kv_len) == 0 else kv_len[0]
+    ckv_buf = jax.lax.dynamic_update_slice_in_dim(
+        ckv_buf, c_new.astype(ckv_buf.dtype), idx, 1)
+    krope_buf = jax.lax.dynamic_update_slice_in_dim(
+        krope_buf, r_new.astype(krope_buf.dtype), idx, 1)
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope,
+                       p["wkv_up"][..., :m.qk_nope_dim].astype(cd))
+    s = (jnp.einsum("bqhl,bsl->bhqs", q_abs, ckv_buf.astype(cd),
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope, krope_buf.astype(cd),
+                      preferred_element_type=jnp.float32)) * scale
+    pos = jnp.arange(ckv_buf.shape[1])
+    s = jnp.where((pos < kv_len + x.shape[1])[None, None, None, :], s, _NEG)
+    probs = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", probs.astype(cd), ckv_buf.astype(cd))
+    out = jnp.einsum("bqhl,lhv->bqhv", o_lat,
+                     p["wkv_up"][..., m.qk_nope_dim:].astype(cd))
+    y = jnp.einsum("bqhv,hvd->bqd", out, p["wo"].astype(cd))
+    return y, (ckv_buf, krope_buf)

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with explicit expert parallelism over the 'model' axis.
+
+Dispatch is capacity-based and sort-free: each (token, choice) pair gets a
+rank within its expert via a one-hot cumsum, ranks >= capacity are dropped
+(standard dropping MoE), and each model-shard scatters only the slots of its
+local experts into an (E_local, C, D) VMEM-friendly buffer.  Expert outputs
+are combined with a psum over 'model'.
+
+Rationale (vs GSPMD one-hot dispatch einsums): the dense dispatch tensor is
+O(T^2 k D / E) FLOPs -- catastrophic at deepseek scale; the shard_map path
+keeps expert compute at T*k*D*F and communication at one (T, D) all-reduce.
+(A ragged all-to-all variant is the documented next hillclimb step in
+EXPERIMENTS.md SPerf.)
+
+Experts whose count does not divide the 16-way axis are padded (granite:
+40 -> 48) with -inf router logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PD
+
+
+# Experts are padded to a multiple of the PRODUCTION model-axis width so the
+# parameter shapes (and routing math) are identical on every mesh; smaller
+# meshes just hold more experts per shard.
+EP_GRANULARITY = 16
+
+
+def padded_experts(cfg) -> int:
+    e = cfg.moe.n_experts
+    return -(-e // EP_GRANULARITY) * EP_GRANULARITY
+
+
+def moe_defs(cfg):
+    d = cfg.d_model
+    m = cfg.moe
+    e_pad = padded_experts(cfg)
+    f = m.d_expert or cfg.d_ff
+    defs = {
+        "router": PD((d, e_pad), (None, None), d),
+        "wi": PD((e_pad, d, f), ("tp", None, None), d),
+        "wg": PD((e_pad, d, f), ("tp", None, None), d),
+        "wo": PD((e_pad, f, d), ("tp", None, None), f),
+    }
+    if m.n_shared:
+        # TP-only (no FSDP): must be usable as full-D local blocks inside
+        # shard_map without a manual all-gather; they are tiny.
+        fs = f * m.n_shared
+        defs |= {
+            "shared_wi": PD((d, fs), (None, "tp"), d),
+            "shared_wg": PD((d, fs), (None, "tp"), d),
+            "shared_wo": PD((fs, d), ("tp", None), fs),
+        }
+    return defs
+
+
+def _capacity(cfg, n_tokens: int, e_pad: int) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / e_pad) + 1
+    return -(-c // 8) * 8
+
+
+def moe_apply_local(cfg, p, x, *, axis: str | None):
+    """Per-shard MoE; call inside shard_map (axis='model') or alone (axis=None).
+
+    x: (B, S, D) local tokens, replicated over 'model'.
+    p['wi'/'wg'/'wo']: local expert slices (E_local, D, F) etc.
+    All sizes derive from the param shapes, so routing is identical on every
+    mesh (shapes are padded to EP_GRANULARITY at definition time).
+    """
+    b, s, d = x.shape
+    cd = x.dtype
+    m = cfg.moe
+    t = b * s
+    e_pad = p["router"].shape[1]
+    e_loc = p["wi"].shape[0]
+    xf = x.reshape(t, d)
+
+    # --- routing (replicated across the model axis) -------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if e_pad > m.n_experts:
+        pad_mask = jnp.arange(e_pad) >= m.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)          # (T, k)
+    if m.renorm:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # --- sort-free rank within expert ---------------------------------------
+    n = t * m.top_k
+    flat_e = top_e.reshape(n)
+    oh = (flat_e[:, None] == jnp.arange(e_pad)[None, :]).astype(jnp.int32)
+    ranks = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(n), flat_e]
+    cap = _capacity(cfg, t, e_pad)
+    keep = ranks < cap
+    slot = flat_e * cap + ranks                            # global slot id
+
+    # --- local dispatch buffer ----------------------------------------------
+    shard = jax.lax.axis_index(axis) if axis else 0
+    lo = shard * e_loc * cap
+    local = jnp.logical_and(keep,
+                            jnp.logical_and(slot >= lo, slot < lo + e_loc * cap))
+    lslot = jnp.where(local, slot - lo, e_loc * cap)       # sentinel = OOB
+    tok = jnp.arange(n, dtype=jnp.int32) // m.top_k
+    buf_tok = jnp.full((e_loc * cap,), t, jnp.int32).at[lslot].set(
+        tok, mode="drop")
+    x_ext = jnp.concatenate([xf, jnp.zeros((1, d), cd)])
+    h = x_ext[buf_tok].reshape(e_loc, cap, d)
+
+    # --- expert FFN (grouped matmul over local experts) ----------------------
+    act = jax.nn.silu if cfg.mlp_act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    g = act(jnp.einsum("ecd,edf->ecf", h, p["wg"].astype(cd)))
+    u = jnp.einsum("ecd,edf->ecf", h, p["wi"].astype(cd))
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["wo"].astype(cd))
+    y_flat = jnp.concatenate([y.reshape(e_loc * cap, d),
+                              jnp.zeros((1, d), cd)])
+
+    # --- combine -------------------------------------------------------------
+    picked = y_flat[jnp.minimum(lslot, e_loc * cap)]
+    picked = jnp.where(local[:, None], picked, 0.0)
+    out = (picked.reshape(t, m.top_k, d)
+           * top_p.astype(cd).reshape(t, m.top_k, 1)).sum(axis=1)
+
+    # --- shared experts (dense, TP-sharded like a normal MLP) ---------------
+    if m.n_shared:
+        gs = act(xf @ p["shared_wg"].astype(cd))
+        us = xf @ p["shared_wi"].astype(cd)
+        out = out + (gs * us) @ p["shared_wo"].astype(cd)
+
+    if axis:
+        out = jax.lax.psum(out, axis)
+    return out.reshape(b, s, d)
+
+
+def moe_ref(cfg, p, x):
+    """Single-device oracle: identical math (incl. capacity drops), no mesh."""
+    return moe_apply_local(cfg, p, x, axis=None)

@@ -1,0 +1,3 @@
+from repro.serve.generate import Generator
+
+__all__ = ["Generator"]

@@ -1,0 +1,63 @@
+"""Batched generation engine: prefill once, then jit'd decode steps.
+
+Static-batch serving (all requests share a step clock); the KV cache layout
+and shardings come from transformer.cache_defs, so the same engine lowers on
+the production mesh (decode_32k / long_500k dry-run cells) and runs reduced
+configs on CPU for the examples/tests.  Sampling: greedy or temperature.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+class Generator:
+    def __init__(self, cfg, params, *, mesh=None, max_len: int = 512):
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.max_len = max_len
+        self._decode = jax.jit(functools.partial(self._decode_impl, cfg, mesh))
+
+    @staticmethod
+    def _decode_impl(cfg, mesh, params, cache, kv_len, tokens, key, temp):
+        logits, cache = T.decode_step(cfg, params, cache, kv_len, tokens,
+                                      mesh=mesh)
+        last = logits[:, -1, :]
+        greedy = jnp.argmax(last, axis=-1)
+        sampled = jax.random.categorical(key, last / jnp.maximum(temp, 1e-6))
+        nxt = jnp.where(temp > 0, sampled, greedy).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    def generate(self, prompts: np.ndarray, n_steps: int, *,
+                 temperature: float = 0.0, seed: int = 0,
+                 enc_frames=None, extra_embeds=None,
+                 stop_token: int | None = None) -> np.ndarray:
+        """prompts: (B, S_prompt) int32.  Returns (B, n_steps) tokens."""
+        cfg = self.cfg
+        prompts = jnp.asarray(prompts)
+        b, s = prompts.shape
+        assert s + n_steps <= self.max_len, "increase max_len"
+        logits, cache = T.prefill(cfg, self.params, prompts, self.max_len,
+                                  mesh=self.mesh, enc_frames=enc_frames,
+                                  extra_embeds=extra_embeds)
+        kv_len = jnp.int32(s)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        out = [tok]
+        done = np.zeros(b, bool)
+        for i in range(n_steps - 1):
+            key, sub = jax.random.split(key)
+            tok, cache = self._decode(self.params, cache, kv_len, tok, sub,
+                                      jnp.float32(temperature))
+            kv_len = kv_len + 1
+            out.append(tok)
+            if stop_token is not None:
+                done |= np.asarray(tok[:, 0]) == stop_token
+                if done.all():
+                    break
+        return np.concatenate([np.asarray(t) for t in out], axis=1)

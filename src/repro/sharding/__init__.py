@@ -1,0 +1,4 @@
+from repro.sharding.specs import (LOGICAL, to_pspec, logical_to_sharding,
+                                  tree_pspecs)
+
+__all__ = ["LOGICAL", "to_pspec", "logical_to_sharding", "tree_pspecs"]

@@ -1,0 +1,52 @@
+"""Logical axis -> mesh axis rules (MaxText-style, reduced vocabulary).
+
+Every parameter/activation dim is tagged with a logical axis:
+
+  fsdp   ZeRO-3 weight sharding over the data-parallel axes ('pod','data')
+  tp     tensor parallel over 'model' (heads / ff / vocab / experts / d_inner)
+  dp     batch dim of activations over ('pod','data')
+  sp     long sequences (decode KV caches) over 'model' (flash-decode style)
+  None   replicated
+
+Axes missing from the mesh (e.g. 'pod' on the single-pod mesh) are dropped.
+Non-divisible dims (40 heads over 16-way 'model') rely on GSPMD uneven
+sharding; the padding waste shows up in the MODEL_FLOPS/HLO_FLOPs ratio and
+is discussed in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import jax
+
+LOGICAL = {
+    "fsdp": ("pod", "data"),
+    "dp": ("pod", "data"),
+    "tp": ("model",),
+    "sp": ("model",),
+    None: (),
+}
+
+
+def _resolve(tag, axis_names):
+    axes = tuple(a for a in LOGICAL[tag] if a in axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def to_pspec(tags: tuple, axis_names) -> P:
+    """('fsdp', 'tp') -> PartitionSpec(('pod','data'), 'model')."""
+    return P(*(_resolve(t, axis_names) for t in tags))
+
+
+def logical_to_sharding(tags: tuple, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, to_pspec(tags, mesh.axis_names))
+
+
+def tree_pspecs(tag_tree, axis_names):
+    """Map a pytree of logical-tag tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda tags: to_pspec(tags, axis_names), tag_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(t, (str, type(None))) for t in x))

@@ -1,0 +1,6 @@
+from repro.train.optimizer import (OptConfig, adamw_init, adamw_update,
+                                   lr_at, opt_abstract, opt_pspecs)
+from repro.train.train_step import make_train_step
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_at",
+           "opt_abstract", "opt_pspecs", "make_train_step"]

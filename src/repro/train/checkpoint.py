@@ -1,0 +1,96 @@
+"""Checkpoint save/restore with atomic rename, retention, and *resharding*
+restore (elastic scaling: restore onto a different mesh / dp width).
+
+Format: one .npz per checkpoint step holding flattened path->array leaves +
+a JSON manifest (step, tree paths, shapes, dtypes, rng).  Single-process
+container writes full arrays; on a real multi-host pod each process would
+save only addressable shards (jax.experimental.multihost_utils) -- the
+directory layout and manifest already carry everything needed for that
+(see launch/train.py fault-tolerance notes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path): leaf for path, leaf in flat}
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomic checkpoint write; prunes to the newest ``keep`` checkpoints."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": int(step),
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def restore(ckpt_dir: str, like_tree, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of NamedShardings -- arrays are
+    device_put with them, which is exactly resharding onto a new mesh
+    (elastic restart with a different dp width / device count).
+    Returns (tree, step) or (None, -1) when no checkpoint exists.
+    """
+    steps = latest_steps(ckpt_dir)
+    if not steps:
+        return None, -1
+    step = step if step is not None else max(steps)
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_paths = list(_flatten(like_tree).keys())
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    arrays = []
+    sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(flat_paths))
+    for key, like, sh in zip(flat_paths, leaves_like, sh_flat):
+        a = data[key]
+        assert tuple(a.shape) == tuple(like.shape), (key, a.shape, like.shape)
+        a = a.astype(like.dtype)
+        arrays.append(jax.device_put(a, sh) if sh is not None else
+                      jax.numpy.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, arrays), step

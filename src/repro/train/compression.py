@@ -1,0 +1,117 @@
+"""Error-feedback int8 gradient compression over the data-parallel axes.
+
+For bandwidth-constrained inter-pod links: the gradient all-reduce is
+decomposed into reduce-scatter + all-gather with both legs carried in int8
+(per-leaf fp32 scales; the reduce accumulates in int32 -- the conservative
+wire model, real ICI reducers keep int8 on the wire).  Quantization error is
+kept in an error-feedback state and re-injected next step, preserving SGD
+convergence (Karimireddy et al. 2019).
+
+Two entry points:
+  * ``ef_allreduce(grads, err, axis_names)`` -- tree op, call INSIDE a
+    shard_map whose mesh carries the dp axes.
+  * ``make_compressed_dp_train_step(cfg, mesh, opt_cfg)`` -- full replicated-
+    model data-parallel train step (per-shard grads -> compressed mean ->
+    AdamW), used by launch/train.py --grad-compression and the tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g, err, axis_names):
+    """int8 error-feedback all-reduce-mean of one leaf."""
+    n_dev = 1
+    for a in axis_names:
+        n_dev *= jax.lax.axis_size(a)
+    g = g.astype(jnp.float32) + err
+    size = g.size
+    flat = g.reshape(-1)
+    pad = (-size) % n_dev
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    # the scale must be AGREED across shards (summing int8 quantized with
+    # per-shard scales is nonsense); one scalar pmax per leaf is negligible
+    gmax = jnp.max(jnp.abs(flat))
+    for a in axis_names:
+        gmax = jax.lax.pmax(gmax, a)
+    scale = jnp.maximum(gmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    new_err = (flat - q.astype(jnp.float32) * scale)[:size].reshape(g.shape)
+    # leg 1: reduce-scatter (int32 accumulation of the int8 payload)
+    mine = q.reshape(n_dev, -1).astype(jnp.int32)
+    for a in axis_names:
+        mine = jax.lax.psum_scatter(mine, a, scatter_dimension=0, tiled=True)
+    mean = mine.reshape(-1).astype(jnp.float32) * scale / n_dev
+    # leg 2: requantize + all-gather (int8), again with an agreed scale
+    mmax = jnp.max(jnp.abs(mean))
+    for a in axis_names:
+        mmax = jax.lax.pmax(mmax, a)
+    s2 = jnp.maximum(mmax, 1e-12) / 127.0
+    q2 = jnp.clip(jnp.round(mean / s2), -127, 127).astype(jnp.int8)
+    gathered = q2
+    for a in reversed(axis_names):
+        gathered = jax.lax.all_gather(gathered, a, tiled=True)
+    out = gathered.astype(jnp.float32)[:flat.shape[0]] * s2
+    return out[:size].reshape(g.shape), new_err
+
+
+def ef_allreduce(grads, err_state, axis_names: tuple[str, ...]):
+    """Tree version of the compressed mean; call inside shard_map."""
+    pairs = jax.tree.map(lambda g, e: _compress_leaf(g, e, axis_names),
+                         grads, err_state)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and hasattr(
+        x[0], "shape")
+    out = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+    err = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+    return out, err
+
+
+def make_compressed_dp_train_step(cfg, mesh: Mesh,
+                                  opt_cfg: OptConfig = OptConfig(),
+                                  axes: tuple[str, ...] = ("data",),
+                                  loss_chunk: int = 512):
+    """Replicated-model DP train step with compressed gradient exchange.
+
+    Suitable for models that fit one device (the paper's own training example
+    scale); the model axis stays unused.  Batch is sharded over ``axes``.
+    """
+    axis_names = tuple(a for a in axes if a in mesh.axis_names)
+    rep = P()
+    dp = P(axis_names)
+
+    def local(params, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.lm_loss(cfg, p, batch, mesh=None,
+                                loss_chunk=loss_chunk))(params)
+        grads, err = ef_allreduce(grads, err, axis_names)
+        loss = jax.lax.pmean(loss, axis_names)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, err, {"loss": loss, **om}
+
+    def specs_like(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def step(params, opt_state, err, batch):
+        in_specs = (specs_like(params, rep), specs_like(opt_state, rep),
+                    specs_like(err, rep),
+                    jax.tree.map(lambda _: dp, batch))
+        out_specs = (specs_like(params, rep), specs_like(opt_state, rep),
+                     specs_like(err, rep), {"loss": rep, "lr": rep,
+                                            "grad_norm": rep})
+        fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+        return fn(params, opt_state, err, batch)
+
+    return step

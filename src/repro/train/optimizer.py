@@ -1,0 +1,102 @@
+"""AdamW + LR schedule, written against plain pytrees (no optax here).
+
+Moments are fp32 regardless of param dtype (bf16 params at deepseek scale);
+the update path casts through fp32.  Global-norm clipping included.  The
+state tree mirrors the param tree so the same PartitionSpecs apply (ZeRO:
+moments inherit the weights' FSDP sharding).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptConfig(NamedTuple):
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_abstract(abstract_params):
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(z, abstract_params),
+        "v": jax.tree.map(z, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_pspecs(param_pspecs):
+    from jax.sharding import PartitionSpec as P
+    return {
+        "m": param_pspecs,
+        "v": param_pspecs,
+        "step": P(),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, grads, opt_state, params):
+    step = opt_state["step"]
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (u + decay)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+        "step": step + 1,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

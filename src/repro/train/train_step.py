@@ -1,0 +1,71 @@
+"""train_step / serve_step builders -- the functions the dry-run lowers and
+the launcher executes.
+
+``make_train_step`` returns a pure (params, opt_state, batch) -> (params,
+opt_state, metrics) function with optional microbatch gradient accumulation
+(scan over microbatches: compute/comm overlap comes from the XLA latency
+hiding scheduler; accumulation keeps the peak activation footprint at one
+microbatch).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def make_train_step(cfg, mesh, opt_cfg: OptConfig = OptConfig(),
+                    microbatches: int = 1, loss_chunk: int = 512):
+    """Build the jittable train step for a model config on a mesh."""
+
+    def loss_fn(params, batch):
+        return T.lm_loss(cfg, params, batch, mesh=mesh, loss_chunk=loss_chunk)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, micro):
+                loss, g = jax.value_and_grad(loss_fn)(params, micro)
+                return (carry[0] + loss,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+
+            zero = (jnp.float32(0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(acc, zero, mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_serve_step(cfg, mesh):
+    """One decode step for a running batch: (params, cache, kv_len, tokens)
+    -> (next_tokens, logits, cache).  Greedy head (sampling lives in
+    repro.serve.generate)."""
+
+    def serve_step(params, cache, kv_len, tokens):
+        logits, cache = T.decode_step(cfg, params, cache, kv_len, tokens,
+                                      mesh=mesh)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg, mesh, max_len: int):
+    def prefill_step(params, tokens, extra=None, enc_frames=None):
+        return T.prefill(cfg, params, tokens, max_len, mesh=mesh,
+                         extra_embeds=extra, enc_frames=enc_frames)
+    return prefill_step

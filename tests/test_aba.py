@@ -1,0 +1,166 @@
+"""ABA core: vs the Algorithm-1 reference, constraint properties, variants,
+hierarchical decomposition, quality vs baselines (the paper's claims)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (aba, aba_reference, balance_ok, cut_cost,
+                        diversity_stats, hierarchical_aba,
+                        interleave_permutation, objective_centroid,
+                        objective_pairwise, total_pairwise)
+from repro.core.baselines import exact_small, random_partition
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,k", [(100, 4), (101, 4), (300, 7), (256, 16)])
+def test_matches_reference_objective(n, k):
+    x = _data(n, 6)
+    lj = np.asarray(aba(jnp.asarray(x), k))
+    lr = aba_reference(x, k)
+    oj = float(objective_centroid(jnp.asarray(x), jnp.asarray(lj), k))
+    orf = float(objective_centroid(jnp.asarray(x), jnp.asarray(lr), k))
+    assert balance_ok(lj, k)
+    assert abs(oj - orf) / orf < 2e-3  # eps-optimal LAP vs exact LAPJV
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(20, 200), k=st.integers(2, 10), seed=st.integers(0, 99))
+def test_balance_property(n, k, seed):
+    """Constraint (2): sizes within {floor(n/k), ceil(n/k)} -- always."""
+    x = _data(n, 4, seed)
+    labels = np.asarray(aba(jnp.asarray(x), k))
+    assert balance_ok(labels, k, n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_beats_random(seed):
+    x = _data(400, 5, seed)
+    k = 8
+    la = np.asarray(aba(jnp.asarray(x), k))
+    lr = random_partition(400, k, seed=seed)
+    oa = float(objective_pairwise(jnp.asarray(x), jnp.asarray(la), k))
+    orr = float(objective_pairwise(jnp.asarray(x), jnp.asarray(lr), k))
+    assert oa >= orr * 0.999
+
+
+def test_balanced_diversity_vs_random():
+    """Paper Table 6: ABA's per-cluster diversity spread is much smaller."""
+    x = _data(600, 6, 3)
+    k = 6
+    la = np.asarray(aba(jnp.asarray(x), k))
+    lr = random_partition(600, k, seed=3)
+    sd_a, _ = (float(v) for v in diversity_stats(jnp.asarray(x), jnp.asarray(la), k))
+    sd_r, _ = (float(v) for v in diversity_stats(jnp.asarray(x), jnp.asarray(lr), k))
+    assert sd_a < sd_r
+
+
+def test_interleave_permutation_props():
+    for n, k in [(18, 6), (22, 6), (100, 7), (10, 10)]:
+        p = interleave_permutation(n, k)
+        assert sorted(p) == list(range(n))
+    # paper Figure 1: n=18, k=6 -> round-robin of 6 sublists of length 3
+    p = interleave_permutation(18, 6)
+    assert list(p[:6]) == [0, 3, 6, 9, 12, 15]
+    # paper Figure 2: n=22, k=6 -> 2 short sublists (len 3), 4 long (len 4),
+    # leftovers (last of each long sublist) at the end
+    p = interleave_permutation(22, 6)
+    assert list(p[:6]) == [0, 3, 6, 10, 14, 18]
+    assert list(p[-4:]) == [9, 13, 17, 21]
+
+
+def test_interleave_better_for_small_anticlusters():
+    x = _data(512, 6, 1)
+    k = 256  # anticlusters of 2 (the matching case, Section 4.2)
+    lb = np.asarray(aba(jnp.asarray(x), k, variant="base"))
+    li = np.asarray(aba(jnp.asarray(x), k, variant="interleave"))
+    ob = float(objective_pairwise(jnp.asarray(x), jnp.asarray(lb), k))
+    oi = float(objective_pairwise(jnp.asarray(x), jnp.asarray(li), k))
+    assert oi > ob
+
+
+def test_categorical_constraint():
+    rng = np.random.default_rng(5)
+    x = _data(500, 5, 5)
+    cats = rng.integers(0, 4, size=500).astype(np.int32)
+    k = 6
+    labels = np.asarray(aba(jnp.asarray(x), k, categories=jnp.asarray(cats),
+                            n_categories=4))
+    assert balance_ok(labels, k)
+    for g in range(4):
+        counts = np.bincount(labels[cats == g], minlength=k)
+        ng = (cats == g).sum()
+        assert counts.min() >= ng // k and counts.max() <= -(-ng // k)
+
+
+def test_categorical_matches_reference():
+    rng = np.random.default_rng(6)
+    x = _data(300, 4, 6)
+    cats = rng.integers(0, 3, size=300).astype(np.int32)
+    lj = np.asarray(aba(jnp.asarray(x), 5, categories=jnp.asarray(cats),
+                        n_categories=3))
+    lr = aba_reference(x, 5, categories=cats)
+    oj = float(objective_centroid(jnp.asarray(x), jnp.asarray(lj), 5))
+    orf = float(objective_centroid(jnp.asarray(x), jnp.asarray(lr), 5))
+    assert abs(oj - orf) / orf < 5e-3
+
+
+def test_near_optimal_tiny():
+    x = _data(10, 2, 7).astype(np.float64)
+    _, opt = exact_small(x, 2)
+    la = np.asarray(aba(jnp.asarray(x.astype(np.float32)), 2))
+    w = float(objective_pairwise(jnp.asarray(x.astype(np.float32)),
+                                 jnp.asarray(la), 2))
+    assert w >= 0.95 * opt
+
+
+def test_hierarchical_quality_and_balance():
+    x = _data(1000, 8, 8)
+    k = 40
+    lh = np.asarray(hierarchical_aba(jnp.asarray(x), (5, 8)))
+    lf = np.asarray(aba(jnp.asarray(x), k))
+    assert balance_ok(lh, k)
+    oh = float(objective_centroid(jnp.asarray(x), jnp.asarray(lh), k))
+    of = float(objective_centroid(jnp.asarray(x), jnp.asarray(lf), k))
+    # paper Fig 7: decomposition costs well under 1% objective
+    assert (of - oh) / of < 0.01
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_hierarchical_balance_property(seed):
+    """Proposition 1: hierarchical sizes stay within one of each other."""
+    n = int(np.random.default_rng(seed).integers(150, 400))
+    x = _data(n, 4, seed)
+    labels = np.asarray(hierarchical_aba(jnp.asarray(x), (3, 4)))
+    assert balance_ok(labels, 12, n)
+
+
+def test_masked_aba_ignores_padding():
+    x = _data(120, 4, 9)
+    xp = np.concatenate([x, np.full((30, 4), 7.7, np.float32)])
+    mask = np.arange(150) < 120
+    lm = np.asarray(aba(jnp.asarray(xp), 5, valid_mask=jnp.asarray(mask)))
+    lo = np.asarray(aba(jnp.asarray(x), 5))
+    om = float(objective_centroid(jnp.asarray(x), jnp.asarray(lm[:120]), 5))
+    oo = float(objective_centroid(jnp.asarray(x), jnp.asarray(lo), 5))
+    assert balance_ok(lm[:120], 5, 120)
+    assert abs(om - oo) / oo < 5e-3
+
+
+def test_cut_cost_equivalence():
+    """Section 5.5: cut = total - within, so argmax W == argmin cut."""
+    x = _data(80, 3, 10)
+    la = np.asarray(aba(jnp.asarray(x), 4))
+    lr = random_partition(80, 4, seed=1)
+    xj = jnp.asarray(x)
+    for lab in (la, lr):
+        c = float(cut_cost(xj, jnp.asarray(lab), 4))
+        w = float(objective_pairwise(xj, jnp.asarray(lab), 4))
+        t = float(total_pairwise(xj))
+        assert abs((c + w) - t) / t < 1e-5

@@ -1,0 +1,90 @@
+"""Auction solver vs exact Hungarian oracle + permutation properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (AuctionConfig, assignment_value,
+                                   auction_solve, greedy_solve, scipy_solve)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 16, 64, 128])
+@pytest.mark.parametrize("scale", [1.0, 100.0])
+def test_auction_matches_hungarian(n, scale, rng):
+    c = rng.normal(size=(n, n)).astype(np.float32) * scale
+    a = np.asarray(auction_solve(jnp.asarray(c)))
+    assert sorted(a) == list(range(n))
+    va = assignment_value(c, a)
+    vs = assignment_value(c, scipy_solve(c))
+    assert va <= vs + 1e-4 * max(1.0, abs(vs))
+    # eps-optimality bound: within n * eps_final of optimal
+    span = c.max() - c.min()
+    eps = span / (AuctionConfig().eps_end_mul * max(n, 1))
+    assert vs - va <= n * eps + 1e-3 * scale
+
+
+def test_auction_tight_config_exact(rng):
+    cfg = AuctionConfig(n_phases=7, eps_end_mul=64.0)
+    for _ in range(5):
+        c = rng.normal(size=(32, 32)).astype(np.float32)
+        a = np.asarray(auction_solve(jnp.asarray(c), cfg))
+        vs = assignment_value(c, scipy_solve(c))
+        assert abs(assignment_value(c, a) - vs) <= 1e-3
+
+
+def test_auction_vmap(rng):
+    import jax
+    cs = rng.normal(size=(6, 24, 24)).astype(np.float32)
+    outs = np.asarray(jax.vmap(auction_solve)(jnp.asarray(cs)))
+    for c, a in zip(cs, outs):
+        assert sorted(a) == list(range(24))
+        vs = assignment_value(c, scipy_solve(c))
+        assert vs - assignment_value(c, a) <= 0.05 * abs(vs) + 1e-3
+
+
+def test_row_constant_invariance(rng):
+    """Per-row constants don't change the OPTIMAL assignment (the ABA fast
+    path drops ||x||^2); for the eps-optimal auction the gap is bounded by
+    n*eps of the *shifted* span."""
+    n = 20
+    c = rng.normal(size=(n, n)).astype(np.float32)
+    shift = rng.normal(size=(n, 1)).astype(np.float32) * 10
+    # exact solver: strictly invariant
+    s1 = scipy_solve(c)
+    s2 = scipy_solve(c + shift)
+    assert abs(assignment_value(c, s1) - assignment_value(c, s2)) < 1e-4
+    # auction: bounded by the shifted problem's eps
+    cfg = AuctionConfig(n_phases=6, eps_end_mul=32.0)
+    a2 = np.asarray(auction_solve(jnp.asarray(c + shift), cfg))
+    span = float((c + shift).max() - (c + shift).min())
+    eps = span / (cfg.eps_end_mul * n)
+    gap = assignment_value(c, s1) - assignment_value(c, a2)
+    assert gap <= n * eps + 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 20), seed=st.integers(0, 1000))
+def test_auction_is_permutation(n, seed):
+    c = np.random.default_rng(seed).normal(size=(n, n)).astype(np.float32)
+    a = np.asarray(auction_solve(jnp.asarray(c)))
+    assert sorted(a) == list(range(n))
+
+
+def test_greedy_reasonable(rng):
+    c = rng.normal(size=(30, 30)).astype(np.float32)
+    g = np.asarray(greedy_solve(jnp.asarray(c)))
+    assert sorted(g) == list(range(30))
+    vs = assignment_value(c, scipy_solve(c))
+    assert assignment_value(c, g) >= 0.5 * vs - 1.0
+
+
+def test_fixed_rounds_auction(rng):
+    """Fixed-length scan variant (dry-run profiling mode) stays valid and
+    near-optimal; converged state is a fixed point."""
+    c = rng.normal(size=(64, 64)).astype(np.float32)
+    a = np.asarray(auction_solve(jnp.asarray(c),
+                                 AuctionConfig(fixed_rounds=96)))
+    assert sorted(a) == list(range(64))
+    vs = assignment_value(c, scipy_solve(c))
+    assert vs - assignment_value(c, a) <= 0.02 * abs(vs) + 1e-3

@@ -1,0 +1,64 @@
+"""Data pipeline: ABA mini-batch sequencer, CV folds, synthetic generators."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.objective import diversity_per_cluster
+from repro.data.folds import aba_folds, fold_splits
+from repro.data.minibatch import ABABatchSequencer, random_sequencer_batches
+from repro.data import synthetic
+
+
+def test_sequencer_partition_and_determinism():
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(512, 8)).astype(np.float32)
+    s1 = ABABatchSequencer(feats, 32, seed=1)
+    s2 = ABABatchSequencer(feats, 32, seed=1)
+    assert len(s1) == 16
+    np.testing.assert_array_equal(s1.batches, s2.batches)  # deterministic
+    flat = np.sort(s1.batches.reshape(-1))
+    np.testing.assert_array_equal(flat, np.arange(512))  # exact partition
+    # epoch order deterministic given epoch index
+    e0a = [b.tolist() for b in s1.epoch(0)]
+    e0b = [b.tolist() for b in s2.epoch(0)]
+    assert e0a == e0b
+    assert e0a != [b.tolist() for b in s1.epoch(1)]
+
+
+def test_sequencer_more_balanced_than_random():
+    rng = np.random.default_rng(1)
+    feats = rng.normal(size=(600, 6)).astype(np.float32)
+    seq = ABABatchSequencer(feats, 50, seed=0)
+    sd_aba, _ = seq.diversity_stats()
+    rb = random_sequencer_batches(600, 50, seed=0)
+    lab = np.zeros(600, np.int32)
+    for b, idx in enumerate(rb):
+        lab[idx] = b
+    div = np.asarray(diversity_per_cluster(jnp.asarray(feats),
+                                           jnp.asarray(lab), 12))
+    assert sd_aba < float(div.std())
+
+
+def test_folds_stratified():
+    rng = np.random.default_rng(2)
+    feats = rng.normal(size=(300, 5)).astype(np.float32)
+    cats = rng.integers(0, 3, size=300).astype(np.int32)
+    labels = aba_folds(feats, 5, categories=cats)
+    for g in range(3):
+        counts = np.bincount(labels[cats == g], minlength=5)
+        ng = (cats == g).sum()
+        assert counts.min() >= ng // 5 and counts.max() <= -(-ng // 5)
+    splits = list(fold_splits(labels, 5))
+    assert len(splits) == 5
+    for tr, va in splits:
+        assert len(tr) + len(va) == 300
+        assert not set(tr) & set(va)
+
+
+def test_synthetic_presets():
+    x = synthetic.load("abalone", max_n=1000)
+    assert x.shape == (1000, 10)
+    assert np.isfinite(x).all()
+    tok, feats = synthetic.lm_token_stream(64, 32, 1000)
+    assert tok.shape == (64, 32) and tok.max() < 1000 and tok.min() >= 0
+    assert feats.shape[0] == 64

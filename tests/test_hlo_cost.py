@@ -1,0 +1,62 @@
+"""Trip-aware HLO cost parser: the dry-run profiler's correctness contract."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import analyze
+
+
+def _text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_multiplication():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = analyze(_text(f, s, s))
+    expect = 10 * 2 * 128 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+    assert r["unknown_trip_whiles"] == 0
+
+
+def test_nested_scan():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    r = analyze(_text(g, s, s))
+    expect = 20 * 2 * 64 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+
+
+def test_grad_flops_3x():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return jnp.sum(y ** 2)
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    r = analyze(_text(jax.grad(f, argnums=1), s, s))
+    expect = 3 * 10 * 2 * 64 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.05
+
+
+def test_bytes_positive_and_scaled():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    s = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    r = analyze(_text(f, s))
+    # each iteration reads+writes ~4MB
+    assert r["bytes"] >= 7 * 2 * 4 * 1024 * 1024 * 0.5

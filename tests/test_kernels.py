@@ -1,0 +1,86 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(the kernel body executes in Python on CPU; on TPU the same BlockSpecs run
+compiled)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bid_top2, bid_top2_ref, cdist, cdist_ref
+
+
+SHAPES = [(1, 1, 1), (7, 5, 3), (128, 128, 128), (130, 257, 70),
+          (64, 512, 384), (200, 33, 1000)]
+
+
+@pytest.mark.parametrize("m,n,d", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_cdist_allclose(m, n, d, dtype, rng):
+    x = rng.normal(size=(m, d)).astype(dtype)
+    c = rng.normal(size=(n, d)).astype(dtype)
+    got = np.asarray(cdist(jnp.asarray(x), jnp.asarray(c), force="pallas"))
+    ref = np.asarray(cdist_ref(jnp.asarray(x), jnp.asarray(c)))
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (128, 256, 512)])
+def test_cdist_block_shapes(bm, bn, bk, rng):
+    x = rng.normal(size=(100, 200)).astype(np.float32)
+    c = rng.normal(size=(150, 200)).astype(np.float32)
+    got = np.asarray(cdist(jnp.asarray(x), jnp.asarray(c), force="pallas",
+                           bm=bm, bn=bn, bk=bk))
+    ref = np.asarray(cdist_ref(jnp.asarray(x), jnp.asarray(c)))
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("m,n,d", SHAPES)
+def test_bid_top2_allclose(m, n, d, rng):
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    p = rng.normal(size=(n,)).astype(np.float32)
+    gv1, gj1, gv2 = (np.asarray(a) for a in bid_top2(
+        jnp.asarray(x), jnp.asarray(c), jnp.asarray(p), force="pallas"))
+    rv1, rj1, rv2 = (np.asarray(a) for a in bid_top2_ref(
+        jnp.asarray(x), jnp.asarray(c), jnp.asarray(p)))
+    np.testing.assert_allclose(gv1, rv1, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gv2, rv2, rtol=1e-3, atol=1e-3)
+    # argmax can differ only on exact ties; check value equivalence
+    vals = -2 * x @ c.T + (c * c).sum(1)[None] - p[None]
+    np.testing.assert_allclose(vals[np.arange(m), gj1],
+                               vals[np.arange(m), rj1], rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 50), n=st.integers(2, 80), d=st.integers(1, 40),
+       seed=st.integers(0, 100))
+def test_bid_top2_property(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    p = rng.normal(size=(n,)).astype(np.float32)
+    v1, j1, v2 = (np.asarray(a) for a in bid_top2(
+        jnp.asarray(x), jnp.asarray(c), jnp.asarray(p), force="pallas"))
+    assert (v1 >= v2 - 1e-4).all()
+    assert ((0 <= j1) & (j1 < n)).all()
+
+
+@pytest.mark.parametrize("s,di,ds,chunk", [(32, 64, 8, 8), (48, 128, 16, 16),
+                                           (16, 512, 16, 4)])
+def test_ssm_scan_allclose(s, di, ds, chunk, rng):
+    from repro.kernels.ssm_scan import ssm_scan_pallas
+    from repro.kernels.ref import ssm_scan_ref
+    b = 2
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, di))).astype(np.float32)
+                     * 0.1)
+    bi = jnp.asarray(rng.normal(size=(b, s, ds)).astype(np.float32))
+    co = jnp.asarray(rng.normal(size=(b, s, ds)).astype(np.float32))
+    xi = jnp.asarray(rng.normal(size=(b, s, di)).astype(np.float32))
+    a = jnp.asarray(-np.abs(rng.normal(size=(di, ds))).astype(np.float32))
+    y_k, h_k = ssm_scan_pallas(dt, bi, co, xi, a, chunk=chunk, bdi=64,
+                               interpret=True)
+    y_r, h_r = ssm_scan_ref(dt, bi, co, xi, a)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,201 @@
+"""Per-arch smoke tests (reduced same-family configs, Section f of the
+assignment): one forward + one train step on CPU, asserting shapes + no
+NaNs; prefill/decode consistency with the training forward."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.registry import ARCHS, get_config
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+def _batch(cfg, key, b=2, s=32):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    kw = {}
+    if cfg.frontend == "vision":
+        batch["extra_embeds"] = kw["extra_embeds"] = jax.random.normal(
+            key, (b, 8, cfg.d_model))
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :, None],
+                               (b, s, 3)).astype(jnp.int32)
+        batch["positions"] = kw["positions"] = pos
+    if cfg.enc_layers:
+        batch["enc_frames"] = kw["enc_frames"] = jax.random.normal(
+            key, (b, cfg.enc_ctx, cfg.d_model))
+    return batch, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, one_device_mesh):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    batch, kw = _batch(cfg, key)
+    b, s = batch["tokens"].shape
+
+    logits = T.forward(cfg, params, batch["tokens"], mesh=one_device_mesh,
+                       **kw)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab_size]).all())
+
+    step = make_train_step(cfg, one_device_mesh, OptConfig(lr=1e-3),
+                           loss_chunk=8)
+    params2, opt2, metrics = jax.jit(step)(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = max(float(jnp.abs(a - b2).max()) for a, b2 in zip(
+        jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "gemma2-2b",
+                                  "deepseek-v2-236b", "jamba-v0.1-52b",
+                                  "falcon-mamba-7b", "whisper-medium",
+                                  "qwen2-vl-7b"])
+def test_prefill_decode_consistency(arch, one_device_mesh):
+    """prefill last-token logits == forward last-token logits; then one
+    decode step matches a re-run of forward on the extended sequence."""
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    batch, kw = _batch(cfg, key)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    logits = T.forward(cfg, params, tokens, mesh=one_device_mesh, **kw)
+    pkw = dict(kw)
+    lp, cache = T.prefill(cfg, params, tokens, max_len=s + 4,
+                          mesh=one_device_mesh, **pkw)
+    np.testing.assert_allclose(np.asarray(lp[:, 0, :cfg.vocab_size]),
+                               np.asarray(logits[:, -1, :cfg.vocab_size]),
+                               rtol=2e-2, atol=3e-2)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    l2, _ = T.decode_step(cfg, params, cache, jnp.int32(s), nxt,
+                          mesh=one_device_mesh)
+    # reference: full forward on the extended sequence
+    ext = jnp.concatenate([tokens, nxt], axis=1)
+    kw2 = dict(kw)
+    if cfg.mrope_sections:
+        kw2["positions"] = jnp.broadcast_to(
+            jnp.arange(s + 1)[None, :, None], (b, s + 1, 3)).astype(jnp.int32)
+    lref = T.forward(cfg, params, ext, mesh=one_device_mesh, **kw2)
+    np.testing.assert_allclose(np.asarray(l2[:, 0, :cfg.vocab_size]),
+                               np.asarray(lref[:, -1, :cfg.vocab_size]),
+                               rtol=3e-2, atol=5e-2)
+
+
+def test_flash_attention_exact():
+    """Blockwise attention == full softmax attention (exactness)."""
+    from repro.models.layers import flash_attention
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 96, 6, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd))
+    out = flash_attention(q, k, v, causal=True, chunk_q=32, chunk_kv=16)
+    # reference
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(b, s, h, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    # sliding window
+    outw = flash_attention(q, k, v, causal=True, window=24, chunk_q=32,
+                           chunk_kv=16)
+    pos = jnp.arange(s)
+    maskw = mask & (pos[None, :] > pos[:, None] - 24)
+    scoresw = jnp.where(maskw[None, None, None],
+                        jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / np.sqrt(hd),
+                        -1e30)
+    pw = jax.nn.softmax(scoresw, axis=-1)
+    refw = jnp.einsum("bkgqs,bskh->bqkgh", pw, v).reshape(b, s, h, hd)
+    np.testing.assert_allclose(np.asarray(outw), np.asarray(refw),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_vocab_padding_masked():
+    cfg = get_config("granite-moe-3b-a800m", reduced=True, vocab_size=251)
+    assert cfg.padded_vocab == 256
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 251)
+    logits = T.forward(cfg, params, tokens)
+    assert bool((logits[..., 251:] < -1e29).all())
+
+
+def test_mamba_chunked_scan_equivalence():
+    """S`Perf A: chunked SSM scan must be numerically identical."""
+    import dataclasses
+    cfg1 = get_config("falcon-mamba-7b", reduced=True)
+    cfg2 = dataclasses.replace(
+        cfg1, ssm=dataclasses.replace(cfg1.ssm, scan_chunk=8))
+    params = T.init_params(cfg1, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg1.vocab_size)
+    l1 = np.asarray(T.forward(cfg1, params, tokens))
+    l2 = np.asarray(T.forward(cfg2, params, tokens))
+    np.testing.assert_allclose(l1, l2, atol=1e-4)
+    g1 = jax.grad(lambda p: T.lm_loss(cfg1, p, {"tokens": tokens},
+                                      loss_chunk=8))(params)
+    g2 = jax.grad(lambda p: T.lm_loss(cfg2, p, {"tokens": tokens},
+                                      loss_chunk=8))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_embed_shard_dmodel_equivalence():
+    """S`Perf B: the collective-free embedding sharding is math-identical."""
+    cfg1 = get_config("qwen2.5-14b", reduced=True)
+    cfg2 = get_config("qwen2.5-14b", reduced=True, embed_shard="dmodel")
+    params = T.init_params(cfg1, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg1.vocab_size)
+    l1 = np.asarray(T.forward(cfg1, params, tokens))
+    l2 = np.asarray(T.forward(cfg2, params, tokens))
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+
+def test_seq_parallel_equivalence(one_device_mesh):
+    """S`Perf B6: sequence-parallel residual stream is math-identical."""
+    cfg1 = get_config("smollm-360m", reduced=True)
+    cfg2 = get_config("smollm-360m", reduced=True, seq_parallel=True)
+    params = T.init_params(cfg1, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg1.vocab_size)
+    l1 = np.asarray(T.forward(cfg1, params, tokens, mesh=one_device_mesh))
+    l2 = np.asarray(T.forward(cfg2, params, tokens, mesh=one_device_mesh))
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+
+def test_sliding_window_decode_matches_forward(one_device_mesh):
+    """gemma2-style local attention: decode with a BINDING window must match
+    the training forward at the same position (regression for the
+    attend_one window mask)."""
+    import dataclasses
+    from repro.models.config import LayerSpec
+    cfg = get_config("gemma2-2b", reduced=True)
+    # make every layer local with a window smaller than the sequence
+    pat = tuple(LayerSpec(mixer="attn", mlp="dense", sliding_window=8)
+                for _ in cfg.pattern)
+    cfg = dataclasses.replace(cfg, pattern=pat)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                cfg.vocab_size)
+    logits = T.forward(cfg, params, tokens, mesh=one_device_mesh)
+    lp, cache = T.prefill(cfg, params, tokens, max_len=26,
+                          mesh=one_device_mesh)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    l2, _ = T.decode_step(cfg, params, cache, jnp.int32(24), nxt,
+                          mesh=one_device_mesh)
+    ext = jnp.concatenate([tokens, nxt], axis=1)
+    lref = T.forward(cfg, params, ext, mesh=one_device_mesh)
+    np.testing.assert_allclose(np.asarray(l2[:, 0, :cfg.vocab_size]),
+                               np.asarray(lref[:, -1, :cfg.vocab_size]),
+                               rtol=3e-2, atol=5e-2)

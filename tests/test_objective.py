@@ -1,0 +1,52 @@
+"""Fact 1 and the objective machinery."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (centroids, cluster_sizes, diversity_per_cluster,
+                        objective_centroid, objective_pairwise,
+                        total_pairwise)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 60), d=st.integers(1, 8), k=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_fact1_identity(n, d, k, seed):
+    """sum_{i<i' in C_k} ||xi - xi'||^2 == n_k * sum_i ||xi - mu_k||^2."""
+    rng = np.random.default_rng(seed)
+    k = min(k, n)
+    x = rng.normal(size=(n, d))
+    labels = rng.integers(0, k, size=n)
+    brute = 0.0
+    for i in range(n):
+        for j in range(i + 1, n):
+            if labels[i] == labels[j]:
+                brute += ((x[i] - x[j]) ** 2).sum()
+    w = float(objective_pairwise(jnp.asarray(x.astype(np.float32)),
+                                 jnp.asarray(labels.astype(np.int32)), k))
+    assert abs(w - brute) <= 1e-3 * max(1.0, abs(brute))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 40), seed=st.integers(0, 100))
+def test_total_pairwise(n, seed):
+    x = np.random.default_rng(seed).normal(size=(n, 3))
+    brute = sum(((x[i] - x[j]) ** 2).sum()
+                for i in range(n) for j in range(i + 1, n))
+    t = float(total_pairwise(jnp.asarray(x.astype(np.float32))))
+    assert abs(t - brute) <= 1e-3 * max(1.0, brute)
+
+
+def test_centroids_and_sizes(rng):
+    x = rng.normal(size=(30, 4)).astype(np.float32)
+    labels = rng.integers(0, 3, size=30).astype(np.int32)
+    c = np.asarray(centroids(jnp.asarray(x), jnp.asarray(labels), 3))
+    s = np.asarray(cluster_sizes(jnp.asarray(labels), 3))
+    for g in range(3):
+        np.testing.assert_allclose(c[g], x[labels == g].mean(0), rtol=1e-5)
+        assert s[g] == (labels == g).sum()
+    div = np.asarray(diversity_per_cluster(jnp.asarray(x),
+                                           jnp.asarray(labels), 3))
+    o = float(objective_centroid(jnp.asarray(x), jnp.asarray(labels), 3))
+    np.testing.assert_allclose(div.sum(), o, rtol=1e-5)
