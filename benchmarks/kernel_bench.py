@@ -1,32 +1,77 @@
 """Kernel + solver microbenchmarks.
 
-The Pallas kernels only *interpret* on CPU, so wall-times here cover the
-jnp reference paths and the auction solver; the kernels' performance story
-on TPU is carried by the roofline analysis (BlockSpec arithmetic intensity,
-see EXPERIMENTS.md S`Roofline).
+Reports three stories:
+
+1. ``cdist`` reference arithmetic intensity (roofline anchor).
+2. **Fused vs naive bidding**: the auction round's top-2 reduction through
+   the ``kernels.ops.bid_top2`` dispatch (Pallas kernel on TPU; the same
+   kernel body under ``interpret=True`` on small-CPU, jnp reference on
+   big-CPU) against the naive path that materializes the (m, k) value
+   matrix every round.  On CPU the interpret path is Python-speed -- the
+   row records which path the dispatch resolved so the numbers are honest;
+   the TPU speedup story is carried by the roofline analysis.
+3. **Batched vs vmapped solver**: one fused ``auction_solve`` loop over a
+   (B, k, k) stack vs ``vmap`` over B scalar solves.
+
+``--smoke`` runs tiny shapes only (the CI smoke step).
 """
 
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core.assignment import auction_solve, scipy_solve
-from repro.kernels import cdist_ref
+from repro.kernels import bid_top2, bid_top2_ref, cdist_ref
+from repro.kernels.ops import resolve_path
 
 from benchmarks.common import row, timed
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     rng = np.random.default_rng(0)
-    for m, k, d in [(512, 512, 64), (1024, 1024, 256)]:
+
+    cdist_shapes = [(256, 256, 32)] if smoke else [(512, 512, 64),
+                                                   (1024, 1024, 256)]
+    for m, k, d in cdist_shapes:
         x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
         c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
         _, t = timed(lambda: cdist_ref(x, c).block_until_ready(), repeats=5)
         ai = (2 * m * k * d) / ((m * d + k * d + m * k) * 4)
         row(f"kernel/cdist_ref/{m}x{k}x{d}", t,
             f"arith_intensity={ai:.1f}flops_per_byte")
-    for n in (64, 128, 256) + ((512,) if full else ()):
+
+    # --- fused vs naive bidding round ------------------------------------
+    bid_shapes = [(128, 256, 16)] if smoke else \
+        [(512, 512, 64), (2048, 512, 64)] + ([(8192, 4096, 128)] if full else [])
+    for m, k, d in bid_shapes:
+        x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        p = jnp.asarray(rng.normal(size=(k,)).astype(np.float32))
+        _, t_f = timed(lambda: bid_top2(x, c, p)[0].block_until_ready(),
+                       repeats=3)
+        _, t_n = timed(lambda: bid_top2_ref(x, c, p)[0].block_until_ready(),
+                       repeats=3)
+        row(f"kernel/bid_top2_fused/{m}x{k}x{d}", t_f,
+            f"naive_us={t_n * 1e6:.1f};speedup={t_n / t_f:.2f}x;"
+            f"path={resolve_path(m, k)}")
+
+    # --- batched vs vmapped auction solver -------------------------------
+    stack_shapes = [(8, 24)] if smoke else \
+        [(16, 64), (64, 64)] + ([(64, 256)] if full else [])
+    vmapped = jax.jit(jax.vmap(auction_solve))
+    for B, n in stack_shapes:
+        stack = jnp.asarray(rng.normal(size=(B, n, n)).astype(np.float32))
+        _, t_b = timed(lambda: auction_solve(stack).block_until_ready(),
+                       repeats=3)
+        _, t_v = timed(lambda: vmapped(stack).block_until_ready(), repeats=3)
+        row(f"solver/auction_batched/{B}x{n}", t_b,
+            f"vmap_us={t_v * 1e6:.1f};speedup={t_v / t_b:.2f}x;"
+            f"solves_per_s={B / t_b:.0f}")
+
+    solver_ns = (24,) if smoke else (64, 128, 256) + ((512,) if full else ())
+    for n in solver_ns:
         cmat = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
         _, t_a = timed(lambda: auction_solve(cmat).block_until_ready(),
                        repeats=3)
@@ -36,4 +81,11 @@ def run(full: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes only (CI smoke step)")
+    args = ap.parse_args()
+    run(full=args.full, smoke=args.smoke)

@@ -23,10 +23,26 @@ def run(full: bool = False):
     ks = [n // 128, n // 32, n // 8, n // 4, n // 2]  # sizes 128 ... 2
     print(f"# table8: imagenet-like n={n} d={d}: K,min_sz,max_sz,"
           "cpu_aba_s,ofv_aba,ofv_rand,dev%")
-    for k in ks:
+    for i, k in enumerate(ks):
         t0 = time.time()
         labels = np.asarray(aba_auto(xj, k, max_k=256))
         dt = time.time() - t0
+        if i == 0:
+            # batched-vs-vmapped solver throughput on the same workload:
+            # the hierarchical levels as ONE batched auction call per scan
+            # step vs the legacy vmap over per-group scalar solves.  Both
+            # paths are warmed first so jit compilation stays out of the
+            # timed window (the headline dt above deliberately includes it).
+            t1 = time.time()
+            np.asarray(aba_auto(xj, k, max_k=256))
+            dt_batched = time.time() - t1
+            np.asarray(aba_auto(xj, k, max_k=256, batched=False))  # warmup
+            t2 = time.time()
+            np.asarray(aba_auto(xj, k, max_k=256, batched=False))
+            dt_vmap = time.time() - t2
+            row(f"table8/solver_batched_vs_vmap/k{k}", dt_batched,
+                f"vmap_s={dt_vmap:.2f};"
+                f"speedup={dt_vmap / max(dt_batched, 1e-9):.2f}x")
         counts = np.bincount(labels, minlength=k)
         oa = float(objective_centroid(xj, jnp.asarray(labels), k))
         lr = random_partition(n, k, seed=0)

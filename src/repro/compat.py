@@ -1,0 +1,36 @@
+"""Version-compatibility shims: single import site for moving jax APIs.
+
+``shard_map`` lived in ``jax.experimental.shard_map`` through the 0.4.x
+series (with a ``check_rep`` kwarg) and later graduated to the top-level
+``jax`` namespace (where the kwarg became ``check_vma``).  Everything in this
+repo imports it from here so the rest of the code can use either kwarg
+spelling regardless of the installed jax.
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+# Pallas-TPU compiler params: `TPUCompilerParams` on jax 0.4.x, renamed to
+# `CompilerParams` later.  Kernels import the class from here.
+from jax.experimental.pallas import tpu as _pltpu
+
+TPUCompilerParams = getattr(_pltpu, "CompilerParams",
+                            getattr(_pltpu, "TPUCompilerParams", None))
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kw):
+    """``shard_map`` accepting both ``check_rep`` and ``check_vma``."""
+    for alias in ("check_vma", "check_rep"):
+        if alias in kw and alias != _CHECK_KW:
+            kw[_CHECK_KW] = kw.pop(alias)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

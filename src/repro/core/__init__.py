@@ -1,8 +1,10 @@
 """ABA core: the paper's primary contribution as composable JAX modules."""
 
-from repro.core.aba import aba, aba_reference, interleave_permutation
+from repro.core.aba import (aba, aba_batched, aba_reference,
+                            interleave_permutation)
 from repro.core.assignment import (AuctionConfig, assignment_value,
-                                   auction_solve, greedy_solve, scipy_solve)
+                                   auction_solve, auction_solve_factored,
+                                   greedy_solve, scipy_solve)
 from repro.core.hierarchical import aba_auto, default_plan, hierarchical_aba
 from repro.core.objective import (balance_ok, centroids, cluster_sizes,
                                   cut_cost, diversity_per_cluster,
@@ -11,8 +13,9 @@ from repro.core.objective import (balance_ok, centroids, cluster_sizes,
 from repro.core import baselines
 
 __all__ = [
-    "aba", "aba_reference", "interleave_permutation", "AuctionConfig",
-    "auction_solve", "greedy_solve", "scipy_solve", "assignment_value",
+    "aba", "aba_batched", "aba_reference", "interleave_permutation",
+    "AuctionConfig", "auction_solve", "auction_solve_factored",
+    "greedy_solve", "scipy_solve", "assignment_value",
     "aba_auto", "default_plan", "hierarchical_aba", "balance_ok", "centroids",
     "cluster_sizes", "cut_cost", "diversity_per_cluster", "diversity_stats",
     "objective_centroid", "objective_pairwise", "total_pairwise", "baselines",

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.assignment import AuctionConfig, auction_solve, greedy_solve
+from repro.core.assignment import (AuctionConfig, auction_solve,
+                                   auction_solve_factored, greedy_solve)
 
 _MASK_COST = -1e9  # categorical upper-bound mask (paper 4.3)
 
@@ -81,12 +82,19 @@ def categorical_sort_order(categories: jnp.ndarray, rank_in_cat: jnp.ndarray,
 # Core scan
 # ---------------------------------------------------------------------------
 
+_SOLVERS = ("auction", "auction_fused", "greedy")
+
+
 def _solve(cost: jnp.ndarray, solver: str, auction_config: AuctionConfig):
-    if solver == "auction":
+    if solver in ("auction", "auction_fused"):
+        # auction_solve is batched-native: (k, k) and (B, k, k) both take
+        # the same fused round loop.
         return auction_solve(cost, auction_config)
     if solver == "greedy":
+        if cost.ndim == 3:
+            return jax.vmap(greedy_solve)(cost)
         return greedy_solve(cost)
-    raise ValueError(f"unknown solver {solver!r}")
+    raise ValueError(f"unknown solver {solver!r}; expected one of {_SOLVERS}")
 
 
 @functools.partial(
@@ -113,8 +121,15 @@ def aba(
         anticlusters are small, n/k <= 8, matching the paper's guidance).
       categories: optional (n,) int32 in [0, n_categories) -- Section 4.3.
       n_categories: static number of categories (required with categories).
-      valid_mask: optional (n,) bool; False rows are padding (ignored, label 0).
-      solver: "auction" | "greedy".
+      valid_mask: optional (n,) bool; False rows are padding -- they never
+        influence real rows, but their returned labels are arbitrary in
+        [0, k): callers must mask them out.
+      solver: "auction" | "auction_fused" | "greedy".  "auction_fused" runs
+        the LAP matrix-free: the bidding round's top-2 streams through the
+        Pallas ``bid_top2`` kernel (TPU; ``interpret=True`` on CPU) instead
+        of re-materializing the (k, k) value matrix every round.  It falls
+        back to the dense auction when ``categories`` is set (the categorical
+        upper-bound mask cannot be factored).
 
     Returns:
       (n,) int32 labels in [0, k).
@@ -194,19 +209,27 @@ def aba(
         return out[:n]
 
     # --- scan over remaining batches -----------------------------------------
+    fused = solver == "auction_fused" and ub is None
+
     def step(carry, inp):
         cents, counts, cat_counts = carry
         idx, is_real = inp
         xb = x_ext[jnp.minimum(idx, n)]
-        # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
-        cost = -2.0 * (xb @ cents.T) + jnp.sum(cents * cents, axis=1)[None, :]
-        cost = jnp.where(is_real[:, None], cost, 0.0)  # neutral dummy rows
-        if ub is not None:
-            cb = cat_ext[jnp.minimum(idx, n)]
-            full = cat_counts[:, cb].T >= ub[cb][:, None]  # (k_rows, k_cols)
-            cost = jnp.where(jnp.logical_and(full, is_real[:, None]),
-                             _MASK_COST, cost)
-        assign = _solve(cost, solver, auction_config)
+        if fused:
+            # matrix-free bidding: the (k, k) value matrix is never built;
+            # each auction round is one fused bid_top2 kernel call.
+            assign = auction_solve_factored(xb, cents, is_real=is_real,
+                                            config=auction_config)
+        else:
+            # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
+            cost = -2.0 * (xb @ cents.T) + jnp.sum(cents * cents, axis=1)[None, :]
+            cost = jnp.where(is_real[:, None], cost, 0.0)  # neutral dummy rows
+            if ub is not None:
+                cb = cat_ext[jnp.minimum(idx, n)]
+                full = cat_counts[:, cb].T >= ub[cb][:, None]  # (k_rows, k_cols)
+                cost = jnp.where(jnp.logical_and(full, is_real[:, None]),
+                                 _MASK_COST, cost)
+            assign = _solve(cost, solver, auction_config)
         # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
         new_counts = counts.at[assign].add(is_real.astype(jnp.int32))
         upd = jnp.zeros_like(cents).at[assign].add(
@@ -226,6 +249,111 @@ def aba(
     # padding rows of the *input* keep label 0 (callers mask them out anyway)
     del n_valid
     return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Batched ABA over a stack of padded subproblems
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "solver", "auction_config"))
+def aba_batched(
+    x: jnp.ndarray,
+    k: int,
+    valid_mask: jnp.ndarray,
+    *,
+    solver: str = "auction",
+    auction_config: AuctionConfig = AuctionConfig(),
+) -> jnp.ndarray:
+    """Base-variant ABA on a stack of G padded subproblems at once.
+
+    Semantically ``vmap(lambda xg, vm: aba(xg, k, valid_mask=vm))`` (the
+    masked path ignores interleave/categories), but each scan step solves the
+    whole (G, k, k) cost stack with ONE batched ``auction_solve`` call --
+    hierarchical levels and sharded shards go through a single fused solver
+    loop instead of G lock-stepped scalar solves.
+
+    Args:
+      x: (G, M, D) float features, groups padded to a common M.
+      k: number of anticlusters per group (static).
+      valid_mask: (G, M) bool; False rows are padding -- they never influence
+        real rows, but their returned labels are arbitrary in [0, k): callers
+        must mask them out (as ``hierarchical_aba`` does).
+      solver: "auction" | "auction_fused" | "greedy" ("auction_fused" takes
+        the dense batched engine here -- the fused kernel path is per-matrix).
+
+    Returns:
+      (G, M) int32 labels in [0, k).
+    """
+    G, M, D = x.shape
+    if k > M:
+        raise ValueError(f"k={k} > M={M}")
+    solver = "auction" if solver == "auction_fused" else solver
+    xf = x.astype(jnp.float32)
+    garange = jnp.arange(G)[:, None]
+
+    # --- per-group centrality sort (masked) --------------------------------
+    w = valid_mask.astype(jnp.float32)
+    mu = jnp.sum(xf * w[..., None], axis=1) / jnp.maximum(
+        jnp.sum(w, axis=1), 1.0)[:, None]
+    dist = jnp.where(valid_mask,
+                     jnp.sum((xf - mu[:, None, :]) ** 2, axis=-1), -jnp.inf)
+    order = jnp.argsort(-dist, axis=1, stable=True).astype(jnp.int32)
+
+    # --- pad to full batches ------------------------------------------------
+    n_batches = -(-M // k)
+    pad = n_batches * k - M
+    order_p = (jnp.concatenate([order, jnp.full((G, pad), M, jnp.int32)], 1)
+               if pad else order)
+    real = order_p < M
+    vm_ext = jnp.concatenate([valid_mask, jnp.zeros((G, 1), jnp.bool_)], 1)
+    real = jnp.logical_and(
+        real, jnp.take_along_axis(vm_ext, jnp.minimum(order_p, M), axis=1))
+    batches = order_p.reshape(G, n_batches, k)
+    real = real.reshape(G, n_batches, k)
+
+    x_ext = jnp.concatenate([xf, jnp.zeros((G, 1, D), jnp.float32)], 1)
+
+    # --- batch 1 initializes centroids -------------------------------------
+    first_idx = jnp.minimum(batches[:, 0], M)
+    centroids0 = jnp.take_along_axis(x_ext, first_idx[..., None], axis=1)
+    counts0 = real[:, 0].astype(jnp.int32)
+    labels0 = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (G, k))
+
+    if n_batches == 1:
+        out = jnp.zeros((G, M + 1), jnp.int32).at[
+            garange, first_idx].set(labels0, mode="drop")
+        return out[:, :M]
+
+    # --- scan over remaining batches: one (G, k, k) LAP stack per step -----
+    def step(carry, inp):
+        cents, counts = carry
+        idx, is_real = inp  # (G, k) each
+        xb = jnp.take_along_axis(x_ext, jnp.minimum(idx, M)[..., None], axis=1)
+        # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
+        cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
+                + jnp.sum(cents * cents, axis=-1)[:, None, :])
+        cost = jnp.where(is_real[..., None], cost, 0.0)  # neutral dummy rows
+        assign = _solve(cost, solver, auction_config)  # (G, k) batched
+        new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
+        delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
+        upd = jnp.zeros_like(cents).at[garange, assign].add(
+            jnp.where(is_real[..., None], delta, 0.0))
+        cents = cents + upd / jnp.maximum(
+            new_counts, 1)[..., None].astype(jnp.float32)
+        return (cents, new_counts), assign
+
+    (_, _), assigns = jax.lax.scan(
+        step, (centroids0, counts0),
+        (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
+
+    labels_all = jnp.concatenate(
+        [labels0[:, None], assigns.swapaxes(0, 1)], axis=1)  # (G, B, k)
+    out = jnp.zeros((G, M + 1), jnp.int32).at[
+        garange, jnp.minimum(order_p, M)
+    ].set(labels_all.reshape(G, -1), mode="drop")
+    # padding rows of the *input* keep whatever label they drew (callers mask)
+    return out[:, :M]
 
 
 # ---------------------------------------------------------------------------

@@ -8,14 +8,25 @@ epsilon-scaling: every round is a dense top-2 reduction over the cost matrix
 plus scatter-max bidding -- VPU/MXU friendly, `vmap`-able, and usable inside
 `lax.scan`/`shard_map`.
 
+The engine is **batched-native**: a ``(B, k, k)`` cost stack is solved in one
+fused round loop with per-instance convergence masking (a converged instance
+is a fixed point of the round update), not a ``vmap`` over scalar solves.
+Hierarchical ABA feeds every level's padded group batch through this path as
+a single solver call.
+
 All solvers MAXIMIZE total cost (anticlustering assigns batches to the
 *farthest* centroids).
 
 Solvers
 -------
-- ``auction_solve``      eps-optimal, jit/vmap-safe, the production solver.
-- ``greedy_solve``       O(n^3) vectorized greedy, cheap lower-quality option.
-- ``scipy_solve``        exact Hungarian via scipy (host-side oracle/tests).
+- ``auction_solve``           eps-optimal, jit/vmap-safe, accepts (k, k) or a
+                              stacked (B, k, k); the production solver.
+- ``auction_solve_factored``  matrix-free auction on ``cost = -2 x.c^T +
+                              ||c||^2``; the bidding top-2 streams through the
+                              fused Pallas ``bid_top2`` kernel (TPU) so the
+                              value matrix is never re-materialized per round.
+- ``greedy_solve``            O(n^3) vectorized greedy, cheap lower-quality.
+- ``scipy_solve``             exact Hungarian via scipy (host-side oracle).
 """
 
 from __future__ import annotations
@@ -51,26 +62,37 @@ class AuctionConfig(NamedTuple):
     fixed_rounds: int = 0
 
 
-def _top2_masked(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Row-wise (best value, best index, second value) of a (m, n) matrix."""
-    j1 = jnp.argmax(values, axis=1)
-    v1 = jnp.take_along_axis(values, j1[:, None], axis=1)[:, 0]
-    masked = values.at[jnp.arange(values.shape[0]), j1].set(_NEG)
-    v2 = jnp.max(masked, axis=1)
+# ---------------------------------------------------------------------------
+# Batched engine
+# ---------------------------------------------------------------------------
+
+def _top2_batched(values: jnp.ndarray):
+    """Last-axis (best value, best index, second value) of a (..., n) array."""
+    j1 = jnp.argmax(values, axis=-1).astype(jnp.int32)
+    v1 = jnp.take_along_axis(values, j1[..., None], axis=-1)[..., 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, values.shape, values.ndim - 1)
+    v2 = jnp.max(jnp.where(col == j1[..., None], _NEG, values), axis=-1)
     return v1, j1, v2
 
 
-def _auction_phase(cost: jnp.ndarray, prices: jnp.ndarray, eps: jnp.ndarray,
+def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
                    max_rounds: int, fixed_rounds: int = 0,
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """One epsilon phase of Jacobi forward auction (maximization).
+    """One epsilon phase of batched Jacobi forward auction (maximization).
 
-    Returns (row_to_col, prices).  All rows start unassigned; prices persist
-    across phases (standard eps-scaling).
+    ``top2_fn(prices)`` returns the per-row ``(v1, j1, v2)`` of the reduced
+    value matrix ``value[b, i, j] = cost[b, i, j] - prices[b, j]``, each
+    (B, n) -- the *bidding round reduction*, pluggable so the dense path and
+    the fused matrix-free kernel path share one engine.  Prices/eps are
+    (B, n) / (B,).  Returns (row_to_col, prices).  All rows start unassigned;
+    prices persist across phases (standard eps-scaling).  A fully assigned
+    instance places no bids, so the round update is a no-op for it while the
+    rest of the batch keeps iterating (per-instance convergence masking).
     """
-    n = cost.shape[0]
-    rows = jnp.arange(n, dtype=jnp.int32)
-    cols = jnp.arange(n, dtype=jnp.int32)
+    B, n = prices.shape
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+    barange = jnp.arange(B)[:, None]
 
     def cond(state):
         assign, _owner, _prices, it = state
@@ -79,35 +101,38 @@ def _auction_phase(cost: jnp.ndarray, prices: jnp.ndarray, eps: jnp.ndarray,
     def body(state):
         assign, owner, prices, it = state
         unassigned = assign < 0
-        values = cost - prices[None, :]
-        v1, j1, v2 = _top2_masked(values)
+        v1, j1, v2 = top2_fn(prices)
         # Bid: raise the price of the favourite object past the point of
-        # indifference with the runner-up, plus eps.
-        bids = cost[rows, j1] - v2 + eps
+        # indifference with the runner-up, plus eps.  Using the identity
+        # cost[b, i, j1] = v1 + prices[b, j1] keeps the phase matrix-free.
+        bids = v1 + jnp.take_along_axis(prices, j1, axis=1) - v2 + eps[:, None]
         bid_val = jnp.where(unassigned, bids, _NEG)
         # Per-object best bid (scatter-max) and winning row (min row index
         # among rows achieving the best bid -- deterministic tie-break).
-        best = jnp.full((n,), _NEG, cost.dtype).at[j1].max(bid_val)
-        is_best = jnp.logical_and(unassigned, bid_val >= best[j1])
+        best = jnp.full((B, n), _NEG, bids.dtype).at[barange, j1].max(bid_val)
+        is_best = jnp.logical_and(
+            unassigned, bid_val >= jnp.take_along_axis(best, j1, axis=1))
         cand = jnp.where(is_best, rows, n)
-        winner = jnp.full((n,), n, jnp.int32).at[j1].min(cand)
+        winner = jnp.full((B, n), n, jnp.int32).at[barange, j1].min(cand)
         got_bid = winner < n
         # Rows whose object was just outbid become unassigned.  (They were
         # assigned, hence did not bid, hence cannot also be winners.)
         safe_assign = jnp.where(assign >= 0, assign, 0)
-        lost = jnp.logical_and(assign >= 0,
-                               jnp.logical_and(got_bid[safe_assign],
-                                               winner[safe_assign] != rows))
+        lost = jnp.logical_and(
+            assign >= 0,
+            jnp.logical_and(
+                jnp.take_along_axis(got_bid, safe_assign, axis=1),
+                jnp.take_along_axis(winner, safe_assign, axis=1) != rows))
         assign = jnp.where(lost, -1, assign)
         # Winners take their objects at the winning bid.
         winner_safe = jnp.where(got_bid, winner, n)
-        assign = assign.at[winner_safe].set(cols, mode="drop")
+        assign = assign.at[barange, winner_safe].set(cols, mode="drop")
         owner = jnp.where(got_bid, winner, owner)
         prices = jnp.where(got_bid, best, prices)
         return assign, owner, prices, it + 1
 
-    assign0 = jnp.full((n,), -1, jnp.int32)
-    owner0 = jnp.full((n,), -1, jnp.int32)
+    assign0 = jnp.full((B, n), -1, jnp.int32)
+    owner0 = jnp.full((B, n), -1, jnp.int32)
     if fixed_rounds:
         # converged state is a fixed point of body (no bids -> no updates)
         def scan_body(state, _):
@@ -121,53 +146,148 @@ def _auction_phase(cost: jnp.ndarray, prices: jnp.ndarray, eps: jnp.ndarray,
     return assign, prices
 
 
-@functools.partial(jax.jit, static_argnames=("config",))
-def auction_solve(cost: jnp.ndarray,
-                  config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
-    """eps-optimal max-cost assignment of a square (n, n) cost matrix.
-
-    Returns ``row_to_col`` (n,) int32.  Safe under ``vmap`` and inside
-    ``lax.scan``.  Rectangular problems must be padded by the caller
-    (constant-cost dummy rows are neutral: any column suits them).
-    """
-    cost = cost.astype(jnp.float32)
-    n = cost.shape[0]
-    if n == 1:
-        return jnp.zeros((1,), jnp.int32)
-    finite = jnp.where(cost <= _NEG / 2, 0.0, cost)
-    span = jnp.maximum(jnp.max(finite) - jnp.min(finite), 1e-6)
+def _eps_schedule(span: jnp.ndarray, n: int, config: AuctionConfig):
+    """(B,) span -> (n_phases, B) geometric epsilon schedule."""
     eps_hi = span / config.eps_start_div
     eps_lo = span / (config.eps_end_mul * n)
     n_phases = max(int(config.n_phases), 1)
     if n_phases > 1:
         ratio = (eps_lo / eps_hi) ** (1.0 / (n_phases - 1))
-        eps_sched = eps_hi * ratio ** jnp.arange(n_phases, dtype=jnp.float32)
-    else:
-        eps_sched = eps_lo[None]
+        steps = jnp.arange(n_phases, dtype=jnp.float32)
+        return eps_hi[None, :] * ratio[None, :] ** steps[:, None]
+    return eps_lo[None, :]
+
+
+def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
+                config: AuctionConfig) -> jnp.ndarray:
+    B = eps_sched.shape[1]
     max_rounds = config.max_rounds or (50 * n + 1000)
 
     def phase(prices, eps):
-        assign, prices = _auction_phase(cost, prices, eps, max_rounds,
+        assign, prices = _auction_phase(top2_fn, prices, eps, max_rounds,
                                         config.fixed_rounds)
         return prices, assign
 
-    prices0 = jnp.zeros((n,), jnp.float32)
+    prices0 = jnp.zeros((B, n), jnp.float32)
     _prices, assigns = jax.lax.scan(phase, prices0, eps_sched)
-    assign = assigns[-1]
     # Safety net: if the round cap was hit, columns may be unassigned; patch
     # them greedily so the result is always a permutation.
-    return _repair_permutation(assign)
+    return _repair_permutation(assigns[-1])
+
+
+def _solve_stack(cost: jnp.ndarray, config: AuctionConfig) -> jnp.ndarray:
+    """(B, n, n) -> (B, n); the dense batched engine."""
+    B, n, _ = cost.shape
+    finite = jnp.where(cost <= _NEG / 2, 0.0, cost)
+    span = jnp.maximum(jnp.max(finite, axis=(1, 2))
+                       - jnp.min(finite, axis=(1, 2)), 1e-6)
+
+    def top2_fn(prices):
+        return _top2_batched(cost - prices[:, None, :])
+
+    return _run_phases(top2_fn, _eps_schedule(span, n, config), n, config)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def auction_solve(cost: jnp.ndarray,
+                  config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+    """eps-optimal max-cost assignment; single matrix or batched stack.
+
+    ``(n, n)`` input returns ``row_to_col`` (n,) int32; a stacked
+    ``(B, n, n)`` input returns (B, n), solved in ONE fused round loop with
+    per-instance convergence masking -- instance b's result is identical to
+    ``auction_solve(cost[b])``.  Safe under ``vmap`` and inside ``lax.scan``.
+    Rectangular problems must be padded by the caller (constant-cost dummy
+    rows are neutral: any column suits them; a padded instance converges
+    early and free-wheels at its fixed point while the rest finish).
+    """
+    cost = cost.astype(jnp.float32)
+    in_shape = cost.shape
+    if cost.ndim not in (2, 3):
+        raise ValueError(f"cost must be (n, n) or (B, n, n), got {in_shape}")
+    squeeze = cost.ndim == 2
+    if squeeze:
+        cost = cost[None]
+    B, n, n2 = cost.shape
+    if n != n2:
+        raise ValueError(f"cost must be square, got {in_shape}")
+    if n == 1:
+        out = jnp.zeros((B, 1), jnp.int32)
+    else:
+        out = _solve_stack(cost, config)
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("config", "force"))
+def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
+                           is_real: jnp.ndarray | None = None,
+                           config: AuctionConfig = AuctionConfig(),
+                           force: str | None = None) -> jnp.ndarray:
+    """Matrix-free auction on ``cost[i, j] = -2 x_i . c_j + ||c_j||^2``.
+
+    This is the ABA batch-to-centroid LAP with the row-constant ``||x||^2``
+    dropped.  Each bidding round's top-2 reduction runs through the fused
+    ``kernels.ops.bid_top2`` dispatch -- the Pallas kernel on TPU (column
+    tiles streamed through VMEM, O(k) output), ``interpret=True`` on CPU --
+    so the (k, k) value matrix is never re-materialized per round.  Only the
+    one-off span estimate for the eps schedule touches a dense product.
+
+    ``is_real`` marks dummy rows whose cost is the neutral constant 0,
+    matching the dense masked path in :func:`repro.core.aba.aba`.
+    Returns ``row_to_col`` (k,) int32; requires ``x.shape[0] == c.shape[0]``.
+    """
+    from repro.kernels.ops import bid_top2
+
+    if x.shape[0] != c.shape[0]:
+        raise ValueError(f"LAP must be square: {x.shape[0]} != {c.shape[0]}")
+    n = x.shape[0]
+    if n == 1:
+        return jnp.zeros((1,), jnp.int32)
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    cn = jnp.sum(c * c, axis=1)
+
+    # one-off span for the eps schedule (fused per-row extrema: the max is
+    # bid_top2 at zero prices; the min is the max of the negated values,
+    # reachable with prices = 2 * ||c||^2 and x -> -x)
+    hi_v1, _, _ = bid_top2(x, c, jnp.zeros((n,), jnp.float32), force=force)
+    lo_v1, _, _ = bid_top2(-x, c, 2.0 * cn, force=force)
+    if is_real is not None:
+        any_dummy = jnp.any(~is_real)
+        hi = jnp.max(jnp.where(is_real, hi_v1, _NEG))
+        lo = -jnp.max(jnp.where(is_real, lo_v1, _NEG))
+        hi = jnp.where(any_dummy, jnp.maximum(hi, 0.0), hi)
+        lo = jnp.where(any_dummy, jnp.minimum(lo, 0.0), lo)
+    else:
+        hi = jnp.max(hi_v1)
+        lo = -jnp.max(lo_v1)
+    span = jnp.maximum(hi - lo, 1e-6)[None]
+
+    def top2_fn(prices):
+        v1, j1, v2 = bid_top2(x, c, prices[0], force=force)
+        if is_real is not None:
+            # dummy rows see the constant-0 cost row: value = -prices
+            dv1, dj1, dv2 = _top2_batched(-prices[0][None])
+            v1 = jnp.where(is_real, v1, dv1[0])
+            j1 = jnp.where(is_real, j1, dj1[0])
+            v2 = jnp.where(is_real, v2, dv2[0])
+        return v1[None], j1[None], v2[None]
+
+    return _run_phases(top2_fn, _eps_schedule(span, n, config), n, config)[0]
 
 
 def _repair_permutation(assign: jnp.ndarray) -> jnp.ndarray:
     """Fill any ``-1`` rows with the unused columns (order-preserving)."""
-    n = assign.shape[0]
-    used = jnp.zeros((n,), jnp.bool_).at[jnp.where(assign >= 0, assign, 0)].set(
-        assign >= 0)
-    free_cols = jnp.argsort(used, stable=True)  # unused columns first
+    B, n = assign.shape
+    barange = jnp.arange(B)[:, None]
+    safe = jnp.where(assign >= 0, assign, 0)
+    used = jnp.zeros((B, n), jnp.int32).at[barange, safe].add(
+        (assign >= 0).astype(jnp.int32)) > 0
+    free_cols = jnp.argsort(used, axis=1, stable=True)  # unused columns first
     need = assign < 0
-    slot = jnp.cumsum(need) - 1  # index into free_cols per needy row
-    return jnp.where(need, free_cols[slot], assign).astype(jnp.int32)
+    slot = jnp.cumsum(need, axis=1) - 1  # index into free_cols per needy row
+    fill = jnp.take_along_axis(free_cols, jnp.maximum(slot, 0), axis=1)
+    return jnp.where(need, fill, assign).astype(jnp.int32)
 
 
 @jax.jit

@@ -2,8 +2,10 @@
 
 K = K_1 x ... x K_L.  Level 1 runs ABA on the full data with K_1; every later
 level runs ABA **independently on each group** -- the paper exploits this with
-threads, we exploit it with ``vmap`` (single device) and ``shard_map``
-(``repro.core.sharded``) across the mesh.
+threads, we exploit it with the batched-native auction engine (one
+``aba_batched`` call whose scan steps solve the whole (G, k, k) LAP stack in
+a single fused loop) on one device, and ``shard_map`` (``repro.core.sharded``)
+across the mesh.
 
 Groups whose sizes differ by one (Proposition 1) are gathered into a fixed
 (G, M) index matrix with a validity mask, so every level is a single batched
@@ -19,7 +21,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.aba import aba
+from repro.core.aba import aba, aba_batched
 from repro.core.assignment import AuctionConfig
 
 
@@ -63,7 +65,7 @@ def _regroup(glabels: jnp.ndarray, valid: jnp.ndarray, n_groups: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("plan", "variant", "solver", "auction_config"),
+    static_argnames=("plan", "variant", "solver", "auction_config", "batched"),
 )
 def hierarchical_aba(
     x: jnp.ndarray,
@@ -72,8 +74,16 @@ def hierarchical_aba(
     variant: str = "auto",
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
+    batched: bool = True,
 ) -> jnp.ndarray:
-    """ABA with L = len(plan) hierarchical levels; returns labels in [0, prod(plan))."""
+    """ABA with L = len(plan) hierarchical levels; returns labels in [0, prod(plan)).
+
+    With ``batched=True`` (default) every level >= 2 is ONE ``aba_batched``
+    call whose scan steps each solve the whole (G, k_l, k_l) LAP stack in a
+    single batched auction loop; ``batched=False`` keeps the legacy ``vmap``
+    over per-group scalar solves (the two give identical labels -- the flag
+    exists so benchmarks can measure the difference).
+    """
     n = x.shape[0]
     k_total = math.prod(plan)
     if k_total > n:
@@ -90,8 +100,12 @@ def hierarchical_aba(
     for k_l in plan[1:]:
         idx, valid = _regroup(glabels, jnp.ones((n,), jnp.bool_), n_groups, m)
         xg = x_ext[jnp.minimum(idx, n)]  # (G, M, D)
-        sub = jax.vmap(
-            lambda xx, vm: aba(xx, k_l, valid_mask=vm, **kw))(xg, valid)
+        if batched:
+            sub = aba_batched(xg, k_l, valid, solver=solver,
+                              auction_config=auction_config)
+        else:
+            sub = jax.vmap(
+                lambda xx, vm: aba(xx, k_l, valid_mask=vm, **kw))(xg, valid)
         new_global = (jnp.arange(n_groups, dtype=jnp.int32)[:, None] * k_l + sub)
         glabels = jnp.zeros((n + 1,), jnp.int32).at[
             jnp.minimum(idx.reshape(-1), n)
@@ -101,9 +115,9 @@ def hierarchical_aba(
     return glabels
 
 
-def aba_auto(x, k: int, *, max_k: int = 512, **kw):
+def aba_auto(x, k: int, *, max_k: int = 512, batched: bool = True, **kw):
     """ABA with an automatically chosen hierarchical plan (paper Table 5)."""
     plan = default_plan(k, max_k=max_k)
     if len(plan) == 1:
         return aba(x, k, **kw)
-    return hierarchical_aba(x, plan, **kw)
+    return hierarchical_aba(x, plan, batched=batched, **kw)

@@ -24,7 +24,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core.assignment import AuctionConfig
 from repro.core.hierarchical import default_plan, hierarchical_aba
@@ -41,11 +42,14 @@ def sharded_aba(
     variant: str = "auto",
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
+    batched: bool = True,
 ):
     """Partition sharded ``x`` (n, d) into k anticlusters; returns (n,) labels.
 
     ``k`` must be divisible by the total data-parallel shard count; each shard
-    owns n/n_shards rows (pad the dataset first if needed).
+    owns n/n_shards rows (pad the dataset first if needed).  ``batched``
+    routes each shard's hierarchical levels through the single-call batched
+    auction engine (see ``hierarchical_aba``).
     """
     axes = tuple(a for a in data_axes if a in mesh.axis_names)
     n_shards = math.prod(mesh.shape[a] for a in axes)
@@ -61,7 +65,7 @@ def sharded_aba(
         if len(plan) == 1:
             local = aba(xs, k_local, **kw)
         else:
-            local = hierarchical_aba(xs, plan, **kw)
+            local = hierarchical_aba(xs, plan, batched=batched, **kw)
         offset = jnp.int32(0)
         for a in axes:
             offset = offset * mesh.shape[a] + jax.lax.axis_index(a)

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import TPUCompilerParams
 
 _NEG = -1e30
 
@@ -103,7 +104,7 @@ def bid_top2_pallas(
             jax.ShapeDtypeStruct((mp,), jnp.int32),
             jax.ShapeDtypeStruct((mp,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xp, cp, cn, pp)

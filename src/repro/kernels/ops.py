@@ -22,26 +22,35 @@ def _backend() -> str:
     return jax.default_backend()
 
 
+def resolve_path(m: int, k: int, force: str | None = None) -> str:
+    """Which path an (m, k)-sized dispatch takes: 'pallas' (TPU compiled),
+    'pallas-interpret' (forced, or CPU under the interpret budget), or 'ref'
+    (jnp fallback).  The single copy of the rule: the dispatchers below
+    branch on it and benchmarks label their rows with it.
+    """
+    if force == "ref":
+        return "ref"
+    if _backend() == "tpu":
+        return "pallas"
+    if force == "pallas" or m * k <= _CPU_INTERPRET_BUDGET:
+        return "pallas-interpret"
+    return "ref"
+
+
 def cdist(x: jnp.ndarray, c: jnp.ndarray, *, force: str | None = None,
           **block_kw) -> jnp.ndarray:
     """Squared-distance cost matrix; kernel on TPU, ref fallback on big-CPU."""
-    if force == "ref":
+    path = resolve_path(x.shape[0], c.shape[0], force)
+    if path == "ref":
         return cdist_ref(x, c)
-    if force == "pallas" or _backend() == "tpu":
-        return cdist_pallas(x, c, interpret=_backend() != "tpu", **block_kw)
-    if x.shape[0] * c.shape[0] <= _CPU_INTERPRET_BUDGET:
-        return cdist_pallas(x, c, interpret=True, **block_kw)
-    return cdist_ref(x, c)
+    return cdist_pallas(x, c, interpret=path != "pallas", **block_kw)
 
 
 def bid_top2(x: jnp.ndarray, c: jnp.ndarray, prices: jnp.ndarray, *,
              force: str | None = None, **block_kw):
     """Fused auction bidding reduction (v1, j1, v2 per row)."""
-    if force == "ref":
+    path = resolve_path(x.shape[0], c.shape[0], force)
+    if path == "ref":
         return bid_top2_ref(x, c, prices)
-    if force == "pallas" or _backend() == "tpu":
-        return bid_top2_pallas(x, c, prices, interpret=_backend() != "tpu",
-                               **block_kw)
-    if x.shape[0] * c.shape[0] <= _CPU_INTERPRET_BUDGET:
-        return bid_top2_pallas(x, c, prices, interpret=True, **block_kw)
-    return bid_top2_ref(x, c, prices)
+    return bid_top2_pallas(x, c, prices, interpret=path != "pallas",
+                           **block_kw)

@@ -115,6 +115,24 @@ def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
     return comps, entry
 
 
+def _operand_refs(op: Op, comp: Computation, limit: int) -> list:
+    """First ``limit`` operand Ops of ``op``, robust to text-format drift.
+
+    Some XLA builds print operand lists with inline types
+    (``dot(f32[128,128]{1,0} %lhs, ...)``), others without the '%' name
+    prefix; candidate tokens are filtered through the computation's symbol
+    table so type/dim tokens can never shadow an operand name.
+    """
+    refs = []
+    for name in re.findall(r"%?([\w\.\-]+)", op.rest.split(")", 1)[0]):
+        ref = comp.by_name.get(name)
+        if ref is not None:
+            refs.append(ref)
+            if len(refs) == limit:
+                break
+    return refs
+
+
 def _dot_flops(op: Op, comp: Computation) -> float:
     out_elems = 1
     dims = _shape_dims(op.type_str) or []
@@ -124,16 +142,12 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     cm = _CONTRACT.search(op.rest)
     k = 1
     if cm:
-        lhs_name = op.rest.split("%", 1)
-        first_operand = re.match(r"\s*%?([\w\.\-]+)", op.rest)
-        if first_operand:
-            lhs = comp.by_name.get(first_operand.group(1))
-            if lhs is not None:
-                ldims = _shape_dims(lhs.type_str) or []
-                for ci in cm.group(1).split(","):
-                    if ci and int(ci) < len(ldims):
-                        k *= ldims[int(ci)]
-        del lhs_name
+        lhs = _operand_refs(op, comp, 1)
+        if lhs:
+            ldims = _shape_dims(lhs[0].type_str) or []
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(ldims):
+                    k *= ldims[int(ci)]
     return 2.0 * out_elems * k
 
 
@@ -141,13 +155,11 @@ def _conv_flops(op: Op, comp: Computation) -> float:
     out_elems = 1
     for d in (_shape_dims(op.type_str) or []):
         out_elems *= d
-    first_two = re.findall(r"%?([\w\.\-]+)", op.rest)[:2]
+    refs = _operand_refs(op, comp, 2)
     k = 1
-    if len(first_two) == 2:
-        rhs = comp.by_name.get(first_two[1])
-        if rhs is not None:
-            for d in (_shape_dims(rhs.type_str) or []):
-                k *= d
+    if len(refs) == 2:
+        for d in (_shape_dims(refs[1].type_str) or []):
+            k *= d
     return 2.0 * out_elems * k
 
 

@@ -16,7 +16,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models import layers as L

@@ -20,7 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.models import transformer as T
 from repro.train.optimizer import OptConfig, adamw_update

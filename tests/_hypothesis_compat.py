@@ -1,0 +1,59 @@
+"""``hypothesis`` import with a deterministic fallback mini-runner.
+
+CI installs real hypothesis (see requirements.txt) and gets full
+property-based search.  Environments without it (the bare seed container)
+still collect and run every property test: the fallback draws a fixed,
+seed-deterministic sample of examples per test instead of erroring at
+import.  Only the tiny strategy surface this suite uses is implemented.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def example(self, rnd):
+            return rnd.randint(self.lo, self.hi)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NB: no functools.wraps -- pytest must see a zero-arg signature,
+            # not the original one (it would treat drawn params as fixtures).
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for i in range(n):
+                    rnd = random.Random(0xABA0 + i)
+                    drawn = {k: s.example(rnd) for k, s in strategies.items()}
+                    fn(*args, **{**kwargs, **drawn})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

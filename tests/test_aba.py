@@ -4,7 +4,7 @@ hierarchical decomposition, quality vs baselines (the paper's claims)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (aba, aba_reference, balance_ok, cut_cost,
                         diversity_stats, hierarchical_aba,

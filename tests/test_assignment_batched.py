@@ -1,0 +1,153 @@
+"""Batched auction engine: stack solves vs per-instance solves vs the exact
+Hungarian oracle, masked/padded instances, and the fused matrix-free path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.aba import aba, aba_batched
+from repro.core.assignment import (AuctionConfig, assignment_value,
+                                   auction_solve, auction_solve_factored,
+                                   scipy_solve)
+from repro.core.hierarchical import hierarchical_aba
+from repro.core.objective import balance_ok, objective_centroid
+
+
+@pytest.mark.parametrize("B,n", [(1, 4), (5, 16), (3, 64), (16, 8)])
+def test_batched_identical_to_independent(B, n, rng):
+    """A (B, k, k) stack returns labels IDENTICAL to B independent solves."""
+    cs = rng.normal(size=(B, n, n)).astype(np.float32)
+    batched = np.asarray(auction_solve(jnp.asarray(cs)))
+    singles = np.stack(
+        [np.asarray(auction_solve(jnp.asarray(c))) for c in cs])
+    np.testing.assert_array_equal(batched, singles)
+    for a in batched:
+        assert sorted(a) == list(range(n))
+
+
+def test_batched_matches_hungarian_oracle(rng):
+    """Every instance of the stack is within the eps-optimality bound."""
+    B, n = 6, 32
+    cs = rng.normal(size=(B, n, n)).astype(np.float32) * 10.0
+    batched = np.asarray(auction_solve(jnp.asarray(cs)))
+    eps = (cs.max() - cs.min()) / (AuctionConfig().eps_end_mul * n)
+    for c, a in zip(cs, batched):
+        va = assignment_value(c, a)
+        vs = assignment_value(c, scipy_solve(c))
+        assert va <= vs + 1e-3
+        assert vs - va <= n * eps + 1e-2
+
+
+def test_batched_masked_padded_instances(rng):
+    """Instances with constant-cost dummy rows (the aba padding convention)
+    still match their independent solves and stay permutations."""
+    B, n = 5, 24
+    cs = rng.normal(size=(B, n, n)).astype(np.float32)
+    n_real = [24, 20, 24, 13, 1]
+    for b, r in enumerate(n_real):
+        cs[b, r:, :] = 0.0  # neutral dummy rows
+    batched = np.asarray(auction_solve(jnp.asarray(cs)))
+    singles = np.stack(
+        [np.asarray(auction_solve(jnp.asarray(c))) for c in cs])
+    np.testing.assert_array_equal(batched, singles)
+    for c, a, r in zip(cs, batched, n_real):
+        assert sorted(a) == list(range(n))
+        # real rows still near the oracle on the padded matrix
+        va = assignment_value(c, a)
+        vs = assignment_value(c, scipy_solve(c))
+        span = c.max() - c.min()
+        assert vs - va <= n * span / (AuctionConfig().eps_end_mul * n) + 1e-2
+
+
+def test_batched_fixed_rounds_identical(rng):
+    cfg = AuctionConfig(fixed_rounds=96)
+    cs = rng.normal(size=(4, 20, 20)).astype(np.float32)
+    batched = np.asarray(auction_solve(jnp.asarray(cs), cfg))
+    singles = np.stack(
+        [np.asarray(auction_solve(jnp.asarray(c), cfg)) for c in cs])
+    np.testing.assert_array_equal(batched, singles)
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 6), n=st.integers(2, 24), seed=st.integers(0, 100))
+def test_batched_permutation_property(B, n, seed):
+    cs = np.random.default_rng(seed).normal(size=(B, n, n)).astype(np.float32)
+    out = np.asarray(auction_solve(jnp.asarray(cs)))
+    for a in out:
+        assert sorted(a) == list(range(n))
+
+
+def test_batched_under_vmap(rng):
+    """The batched-native engine stays vmap-safe (legacy calling pattern)."""
+    cs = rng.normal(size=(6, 16, 16)).astype(np.float32)
+    v = np.asarray(jax.vmap(auction_solve)(jnp.asarray(cs)))
+    b = np.asarray(auction_solve(jnp.asarray(cs)))
+    np.testing.assert_array_equal(v, b)
+
+
+@pytest.mark.parametrize("force", ["pallas", "ref"])
+def test_factored_fused_bidding(force, rng):
+    """Matrix-free auction (fused bid_top2 round) vs the dense engine and
+    the Hungarian oracle; 'pallas' exercises the interpret=True CPU path."""
+    n, d = 32, 8
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    cost = -2.0 * x @ c.T + (c * c).sum(1)[None, :]
+    af = np.asarray(auction_solve_factored(jnp.asarray(x), jnp.asarray(c),
+                                           force=force))
+    assert sorted(af) == list(range(n))
+    vs = assignment_value(cost, scipy_solve(cost))
+    span = cost.max() - cost.min()
+    eps = span / (AuctionConfig().eps_end_mul * n)
+    assert vs - assignment_value(cost, af) <= n * eps + 1e-2
+
+
+def test_factored_fused_with_dummy_rows(rng):
+    n, d, n_real = 24, 6, 17
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    is_real = np.arange(n) < n_real
+    af = np.asarray(auction_solve_factored(
+        jnp.asarray(x), jnp.asarray(c), is_real=jnp.asarray(is_real),
+        force="pallas"))
+    assert sorted(af) == list(range(n))
+    cost = np.where(is_real[:, None],
+                    -2.0 * x @ c.T + (c * c).sum(1)[None, :], 0.0)
+    vs = assignment_value(cost, scipy_solve(cost))
+    span = cost.max() - cost.min()
+    assert vs - assignment_value(cost, af) <= span / 4.0 + 1e-2
+
+
+def test_aba_fused_solver_quality(rng):
+    x = rng.normal(size=(300, 5)).astype(np.float32)
+    lf = np.asarray(aba(jnp.asarray(x), 6, solver="auction_fused"))
+    ld = np.asarray(aba(jnp.asarray(x), 6))
+    assert balance_ok(lf, 6)
+    of = float(objective_centroid(jnp.asarray(x), jnp.asarray(lf), 6))
+    od = float(objective_centroid(jnp.asarray(x), jnp.asarray(ld), 6))
+    assert abs(of - od) / od < 5e-3
+
+
+def test_aba_batched_matches_vmapped_aba(rng):
+    G, M, D, k = 4, 40, 5, 5
+    x = rng.normal(size=(G, M, D)).astype(np.float32)
+    vm = np.zeros((G, M), bool)
+    for g, v in enumerate([40, 39, 40, 37]):
+        vm[g, :v] = True
+    b = np.asarray(aba_batched(jnp.asarray(x), k, jnp.asarray(vm)))
+    v = np.asarray(jax.vmap(
+        lambda xx, m: aba(xx, k, valid_mask=m))(jnp.asarray(x),
+                                                jnp.asarray(vm)))
+    np.testing.assert_array_equal(np.where(vm, b, 0), np.where(vm, v, 0))
+    for g in range(G):
+        assert balance_ok(b[g][vm[g]], k, int(vm[g].sum()))
+
+
+def test_hierarchical_batched_identical_to_vmapped(rng):
+    x = rng.normal(size=(600, 6)).astype(np.float32)
+    lb = np.asarray(hierarchical_aba(jnp.asarray(x), (4, 6)))
+    lv = np.asarray(hierarchical_aba(jnp.asarray(x), (4, 6), batched=False))
+    np.testing.assert_array_equal(lb, lv)
+    assert balance_ok(lb, 24)

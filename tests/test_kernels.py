@@ -5,7 +5,7 @@ compiled)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import bid_top2, bid_top2_ref, cdist, cdist_ref
 
