@@ -9,7 +9,8 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import aba, hierarchical_aba, objective_centroid
+from repro.anticluster import anticluster
+from repro.core import objective_centroid
 from repro.data import synthetic
 
 from benchmarks.common import row
@@ -28,11 +29,8 @@ def run(full: bool = False):
     best = None
     for plan in plans:
         t0 = time.time()
-        if len(plan) == 1:
-            labels = aba(xj, plan[0])
-        else:
-            labels = hierarchical_aba(xj, plan)
-        labels = np.asarray(labels)
+        labels = np.asarray(anticluster(xj, k=k, plan=plan,
+                                        stats=False).labels)
         dt = time.time() - t0
         o = float(objective_centroid(xj, jnp.asarray(labels), k))
         if best is None:

@@ -12,6 +12,9 @@ Reports three stories:
    the TPU speedup story is carried by the roofline analysis.
 3. **Batched vs vmapped solver**: one fused ``auction_solve`` loop over a
    (B, k, k) stack vs ``vmap`` over B scalar solves.
+4. **Registry sweep**: every LAP backend in the solver registry
+   (``repro.core.assignment.available_solvers``) on the same stack, so a
+   ``register_solver``-ed backend shows up here with zero edits.
 
 ``--smoke`` runs tiny shapes only (the CI smoke step).
 """
@@ -22,7 +25,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.assignment import auction_solve, scipy_solve
+from repro.core.assignment import (AuctionConfig, auction_solve,
+                                   available_solvers, get_solver, scipy_solve)
 from repro.kernels import bid_top2, bid_top2_ref, cdist_ref
 from repro.kernels.ops import resolve_path
 
@@ -78,6 +82,18 @@ def run(full: bool = False, smoke: bool = False):
         cn = np.asarray(cmat)
         _, t_s = timed(lambda: scipy_solve(cn), repeats=3)
         row(f"solver/auction/{n}", t_a, f"scipy_lapjv_us={t_s*1e6:.0f}")
+
+    # --- registry sweep: every registered LAP backend on one stack --------
+    B, n = (4, 16) if smoke else (16, 64)
+    stack = jnp.asarray(rng.normal(size=(B, n, n)).astype(np.float32))
+    for name in available_solvers():
+        solver = get_solver(name)
+        _, t = timed(
+            lambda: solver.solve(stack, AuctionConfig()).block_until_ready(),
+            repeats=3)
+        row(f"solver/registry/{name}/{B}x{n}", t,
+            f"solves_per_s={B / t:.0f};"
+            f"factored={'yes' if solver.factored else 'no'}")
 
 
 if __name__ == "__main__":

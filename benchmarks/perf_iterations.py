@@ -46,7 +46,7 @@ def run_aba(shape, over):
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.assignment import AuctionConfig
-    from repro.core.sharded import sharded_aba
+    from repro.core.sharded import sharded_core
     from repro.launch import hlo_cost
     import traceback
 
@@ -59,7 +59,7 @@ def run_aba(shape, over):
            "devices": 256, "overrides": {k: str(v) for k, v in over.items()}}
     try:
         def fn(x):
-            return sharded_aba(x, spec["k"], mesh, data_axes=("pod", "data"),
+            return sharded_core(x, spec["k"], mesh, data_axes=("pod", "data"),
                                max_k=spec.get("max_k", 512),
                                auction_config=acfg)
 

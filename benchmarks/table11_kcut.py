@@ -10,7 +10,8 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import aba, objective_pairwise
+from repro.anticluster import anticluster
+from repro.core import objective_pairwise
 from repro.core.baselines import greedy_kcut, random_partition
 from repro.data import synthetic
 
@@ -29,7 +30,7 @@ def run(full: bool = False):
         n = len(x)
         for k in kvals:
             t0 = time.time()
-            la = np.asarray(aba(xj, k))
+            la = np.asarray(anticluster(xj, k=k, plan=None, stats=False).labels)
             t_aba = time.time() - t0
             wa = float(objective_pairwise(xj, jnp.asarray(la), k))
             t0 = time.time()

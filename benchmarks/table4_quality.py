@@ -8,7 +8,8 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import aba, aba_auto, objective_centroid
+from repro.anticluster import anticluster
+from repro.core import objective_centroid
 from repro.core.baselines import fast_anticlustering, random_partition
 from repro.data import synthetic
 
@@ -27,7 +28,7 @@ def run(full: bool = False, ks=(5, 50)):
         n = len(x)
         for k in ks:
             t0 = time.time()
-            la = np.asarray(aba_auto(xj, k))
+            la = np.asarray(anticluster(xj, k=k, stats=False).labels)
             t_aba = time.time() - t0
             oa = float(objective_centroid(xj, jnp.asarray(la), k))
             devs, times = [], []

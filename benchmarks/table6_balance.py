@@ -6,7 +6,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import aba_auto, diversity_stats
+from repro.anticluster import anticluster
+from repro.core import diversity_stats
 from repro.core.baselines import fast_anticlustering, random_partition
 from repro.data import synthetic
 
@@ -22,7 +23,7 @@ def run(full: bool = False, k: int = 5):
     for name in DATASETS:
         x = synthetic.load(name, max_n=cap)
         xj = jnp.asarray(x)
-        la = np.asarray(aba_auto(xj, k))
+        la = np.asarray(anticluster(xj, k=k).labels)
         sd_a, rg_a = (float(v) for v in diversity_stats(xj, jnp.asarray(la), k))
         lb = fast_anticlustering(x, k, n_partners=5, seed=0)
         sd_b, rg_b = (float(v) for v in diversity_stats(xj, jnp.asarray(lb), k))

@@ -11,7 +11,8 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import aba, diversity_stats, objective_centroid
+from repro.anticluster import anticluster
+from repro.core import diversity_stats, objective_centroid
 from repro.core.baselines import fast_anticlustering, random_partition
 from repro.data import synthetic
 
@@ -31,8 +32,9 @@ def run(full: bool = False):
         xj = jnp.asarray(x)
         for k in kvals:
             t0 = time.time()
-            la = np.asarray(aba(xj, k, categories=jnp.asarray(cats),
-                                n_categories=g))
+            la = np.asarray(anticluster(
+                xj, k=k, plan=None, categories=jnp.asarray(cats),
+                n_categories=g, stats=False).labels)
             t_aba = time.time() - t0
             oa = float(objective_centroid(xj, jnp.asarray(la), k))
             sd_a, _ = (float(v) for v in diversity_stats(xj, jnp.asarray(la), k))

@@ -12,7 +12,8 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import aba, cut_cost, objective_pairwise
+from repro.anticluster import anticluster
+from repro.core import cut_cost, objective_pairwise
 from repro.core.baselines import greedy_kcut, random_partition
 from repro.data import synthetic
 
@@ -23,7 +24,8 @@ def main():
     for k in (10, 30):
         rows = []
         for name, fn in [
-            ("ABA", lambda: np.asarray(aba(xj, k))),
+            ("ABA", lambda: np.asarray(anticluster(xj, k=k, plan=None,
+                                       stats=False).labels)),
             ("greedy k-cut (METIS proxy)", lambda: greedy_kcut(x, k)),
             ("random", lambda: random_partition(len(x), k)),
         ]:

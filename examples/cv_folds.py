@@ -7,6 +7,7 @@ distribution so validation scores have lower variance than random folds.
 
 import sys
 
+sys.path.insert(0, ".")  # benchmarks.common (run from the repo root)
 sys.path.insert(0, "src")
 
 import numpy as np

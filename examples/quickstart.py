@@ -1,4 +1,9 @@
-"""Quickstart: anticluster a dataset, inspect quality, and compare variants.
+"""Quickstart: the `anticluster()` front door end to end.
+
+One spec-driven entry point covers every regime -- flat, interleave,
+categorical (stratified), hierarchical, and custom LAP solvers from the
+registry -- and returns an `AnticlusterResult` with labels, the resolved
+plan, per-cluster sizes, and diversity statistics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +15,24 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (aba, aba_auto, diversity_stats, hierarchical_aba,
-                        objective_centroid, objective_pairwise)
+from repro.anticluster import (AnticlusterSpec, anticluster,
+                               available_solvers)
+from repro.core import objective_centroid, objective_pairwise
 from repro.core.baselines import fast_anticlustering, random_partition
 from repro.data import synthetic
+
+
+def describe(name, xj, res):
+    k = res.k
+    ofv = float(objective_centroid(xj, res.labels, k))
+    w = float(objective_pairwise(xj, res.labels, k))
+    sizes = np.asarray(res.cluster_sizes)
+    print(f"{name:26s} plan={'x'.join(map(str, res.plan)):9s} "
+          f"ofv={ofv:12.2f}  W(C)={w:14.1f}  "
+          f"diversity sd={float(res.diversity_sd):8.3f} "
+          f"range={float(res.diversity_range):8.3f}  "
+          f"sizes {sizes.min()}..{sizes.max()} balanced={res.balanced}")
+    return ofv
 
 
 def main():
@@ -22,27 +41,44 @@ def main():
     xj = jnp.asarray(x)
     n, k = len(x), 10
 
-    print(f"dataset: travel  N={n} D={x.shape[1]}  K={k}\n")
+    print(f"dataset: travel  N={n} D={x.shape[1]}  K={k}")
+    print(f"registered LAP solvers: {', '.join(available_solvers())}\n")
+
+    # one spec, varied one field at a time
+    base = AnticlusterSpec(k=k)
+    for name, spec in [
+        ("ABA (auction LAP)", base),
+        ("ABA interleave", base.replace(variant="interleave")),
+        ("ABA fused-kernel solver", base.replace(solver="auction_fused")),
+        ("hierarchical 2x5", base.replace(plan=(2, 5))),
+    ]:
+        describe(name, xj, anticluster(xj, spec))
+
+    # baselines for scale
     for name, labels in [
-        ("ABA (auction LAP)", np.asarray(aba(xj, k))),
-        ("ABA interleave", np.asarray(aba(xj, k, variant="interleave"))),
-        ("hierarchical 2x5", np.asarray(hierarchical_aba(xj, (2, 5)))),
         ("exchange P-R5", fast_anticlustering(x, k, n_partners=5)),
         ("random", random_partition(n, k)),
     ]:
-        ofv = float(objective_centroid(xj, jnp.asarray(labels), k))
-        w = float(objective_pairwise(xj, jnp.asarray(labels), k))
-        sd, rg = (float(v) for v in diversity_stats(xj, jnp.asarray(labels), k))
-        sizes = np.bincount(labels, minlength=k)
-        print(f"{name:20s} ofv={ofv:12.2f}  W(C)={w:14.1f}  "
-              f"diversity sd={sd:8.3f} range={rg:8.3f}  "
-              f"sizes {sizes.min()}..{sizes.max()}")
+        lj = jnp.asarray(labels)
+        print(f"{name:26s} {'':14s} "
+              f"ofv={float(objective_centroid(xj, lj, k)):12.2f}  "
+              f"W(C)={float(objective_pairwise(xj, lj, k)):14.1f}")
 
-    # very large K via the auto plan (paper Table 5 behaviour)
-    labels = np.asarray(aba_auto(xj, 505))
-    print(f"\nK=505 via auto hierarchical plan: sizes "
-          f"{np.bincount(labels).min()}..{np.bincount(labels).max()}, "
-          f"ofv={float(objective_centroid(xj, jnp.asarray(labels), 505)):.2f}")
+    # stratified: categories are balanced exactly across anticlusters (4.3)
+    cats = (np.asarray(x)[:, 0] > np.median(np.asarray(x)[:, 0])).astype(np.int32)
+    res = anticluster(xj, base.replace(categories=cats))
+    per = np.stack([np.bincount(np.asarray(res.labels)[cats == g],
+                                minlength=k) for g in range(2)])
+    print(f"\nstratified K={k}: per-category per-cluster counts stay within "
+          f"one of each other -> spread {per.max(1) - per.min(1)}")
+
+    # very large K via the auto plan (paper Table 5 behaviour): the spec
+    # front door resolves the hierarchy -- no separate entry point needed
+    res = anticluster(xj, AnticlusterSpec(k=505, max_k=101))
+    sizes = np.asarray(res.cluster_sizes)
+    print(f"\nK=505 auto plan -> {'x'.join(map(str, res.plan))}: "
+          f"sizes {sizes.min()}..{sizes.max()}, balanced={res.balanced}, "
+          f"ofv={float(objective_centroid(xj, res.labels, 505)):.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,301 @@
+"""The spec-driven front door for Euclidean anticlustering.
+
+One entry point replaces the six legacy ones (``aba``, ``aba_batched``,
+``hierarchical_aba``, ``aba_auto``, ``sharded_aba``, ``aba_reference``):
+
+    from repro.anticluster import AnticlusterSpec, anticluster
+
+    res = anticluster(x, AnticlusterSpec(k=500))          # flat or auto-plan
+    res = anticluster(x, k=500, plan=(10, 50))            # explicit hierarchy
+    res = anticluster(x, k=5, categories=y)               # stratified (4.3)
+    res = anticluster(x, k=512, mesh=mesh)                # shard_map across mesh
+    res.labels, res.plan, res.cluster_sizes, res.balanced # result pytree
+
+``anticluster`` routes flat -> hierarchical -> sharded execution from the
+spec alone; every regime runs on the ONE rank-polymorphic masked core
+(``repro.core.aba.aba_core``) so there is exactly one implementation of the
+centrality sort / padding / Algorithm-1 scan.  The LAP backend is looked up
+in the solver registry (``register_solver`` / ``get_solver``), so new
+backends are a registry entry, not a seventh entry point.
+
+``anticluster`` itself is a host-level convenience (it builds the result
+statistics eagerly); inside ``jit``/``scan``/``shard_map`` call the cores
+directly (``aba_core`` / ``hierarchical_core`` / ``sharded_core``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aba import aba_core
+from repro.core.assignment import (AuctionConfig, available_solvers,
+                                   get_solver, register_solver)
+from repro.core.hierarchical import default_plan, hierarchical_core
+from repro.core.kplus import kplus_augment
+
+__all__ = [
+    "AnticlusterSpec", "AnticlusterResult", "anticluster",
+    "register_solver", "get_solver", "available_solvers",
+]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AnticlusterSpec:
+    """Frozen configuration for :func:`anticluster`.
+
+    Attributes:
+      k: number of anticlusters (required).
+      variant: "auto" | "base" | "interleave" (paper Section 4.2; "auto"
+        interleaves when anticlusters are small, n/k <= 8).
+      categories: optional (n,) int category labels -- Section 4.3 exact
+        stratification.  Composes with hierarchy: every level stratifies
+        within its groups, and the global constraint (5) still holds exactly
+        (ceil/floor compose across levels, see ``repro.core.hierarchical``).
+      n_categories: static category count; 0 infers it from ``categories``.
+      solver: LAP backend name in the solver registry ("auction",
+        "auction_fused", "greedy", "scipy", or anything you
+        ``register_solver``-ed).
+      auction_config: epsilon-scaling schedule for the auction backends.
+      plan: hierarchy plan (Section 4.4).  ``"auto"`` factorizes k with
+        ``default_plan`` (every factor <= ``max_k``); a tuple is used as-is
+        (must multiply to k); ``None`` forces the flat single-level path.
+      max_k: largest admissible LAP size for the auto plan.
+      mesh: optional ``jax.sharding.Mesh`` -- routes through ``shard_map``
+        (the data sharding becomes the first hierarchy level); k must be
+        divisible by the shard count of ``data_axes``.
+      data_axes: mesh axes that shard the data.
+      valid_mask: optional bool mask marking padding rows (shape of labels);
+        masked rows get arbitrary labels in [0, k).
+      kplus_moments: >= 2 augments features with standardized centered
+        moments (k-plus, Section 3.3) before clustering; flat unmasked
+        (n, d) input only.
+      dtype: feature dtype fed to the core (the core computes in float32).
+      batched: False switches hierarchical levels to the legacy vmap of
+        per-group solves (identical labels; exists for benchmarking).
+      stats: False skips the diversity statistics (sd/range report 0) so
+        timed benchmark windows measure only the solve + cluster sizes.
+    """
+
+    k: int
+    variant: str = "auto"
+    categories: Any = None
+    n_categories: int = 0
+    solver: str = "auction"
+    auction_config: AuctionConfig = AuctionConfig()
+    plan: Any = "auto"
+    max_k: int = 512
+    mesh: Any = None
+    data_axes: tuple[str, ...] = ("pod", "data")
+    valid_mask: Any = None
+    kplus_moments: int = 1
+    dtype: Any = jnp.float32
+    batched: bool = True
+    stats: bool = True
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k={self.k} must be >= 1")
+        if isinstance(self.plan, tuple) and math.prod(self.plan) != self.k:
+            raise ValueError(
+                f"prod(plan)={math.prod(self.plan)} != k={self.k}")
+        if self.plan is not None and not isinstance(self.plan, tuple) \
+                and self.plan != "auto":
+            raise ValueError(f'plan must be "auto", a tuple, or None; '
+                             f"got {self.plan!r}")
+
+    def replace(self, **overrides) -> "AnticlusterSpec":
+        return dataclasses.replace(self, **overrides)
+
+    def resolve_plan(self) -> tuple[int, ...]:
+        """The concrete per-device hierarchy plan this spec dispatches to."""
+        if self.plan is None:
+            return (self.k,)
+        if isinstance(self.plan, tuple):
+            return self.plan
+        k = self.k
+        if self.mesh is not None:
+            axes = [a for a in self.data_axes if a in self.mesh.axis_names]
+            n_shards = math.prod(self.mesh.shape[a] for a in axes)
+            if k % n_shards:
+                raise ValueError(
+                    f"k={k} must be divisible by shard count {n_shards}")
+            k = k // n_shards
+        return default_plan(k, max_k=self.max_k)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnticlusterResult:
+    """Labels plus the resolved execution plan and quality statistics.
+
+    A pytree: ``labels`` / ``cluster_sizes`` / ``diversity_sd`` /
+    ``diversity_range`` are leaves, the resolved ``plan`` and the spec echoes
+    (``k``, ``solver``, ``variant``) are static metadata.  For stacked
+    (G, M, D) inputs every field carries the leading group axis.
+    """
+
+    labels: jnp.ndarray          # (n,) or (G, M) int32 in [0, k)
+    cluster_sizes: jnp.ndarray   # (k,) or (G, k) int32 (valid rows only)
+    diversity_sd: jnp.ndarray    # () or (G,) std of per-cluster diversity
+    diversity_range: jnp.ndarray  # () or (G,) max - min of the same
+    k: int = 1
+    plan: tuple[int, ...] = ()
+    solver: str = "auction"
+    variant: str = "auto"
+
+    @property
+    def n_valid(self):
+        """Number of non-padding rows (per group for stacked inputs)."""
+        return np.asarray(self.cluster_sizes).sum(axis=-1)
+
+    @property
+    def balanced(self) -> bool:
+        """Constraint (2): all sizes in {floor(n/k), ceil(n/k)} (Prop. 1)."""
+        sizes = np.asarray(self.cluster_sizes)
+        n = sizes.sum(axis=-1, keepdims=True)
+        return bool(np.all(sizes >= n // self.k)
+                    and np.all(sizes <= -(-n // self.k)))
+
+
+jax.tree_util.register_dataclass(
+    AnticlusterResult,
+    data_fields=["labels", "cluster_sizes", "diversity_sd",
+                 "diversity_range"],
+    meta_fields=["k", "plan", "solver", "variant"])
+
+
+def _result_stats(x, labels, k, valid_mask, diversity=True):
+    """Masked per-group (sizes, diversity sd, diversity range).
+
+    The masked/grouped generalization of ``repro.core.objective``'s
+    ``cluster_sizes`` / ``diversity_stats`` (which stay the flat fast path);
+    a drift guard in tests/test_anticluster.py pins the two to each other.
+    """
+    squeeze = x.ndim == 2
+    if squeeze:
+        x, labels = x[None], labels[None]
+        valid_mask = None if valid_mask is None else valid_mask[None]
+    G, M, D = x.shape
+    w = (jnp.ones((G, M), jnp.float32) if valid_mask is None
+         else valid_mask.astype(jnp.float32))
+    seg = labels + k * jnp.arange(G, dtype=labels.dtype)[:, None]
+    seg = jnp.where(w > 0, seg, G * k)  # padding rows -> dump segment
+    sizes = jax.ops.segment_sum(
+        w.reshape(-1), seg.reshape(-1), num_segments=G * k + 1
+    )[:G * k].reshape(G, k).astype(jnp.int32)
+    if not diversity:
+        zero = jnp.zeros((G,), jnp.float32)
+        return (sizes[0], zero[0], zero[0]) if squeeze else (sizes, zero,
+                                                             zero)
+    sums = jax.ops.segment_sum(
+        (x * w[..., None]).reshape(-1, D), seg.reshape(-1),
+        num_segments=G * k + 1)[:G * k].reshape(G, k, D)
+    mu = sums / jnp.maximum(sizes, 1).astype(jnp.float32)[..., None]
+    sq = jnp.sum((x - jnp.take_along_axis(
+        mu, labels[..., None], axis=1)) ** 2, axis=-1) * w
+    div = jax.ops.segment_sum(
+        sq.reshape(-1), seg.reshape(-1), num_segments=G * k + 1
+    )[:G * k].reshape(G, k)
+    sd = jnp.std(div, axis=1)
+    rng = jnp.max(div, axis=1) - jnp.min(div, axis=1)
+    if squeeze:
+        return sizes[0], sd[0], rng[0]
+    return sizes, sd, rng
+
+
+def anticluster(x, spec: AnticlusterSpec | None = None,
+                **overrides) -> AnticlusterResult:
+    """Partition ``x`` into ``spec.k`` anticlusters per the spec.
+
+    Args:
+      x: (n, d) features, or a stacked (G, M, D) batch of padded subproblems
+        (pair with ``spec.valid_mask``; the stacked rank requires a flat
+        plan -- hierarchy inside each group is not supported).
+      spec: an :class:`AnticlusterSpec`; keyword ``overrides`` are applied on
+        top (or used alone: ``anticluster(x, k=10)``).
+
+    Returns:
+      :class:`AnticlusterResult` with labels, the resolved plan, per-cluster
+      sizes and diversity statistics.
+    """
+    if spec is None:
+        spec = AnticlusterSpec(**overrides)
+    elif overrides:
+        spec = spec.replace(**overrides)
+
+    x = jnp.asarray(x)
+    if x.ndim not in (2, 3):
+        raise ValueError(f"x must be (n, d) or (G, M, D), got {x.shape}")
+    if spec.kplus_moments > 1:
+        if x.ndim != 2 or spec.valid_mask is not None:
+            raise NotImplementedError(
+                "kplus_moments needs flat unmasked (n, d) input (the moment "
+                "statistics are computed over the row axis)")
+        x = jnp.asarray(kplus_augment(np.asarray(x), spec.kplus_moments))
+    x = x.astype(spec.dtype)
+
+    cats = spec.categories
+    n_categories = spec.n_categories
+    if cats is not None:
+        cats = jnp.asarray(cats, jnp.int32)
+        if n_categories <= 0:
+            n_categories = int(np.asarray(cats).max()) + 1
+    vm = None if spec.valid_mask is None else jnp.asarray(
+        spec.valid_mask, jnp.bool_)
+    get_solver(spec.solver)  # fail fast with the registered-name list
+    plan = spec.resolve_plan()
+    kw = dict(variant=spec.variant, solver=spec.solver,
+              auction_config=spec.auction_config)
+
+    if spec.mesh is not None:
+        from repro.core.sharded import sharded_core
+        if x.ndim != 2 or cats is not None or vm is not None:
+            raise NotImplementedError(
+                "mesh execution takes flat (n, d) data without categories "
+                "or valid_mask (shards are the first hierarchy level)")
+        if spec.plan != "auto":
+            raise NotImplementedError(
+                'mesh execution resolves its per-shard plan from max_k; '
+                'use plan="auto"')
+        axes = [a for a in spec.data_axes if a in spec.mesh.axis_names]
+        n_shards = math.prod(spec.mesh.shape[a] for a in axes)
+        labels = sharded_core(x, spec.k, spec.mesh,
+                              data_axes=spec.data_axes, max_k=spec.max_k,
+                              batched=spec.batched, **kw)
+        plan = ((n_shards,) + plan) if n_shards > 1 else plan
+    elif x.ndim == 3:
+        if len(plan) > 1:
+            raise NotImplementedError(
+                "stacked (G, M, D) input requires a flat plan "
+                f"(got plan={plan}); hierarchy nests via repeated calls")
+        labels = aba_core(x, spec.k, vm, categories=cats,
+                          n_categories=n_categories, **kw)
+    elif len(plan) > 1:
+        if vm is not None:
+            raise NotImplementedError(
+                "hierarchical plans do not support valid_mask; drop the "
+                "padding rows instead")
+        labels = hierarchical_core(x, plan, categories=cats,
+                                   n_categories=n_categories,
+                                   batched=spec.batched, **kw)
+    else:
+        labels = aba_core(
+            x[None], spec.k, None if vm is None else vm[None],
+            categories=None if cats is None else cats[None],
+            n_categories=n_categories, **kw)[0]
+
+    # Finish the label computation before dispatching the statistics ops:
+    # host-callback solvers (e.g. "scipy") deadlock on CPU if new work is
+    # enqueued while their callback computation is still in flight.
+    labels = jax.block_until_ready(labels)
+    sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
+                                   diversity=spec.stats)
+    return AnticlusterResult(
+        labels=labels, cluster_sizes=sizes, diversity_sd=sd,
+        diversity_range=rng, k=spec.k, plan=plan, solver=spec.solver,
+        variant=spec.variant)

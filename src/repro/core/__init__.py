@@ -1,11 +1,19 @@
-"""ABA core: the paper's primary contribution as composable JAX modules."""
+"""ABA core: the paper's primary contribution as composable JAX modules.
 
-from repro.core.aba import (aba, aba_batched, aba_reference,
+``aba_core`` is the one rank-polymorphic implementation of Algorithm 1;
+``hierarchical_core`` stacks it per Section 4.4.  The legacy entry points
+(``aba``, ``aba_batched``, ``hierarchical_aba``, ``aba_auto``) are deprecated
+exact-parity shims -- new code goes through ``repro.anticluster``.
+"""
+
+from repro.core.aba import (aba, aba_batched, aba_core, aba_reference,
                             interleave_permutation)
 from repro.core.assignment import (AuctionConfig, assignment_value,
                                    auction_solve, auction_solve_factored,
-                                   greedy_solve, scipy_solve)
-from repro.core.hierarchical import aba_auto, default_plan, hierarchical_aba
+                                   available_solvers, get_solver,
+                                   greedy_solve, register_solver, scipy_solve)
+from repro.core.hierarchical import (aba_auto, default_plan,
+                                     hierarchical_aba, hierarchical_core)
 from repro.core.objective import (balance_ok, centroids, cluster_sizes,
                                   cut_cost, diversity_per_cluster,
                                   diversity_stats, objective_centroid,
@@ -13,10 +21,13 @@ from repro.core.objective import (balance_ok, centroids, cluster_sizes,
 from repro.core import baselines
 
 __all__ = [
-    "aba", "aba_batched", "aba_reference", "interleave_permutation",
+    "aba", "aba_batched", "aba_core", "aba_reference",
+    "interleave_permutation",
     "AuctionConfig", "auction_solve", "auction_solve_factored",
     "greedy_solve", "scipy_solve", "assignment_value",
-    "aba_auto", "default_plan", "hierarchical_aba", "balance_ok", "centroids",
+    "register_solver", "get_solver", "available_solvers",
+    "aba_auto", "default_plan", "hierarchical_aba", "hierarchical_core",
+    "balance_ok", "centroids",
     "cluster_sizes", "cut_cost", "diversity_per_cluster", "diversity_stats",
     "objective_centroid", "objective_pairwise", "total_pairwise", "baselines",
 ]

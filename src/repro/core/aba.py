@@ -2,19 +2,30 @@
 
 JAX implementation notes
 ------------------------
+* ONE rank-polymorphic masked core (:func:`aba_core`) carries every regime:
+  it takes a ``(G, M, D)`` stack of padded subproblems and the flat case is
+  simply the ``G = 1`` specialization.  The centrality sort, the Section
+  4.2/4.3 rearrangements, the pad-to-full-batches step and the Algorithm 1
+  scan therefore exist exactly once; ``aba`` / ``aba_batched`` are thin
+  deprecated shims over it (use :func:`repro.anticluster.anticluster`).
 * The batch loop (Algorithm 1) is a ``lax.scan`` carrying the anticluster
   centroids and per-cluster counts.  It is inherently sequential -- each LAP
   depends on the centroids updated by the previous batch -- so parallelism
   comes from (a) the dense vectorized work inside one step (cost matrix +
-  auction rounds) and (b) the hierarchical decomposition (Section 4.4), which
-  we ``vmap``/``shard_map`` over independent subproblems.
+  auction rounds, batched across the G subproblems) and (b) the hierarchical
+  decomposition (Section 4.4), which feeds group stacks through this same
+  core.
 * The LAP input drops the row-constant ``||x_j||^2`` term: adding a constant
   per row never changes the optimal assignment, so the cost matrix is just
   ``-2 x . mu^T + ||mu||^2`` -- one matmul (MXU) plus a bias.
+* The LAP backend comes from the solver registry
+  (:func:`repro.core.assignment.get_solver`); every backend solves the whole
+  ``(G, k, k)`` stack per scan step in one call.
 * The Section 4.2 interleave rearrangement is a *static* permutation of sorted
-  positions (depends only on N, K) and is precomputed in numpy at trace time.
+  positions (depends only on M, K) and is precomputed in numpy at trace time.
 * The Section 4.3 categorical rearrangement depends on data; it is expressed
-  as a single lexicographic sort key so it stays jit/vmap-compatible.
+  as a single lexicographic sort key so it stays jit/vmap-compatible, and it
+  is batched over the group axis (hierarchical levels keep stratifying).
 * ``valid_mask`` supports padded subproblems (hierarchical level >= 2 gathers
   groups whose sizes differ by one into a fixed-shape batch).
 """
@@ -22,18 +33,25 @@ JAX implementation notes
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.assignment import (AuctionConfig, auction_solve,
-                                   auction_solve_factored, greedy_solve)
+from repro.core.assignment import AuctionConfig, get_solver
 
 _MASK_COST = -1e9  # categorical upper-bound mask (paper 4.3)
 
 Variant = Literal["auto", "base", "interleave"]
+
+
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.{old} is deprecated; use {new} "
+        "(labels are guaranteed identical)",
+        DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -65,42 +83,218 @@ def categorical_sort_order(categories: jnp.ndarray, rank_in_cat: jnp.ndarray,
                            cat_counts: jnp.ndarray, k: int) -> jnp.ndarray:
     """Section 4.3: lexicographic order by (incomplete, block, category, pos).
 
-    ``rank_in_cat`` is each object's 0-based position among objects of its
-    category in centrality-sorted order.  The returned permutation yields the
-    rearranged list: full K-blocks alternate across categories by block
-    index; incomplete tail blocks come last in the same alternating order.
+    All inputs carry a leading group axis: ``categories`` / ``rank_in_cat``
+    are (G, M) in centrality-sorted order (``rank_in_cat`` is each object's
+    0-based position among objects of its category), ``cat_counts`` is
+    (G, n_categories).  The returned (G, M) permutation yields the rearranged
+    list per group: full K-blocks alternate across categories by block index;
+    incomplete tail blocks come last in the same alternating order.
     """
     block = rank_in_cat // k
     pos = rank_in_cat % k
-    n_g = cat_counts[categories]
+    n_g = jnp.take_along_axis(cat_counts, categories, axis=1)
     incomplete = ((block + 1) * k > n_g).astype(jnp.int32)
-    # lexsort: last key is primary
-    return jnp.lexsort((pos, categories, block, incomplete))
+    # lexsort: last key is primary; sorts each group row independently
+    return jnp.lexsort((pos, categories, block, incomplete), axis=-1)
 
 
 # ---------------------------------------------------------------------------
-# Core scan
+# The rank-polymorphic masked core
 # ---------------------------------------------------------------------------
-
-_SOLVERS = ("auction", "auction_fused", "greedy")
-
-
-def _solve(cost: jnp.ndarray, solver: str, auction_config: AuctionConfig):
-    if solver in ("auction", "auction_fused"):
-        # auction_solve is batched-native: (k, k) and (B, k, k) both take
-        # the same fused round loop.
-        return auction_solve(cost, auction_config)
-    if solver == "greedy":
-        if cost.ndim == 3:
-            return jax.vmap(greedy_solve)(cost)
-        return greedy_solve(cost)
-    raise ValueError(f"unknown solver {solver!r}; expected one of {_SOLVERS}")
-
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "variant", "n_categories", "solver", "auction_config"),
+    static_argnames=("k", "variant", "n_categories", "solver",
+                     "auction_config"),
 )
+def aba_core(
+    x: jnp.ndarray,
+    k: int,
+    valid_mask: jnp.ndarray | None = None,
+    *,
+    variant: Variant = "base",
+    categories: jnp.ndarray | None = None,
+    n_categories: int = 0,
+    solver: str = "auction",
+    auction_config: AuctionConfig = AuctionConfig(),
+) -> jnp.ndarray:
+    """Assignment-Based Anticlustering on a ``(G, M, D)`` stack of problems.
+
+    This is THE implementation of Algorithm 1 + variants 4.2/4.3: the flat
+    case is ``G = 1``, hierarchical levels and sharded shards pass their
+    padded group stacks directly.  Each scan step solves the whole
+    ``(G, k, k)`` LAP stack with ONE batched solver call.
+
+    Args:
+      x: (G, M, D) float features, groups padded to a common M.
+      k: number of anticlusters per group (static).
+      valid_mask: optional (G, M) bool; False rows are padding -- they never
+        influence real rows, but their returned labels are arbitrary in
+        [0, k): callers must mask them out.  ``None`` means all rows valid
+        (required for the static interleave rearrangement).
+      variant: "base", "interleave" (Section 4.2), or "auto" (interleave when
+        anticlusters are small, M/k <= 8, matching the paper's guidance).
+        Interleave needs the true row count to be static, so it is skipped
+        when ``valid_mask`` is given.
+      categories: optional (G, M) int32 in [0, n_categories) -- Section 4.3,
+        applied independently per group (stratification composes across
+        hierarchical levels).
+      n_categories: static number of categories (required with categories).
+      solver: registry name (see ``repro.core.assignment.register_solver``);
+        defaults: "auction" | "auction_fused" | "greedy" | "scipy".  A solver
+        with a matrix-free ``factored`` path (e.g. "auction_fused", whose
+        bidding top-2 streams through the Pallas ``bid_top2`` kernel) uses it
+        for G=1 category-free problems and falls back to its dense ``solve``
+        otherwise (the categorical upper-bound mask cannot be factored).
+
+    Returns:
+      (G, M) int32 labels in [0, k).
+    """
+    G, M, D = x.shape
+    if k > M:
+        raise ValueError(f"k={k} > M={M}")
+    solver_obj = get_solver(solver)
+    xf = x.astype(jnp.float32)
+    garange = jnp.arange(G)[:, None]
+
+    # --- per-group centrality sort (descending distance to centroid) -------
+    if valid_mask is None:
+        mu = jnp.mean(xf, axis=1)
+        dist = jnp.sum((xf - mu[:, None, :]) ** 2, axis=-1)
+    else:
+        w = valid_mask.astype(jnp.float32)
+        mu = jnp.sum(xf * w[..., None], axis=1) / jnp.maximum(
+            jnp.sum(w, axis=1), 1.0)[:, None]
+        dist = jnp.where(valid_mask,
+                         jnp.sum((xf - mu[:, None, :]) ** 2, axis=-1),
+                         -jnp.inf)  # padding sorts to the end
+    order = jnp.argsort(-dist, axis=1, stable=True).astype(jnp.int32)
+
+    # --- rearrangement ------------------------------------------------------
+    use_interleave = variant == "interleave" or (
+        variant == "auto" and M // k <= 8)
+    if categories is not None:
+        if n_categories <= 0:
+            raise ValueError("n_categories must be set with categories")
+        cat_i = categories.astype(jnp.int32)
+        cat_sorted = jnp.take_along_axis(cat_i, order, axis=1)
+        if valid_mask is not None:
+            # padding gets a virtual category that sorts last
+            cat_sorted = jnp.where(
+                jnp.take_along_axis(valid_mask, order, axis=1),
+                cat_sorted, n_categories - 1)
+        onehot = jax.nn.one_hot(cat_sorted, n_categories, dtype=jnp.int32)
+        rank_in_cat = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=1) - onehot,
+            cat_sorted[..., None], axis=2)[..., 0]
+        cat_counts = jnp.sum(onehot, axis=1)
+        order = jnp.take_along_axis(
+            order, categorical_sort_order(cat_sorted, rank_in_cat,
+                                          cat_counts, k), axis=1)
+    elif use_interleave and valid_mask is None:
+        order = order[:, jnp.asarray(interleave_permutation(M, k))]
+    # (interleave + valid_mask: the true row count is dynamic, so the static
+    #  rearrangement is unavailable; fall back to base order.)
+
+    # --- pad to full batches -------------------------------------------------
+    n_batches = -(-M // k)
+    pad = n_batches * k - M
+    order_p = (jnp.concatenate([order, jnp.full((G, pad), M, jnp.int32)], 1)
+               if pad else order)
+    real = order_p < M
+    if valid_mask is not None:
+        vm_ext = jnp.concatenate([valid_mask, jnp.zeros((G, 1), jnp.bool_)], 1)
+        real = jnp.logical_and(
+            real, jnp.take_along_axis(vm_ext, jnp.minimum(order_p, M), axis=1))
+    batches = order_p.reshape(G, n_batches, k)
+    real = real.reshape(G, n_batches, k)
+
+    x_ext = jnp.concatenate([xf, jnp.zeros((G, 1, D), jnp.float32)], 1)
+    if categories is not None:
+        cat_ext = jnp.concatenate(
+            [cat_i, jnp.zeros((G, 1), jnp.int32)], 1)
+
+    # --- batch 1 initializes centroids ---------------------------------------
+    first_idx = jnp.minimum(batches[:, 0], M)
+    centroids0 = jnp.take_along_axis(x_ext, first_idx[..., None], axis=1)
+    counts0 = real[:, 0].astype(jnp.int32)
+    labels0 = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (G, k))
+    if categories is not None:
+        valid_i = (jnp.ones((G, M), jnp.int32) if valid_mask is None
+                   else valid_mask.astype(jnp.int32))
+        ub = -(-jnp.maximum(
+            jnp.zeros((G, n_categories), jnp.int32).at[garange, cat_i].add(
+                valid_i), 0) // k)  # (G, C): ceil(|N_g| / k) per group
+        cat_counts0 = (
+            jnp.zeros((G, k, n_categories), jnp.int32)
+            .at[garange, labels0,
+                jnp.take_along_axis(cat_ext, first_idx, axis=1)]
+            .add(real[:, 0].astype(jnp.int32)))
+    else:
+        ub = None
+        cat_counts0 = jnp.zeros((G, k, 1), jnp.int32)
+
+    if n_batches == 1:
+        out = jnp.zeros((G, M + 1), jnp.int32).at[
+            garange, first_idx].set(labels0, mode="drop")
+        return out[:, :M]
+
+    # --- scan over remaining batches: one (G, k, k) LAP stack per step -----
+    fused = (solver_obj.factored is not None and ub is None and G == 1)
+
+    def step(carry, inp):
+        cents, counts, cat_counts = carry
+        idx, is_real = inp  # (G, k) each
+        xb = jnp.take_along_axis(x_ext, jnp.minimum(idx, M)[..., None], axis=1)
+        if ub is not None:
+            cb = jnp.take_along_axis(cat_ext, jnp.minimum(idx, M), axis=1)
+        if fused:
+            # matrix-free bidding: the (k, k) value matrix is never built;
+            # each auction round is one fused bid_top2 kernel call.
+            assign = solver_obj.factored(
+                xb[0], cents[0], is_real=is_real[0],
+                config=auction_config)[None]
+        else:
+            # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
+            cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
+                    + jnp.sum(cents * cents, axis=-1)[:, None, :])
+            cost = jnp.where(is_real[..., None], cost, 0.0)  # neutral dummies
+            if ub is not None:
+                full = (jnp.take_along_axis(
+                    cat_counts, cb[:, None, :], axis=2).swapaxes(1, 2)
+                    >= jnp.take_along_axis(ub, cb, axis=1)[..., None])
+                cost = jnp.where(jnp.logical_and(full, is_real[..., None]),
+                                 _MASK_COST, cost)
+            assign = solver_obj.solve(cost, auction_config)  # (G, k) batched
+        # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
+        new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
+        delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
+        upd = jnp.zeros_like(cents).at[garange, assign].add(
+            jnp.where(is_real[..., None], delta, 0.0))
+        cents = cents + upd / jnp.maximum(
+            new_counts, 1)[..., None].astype(jnp.float32)
+        if ub is not None:
+            cat_counts = cat_counts.at[garange, assign, cb].add(
+                is_real.astype(jnp.int32))
+        return (cents, new_counts, cat_counts), assign
+
+    (_, _, _), assigns = jax.lax.scan(
+        step, (centroids0, counts0, cat_counts0),
+        (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
+
+    labels_all = jnp.concatenate(
+        [labels0[:, None], assigns.swapaxes(0, 1)], axis=1)  # (G, B, k)
+    out = jnp.zeros((G, M + 1), jnp.int32).at[
+        garange, jnp.minimum(order_p, M)
+    ].set(labels_all.reshape(G, -1), mode="drop")
+    # padding rows of the *input* keep whatever label they drew (callers mask)
+    return out[:, :M]
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (exact-parity wrappers over aba_core)
+# ---------------------------------------------------------------------------
+
 def aba(
     x: jnp.ndarray,
     k: int,
@@ -112,151 +306,21 @@ def aba(
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
 ) -> jnp.ndarray:
-    """Assignment-Based Anticlustering (Algorithm 1 + variants 4.2/4.3).
+    """Deprecated: flat ABA on (n, d).  Use ``repro.anticluster.anticluster``.
 
-    Args:
-      x: (n, d) float features.
-      k: number of anticlusters (static).
-      variant: "base", "interleave" (Section 4.2), or "auto" (interleave when
-        anticlusters are small, n/k <= 8, matching the paper's guidance).
-      categories: optional (n,) int32 in [0, n_categories) -- Section 4.3.
-      n_categories: static number of categories (required with categories).
-      valid_mask: optional (n,) bool; False rows are padding -- they never
-        influence real rows, but their returned labels are arbitrary in
-        [0, k): callers must mask them out.
-      solver: "auction" | "auction_fused" | "greedy".  "auction_fused" runs
-        the LAP matrix-free: the bidding round's top-2 streams through the
-        Pallas ``bid_top2`` kernel (TPU; ``interpret=True`` on CPU) instead
-        of re-materializing the (k, k) value matrix every round.  It falls
-        back to the dense auction when ``categories`` is set (the categorical
-        upper-bound mask cannot be factored).
-
-    Returns:
-      (n,) int32 labels in [0, k).
+    Exactly ``aba_core`` with a leading group axis of size 1; labels are
+    bit-for-bit identical to ``anticluster(x, AnticlusterSpec(k=k, ...))``.
     """
-    n, _d = x.shape
-    if k > n:
-        raise ValueError(f"k={k} > n={n}")
-    xf = x.astype(jnp.float32)
-    n_valid = n if valid_mask is None else jnp.sum(valid_mask)
-
-    # --- centrality sort (descending distance to global centroid) ----------
-    if valid_mask is None:
-        mu = jnp.mean(xf, axis=0)
-        dist = jnp.sum((xf - mu[None]) ** 2, axis=1)
-    else:
-        w = valid_mask.astype(jnp.float32)
-        mu = jnp.sum(xf * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), 1.0)
-        dist = jnp.where(valid_mask, jnp.sum((xf - mu[None]) ** 2, axis=1), -jnp.inf)
-    order = jnp.argsort(-dist, stable=True)  # padding sorts to the end
-
-    # --- rearrangement ------------------------------------------------------
-    use_interleave = variant == "interleave" or (variant == "auto" and n // k <= 8)
-    if categories is not None:
-        if n_categories <= 0:
-            raise ValueError("n_categories must be set with categories")
-        cat_sorted = categories[order]
-        if valid_mask is not None:
-            # padding gets a virtual category that sorts last
-            cat_sorted = jnp.where(valid_mask[order], cat_sorted, n_categories - 1)
-        onehot = jax.nn.one_hot(cat_sorted, n_categories, dtype=jnp.int32)
-        rank_in_cat = (jnp.cumsum(onehot, axis=0) - onehot)[
-            jnp.arange(n), cat_sorted]
-        cat_counts = jnp.sum(onehot, axis=0)
-        order = order[categorical_sort_order(cat_sorted, rank_in_cat,
-                                             cat_counts, k)]
-    elif use_interleave and valid_mask is None:
-        order = order[jnp.asarray(interleave_permutation(n, k))]
-    # (interleave + valid_mask: the true n is dynamic, so the static
-    #  rearrangement is unavailable; fall back to base order.)
-
-    # --- pad to full batches -------------------------------------------------
-    n_batches = -(-n // k)
-    pad = n_batches * k - n
-    order_p = jnp.concatenate([order, jnp.full((pad,), n, jnp.int32)]) if pad else order
-    real = order_p < n
-    if valid_mask is not None:
-        vm_ext = jnp.concatenate([valid_mask, jnp.zeros((1,), jnp.bool_)])
-        real = jnp.logical_and(real, vm_ext[jnp.minimum(order_p, n)])
-    batches = order_p.reshape(n_batches, k)
-    real = real.reshape(n_batches, k)
-
-    x_ext = jnp.concatenate([xf, jnp.zeros((1, xf.shape[1]), jnp.float32)])
-    if categories is not None:
-        cat_ext = jnp.concatenate(
-            [categories.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
-
-    # --- batch 1 initializes centroids ---------------------------------------
-    first_idx = jnp.minimum(batches[0], n)
-    centroids0 = x_ext[first_idx]
-    counts0 = real[0].astype(jnp.int32)
-    labels0 = jnp.arange(k, dtype=jnp.int32)
-    if categories is not None:
-        ub = -(-jnp.maximum(
-            jnp.zeros((n_categories,), jnp.int32).at[categories].add(
-                1 if valid_mask is None else valid_mask.astype(jnp.int32)),
-            0) // k)  # ceil(|N_g| / k)
-        cat_counts0 = (
-            jnp.zeros((k, n_categories), jnp.int32)
-            .at[labels0, cat_ext[first_idx]]
-            .add(real[0].astype(jnp.int32)))
-    else:
-        ub = None
-        cat_counts0 = jnp.zeros((k, 1), jnp.int32)
-
-    if n_batches == 1:
-        out = jnp.zeros((n + 1,), jnp.int32).at[first_idx].set(labels0, mode="drop")
-        return out[:n]
-
-    # --- scan over remaining batches -----------------------------------------
-    fused = solver == "auction_fused" and ub is None
-
-    def step(carry, inp):
-        cents, counts, cat_counts = carry
-        idx, is_real = inp
-        xb = x_ext[jnp.minimum(idx, n)]
-        if fused:
-            # matrix-free bidding: the (k, k) value matrix is never built;
-            # each auction round is one fused bid_top2 kernel call.
-            assign = auction_solve_factored(xb, cents, is_real=is_real,
-                                            config=auction_config)
-        else:
-            # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
-            cost = -2.0 * (xb @ cents.T) + jnp.sum(cents * cents, axis=1)[None, :]
-            cost = jnp.where(is_real[:, None], cost, 0.0)  # neutral dummy rows
-            if ub is not None:
-                cb = cat_ext[jnp.minimum(idx, n)]
-                full = cat_counts[:, cb].T >= ub[cb][:, None]  # (k_rows, k_cols)
-                cost = jnp.where(jnp.logical_and(full, is_real[:, None]),
-                                 _MASK_COST, cost)
-            assign = _solve(cost, solver, auction_config)
-        # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
-        new_counts = counts.at[assign].add(is_real.astype(jnp.int32))
-        upd = jnp.zeros_like(cents).at[assign].add(
-            jnp.where(is_real[:, None], xb - cents[assign], 0.0))
-        cents = cents + upd / jnp.maximum(new_counts, 1)[:, None].astype(jnp.float32)
-        if ub is not None:
-            cat_counts = cat_counts.at[assign, cb].add(is_real.astype(jnp.int32))
-        return (cents, new_counts, cat_counts), assign
-
-    (_, _, _), assigns = jax.lax.scan(
-        step, (centroids0, counts0, cat_counts0), (batches[1:], real[1:]))
-
-    labels_all = jnp.concatenate([labels0[None], assigns], axis=0)  # (B, k)
-    out = jnp.zeros((n + 1,), jnp.int32).at[
-        jnp.minimum(batches.reshape(-1), n)
-    ].set(labels_all.reshape(-1), mode="drop")
-    # padding rows of the *input* keep label 0 (callers mask them out anyway)
-    del n_valid
-    return out[:n]
+    _deprecated("aba", "repro.anticluster.anticluster(x, spec)")
+    return aba_core(
+        x[None], k,
+        None if valid_mask is None else valid_mask[None],
+        variant=variant,
+        categories=None if categories is None else categories[None],
+        n_categories=n_categories, solver=solver,
+        auction_config=auction_config)[0]
 
 
-# ---------------------------------------------------------------------------
-# Batched ABA over a stack of padded subproblems
-# ---------------------------------------------------------------------------
-
-@functools.partial(
-    jax.jit, static_argnames=("k", "solver", "auction_config"))
 def aba_batched(
     x: jnp.ndarray,
     k: int,
@@ -265,95 +329,17 @@ def aba_batched(
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
 ) -> jnp.ndarray:
-    """Base-variant ABA on a stack of G padded subproblems at once.
+    """Deprecated: base-variant ABA on a (G, M, D) stack.  Use
+    ``repro.anticluster.anticluster`` (it accepts the stacked rank directly).
 
-    Semantically ``vmap(lambda xg, vm: aba(xg, k, valid_mask=vm))`` (the
-    masked path ignores interleave/categories), but each scan step solves the
-    whole (G, k, k) cost stack with ONE batched ``auction_solve`` call --
-    hierarchical levels and sharded shards go through a single fused solver
-    loop instead of G lock-stepped scalar solves.
-
-    Args:
-      x: (G, M, D) float features, groups padded to a common M.
-      k: number of anticlusters per group (static).
-      valid_mask: (G, M) bool; False rows are padding -- they never influence
-        real rows, but their returned labels are arbitrary in [0, k): callers
-        must mask them out (as ``hierarchical_aba`` does).
-      solver: "auction" | "auction_fused" | "greedy" ("auction_fused" takes
-        the dense batched engine here -- the fused kernel path is per-matrix).
-
-    Returns:
-      (G, M) int32 labels in [0, k).
+    This IS ``aba_core`` -- the legacy name solved the stack with a dense
+    batched engine, so a factored solver falls back to its dense path here.
     """
-    G, M, D = x.shape
-    if k > M:
-        raise ValueError(f"k={k} > M={M}")
+    _deprecated("aba_batched",
+                "repro.anticluster.anticluster(x, spec) on a (G, M, D) stack")
     solver = "auction" if solver == "auction_fused" else solver
-    xf = x.astype(jnp.float32)
-    garange = jnp.arange(G)[:, None]
-
-    # --- per-group centrality sort (masked) --------------------------------
-    w = valid_mask.astype(jnp.float32)
-    mu = jnp.sum(xf * w[..., None], axis=1) / jnp.maximum(
-        jnp.sum(w, axis=1), 1.0)[:, None]
-    dist = jnp.where(valid_mask,
-                     jnp.sum((xf - mu[:, None, :]) ** 2, axis=-1), -jnp.inf)
-    order = jnp.argsort(-dist, axis=1, stable=True).astype(jnp.int32)
-
-    # --- pad to full batches ------------------------------------------------
-    n_batches = -(-M // k)
-    pad = n_batches * k - M
-    order_p = (jnp.concatenate([order, jnp.full((G, pad), M, jnp.int32)], 1)
-               if pad else order)
-    real = order_p < M
-    vm_ext = jnp.concatenate([valid_mask, jnp.zeros((G, 1), jnp.bool_)], 1)
-    real = jnp.logical_and(
-        real, jnp.take_along_axis(vm_ext, jnp.minimum(order_p, M), axis=1))
-    batches = order_p.reshape(G, n_batches, k)
-    real = real.reshape(G, n_batches, k)
-
-    x_ext = jnp.concatenate([xf, jnp.zeros((G, 1, D), jnp.float32)], 1)
-
-    # --- batch 1 initializes centroids -------------------------------------
-    first_idx = jnp.minimum(batches[:, 0], M)
-    centroids0 = jnp.take_along_axis(x_ext, first_idx[..., None], axis=1)
-    counts0 = real[:, 0].astype(jnp.int32)
-    labels0 = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (G, k))
-
-    if n_batches == 1:
-        out = jnp.zeros((G, M + 1), jnp.int32).at[
-            garange, first_idx].set(labels0, mode="drop")
-        return out[:, :M]
-
-    # --- scan over remaining batches: one (G, k, k) LAP stack per step -----
-    def step(carry, inp):
-        cents, counts = carry
-        idx, is_real = inp  # (G, k) each
-        xb = jnp.take_along_axis(x_ext, jnp.minimum(idx, M)[..., None], axis=1)
-        # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
-        cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
-                + jnp.sum(cents * cents, axis=-1)[:, None, :])
-        cost = jnp.where(is_real[..., None], cost, 0.0)  # neutral dummy rows
-        assign = _solve(cost, solver, auction_config)  # (G, k) batched
-        new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
-        delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
-        upd = jnp.zeros_like(cents).at[garange, assign].add(
-            jnp.where(is_real[..., None], delta, 0.0))
-        cents = cents + upd / jnp.maximum(
-            new_counts, 1)[..., None].astype(jnp.float32)
-        return (cents, new_counts), assign
-
-    (_, _), assigns = jax.lax.scan(
-        step, (centroids0, counts0),
-        (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
-
-    labels_all = jnp.concatenate(
-        [labels0[:, None], assigns.swapaxes(0, 1)], axis=1)  # (G, B, k)
-    out = jnp.zeros((G, M + 1), jnp.int32).at[
-        garange, jnp.minimum(order_p, M)
-    ].set(labels_all.reshape(G, -1), mode="drop")
-    # padding rows of the *input* keep whatever label they drew (callers mask)
-    return out[:, :M]
+    return aba_core(x, k, valid_mask, variant="base", solver=solver,
+                    auction_config=auction_config)
 
 
 # ---------------------------------------------------------------------------

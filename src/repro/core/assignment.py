@@ -27,12 +27,19 @@ Solvers
                               value matrix is never re-materialized per round.
 - ``greedy_solve``            O(n^3) vectorized greedy, cheap lower-quality.
 - ``scipy_solve``             exact Hungarian via scipy (host-side oracle).
+
+The **solver registry** (``register_solver`` / ``get_solver``) is how the ABA
+core finds its LAP backend: every entry is a :class:`Solver` whose ``solve``
+accepts a ``(B, n, n)`` stack (or ``(n, n)``) and maximizes total cost, with
+an optional matrix-free ``factored`` path.  ``auction``, ``auction_fused``,
+``greedy`` and ``scipy`` are registered by default; benchmarks and users add
+LAP backends with one ``register_solver`` call instead of editing the core.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -318,3 +325,93 @@ def scipy_solve(cost: np.ndarray) -> np.ndarray:
 
 def assignment_value(cost: np.ndarray, row_to_col: np.ndarray) -> float:
     return float(np.asarray(cost)[np.arange(len(row_to_col)), row_to_col].sum())
+
+
+# ---------------------------------------------------------------------------
+# Solver registry
+# ---------------------------------------------------------------------------
+
+class Solver(NamedTuple):
+    """A registered LAP backend for the ABA core.
+
+    ``solve(cost, config)`` takes a ``(B, n, n)`` stack (or a single
+    ``(n, n)`` matrix) and returns ``row_to_col`` of shape ``(B, n)`` /
+    ``(n,)``, MAXIMIZING total cost; it must be jit/scan-safe (host solvers
+    wrap themselves in ``jax.pure_callback``).  ``factored`` is the optional
+    matrix-free path ``factored(x, c, is_real=..., config=...)`` used when
+    the cost factors as ``-2 x.c^T + ||c||^2`` (the fused-kernel auction).
+    """
+
+    solve: Callable
+    factored: Callable | None = None
+
+
+_REGISTRY: dict[str, Solver] = {}
+
+
+def register_solver(name: str, solve: Callable, *,
+                    factored: Callable | None = None,
+                    overwrite: bool = False) -> Solver:
+    """Register a LAP backend under ``name`` (see :class:`Solver`).
+
+    The ABA core resolves ``name`` at *trace* time (solver names are static
+    jit arguments), so ``overwrite=True`` does not reach already-compiled
+    core traces -- re-registering an existing name changes future traces
+    only.  Register under a fresh name (or clear jax caches) when comparing
+    backends within one process.
+    """
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"solver {name!r} already registered "
+                         f"(pass overwrite=True to replace it)")
+    solver = Solver(solve=solve, factored=factored)
+    _REGISTRY[name] = solver
+    return solver
+
+
+def get_solver(name: str) -> Solver:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown solver {name!r}; registered: "
+                       f"{available_solvers()}")
+    return _REGISTRY[name]
+
+
+def available_solvers() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _greedy_stack(cost: jnp.ndarray,
+                  config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+    del config  # greedy has no tuning knobs
+    if cost.ndim == 3:
+        return jax.vmap(greedy_solve)(cost)
+    return greedy_solve(cost)
+
+
+def _scipy_host_stack(cost: np.ndarray) -> np.ndarray:
+    return np.stack([scipy_solve(c) for c in cost])
+
+
+def scipy_solve_jax(cost: jnp.ndarray,
+                    config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+    """Exact Hungarian as a jit/scan-safe backend via ``pure_callback``.
+
+    The oracle solver, usable anywhere ``auction_solve`` is: each stack
+    instance round-trips to the host, so it is CPU-speed by construction --
+    the registry entry exists for exactness checks and tiny problems.
+    """
+    del config
+    cost = jnp.asarray(cost, jnp.float32)
+    squeeze = cost.ndim == 2
+    stack = cost[None] if squeeze else cost
+    out = jax.pure_callback(
+        _scipy_host_stack,
+        jax.ShapeDtypeStruct(stack.shape[:2], jnp.int32),
+        stack, vmap_method="sequential")
+    return out[0] if squeeze else out
+
+
+register_solver("auction", auction_solve)
+register_solver("auction_fused", auction_solve,
+                factored=auction_solve_factored)
+register_solver("greedy", _greedy_stack)
+register_solver("scipy", scipy_solve_jax)

@@ -3,14 +3,20 @@
 K = K_1 x ... x K_L.  Level 1 runs ABA on the full data with K_1; every later
 level runs ABA **independently on each group** -- the paper exploits this with
 threads, we exploit it with the batched-native auction engine (one
-``aba_batched`` call whose scan steps solve the whole (G, k, k) LAP stack in
-a single fused loop) on one device, and ``shard_map`` (``repro.core.sharded``)
+``aba_core`` call whose scan steps solve the whole (G, k, k) LAP stack in a
+single fused loop) on one device, and ``shard_map`` (``repro.core.sharded``)
 across the mesh.
 
 Groups whose sizes differ by one (Proposition 1) are gathered into a fixed
 (G, M) index matrix with a validity mask, so every level is a single batched
 ABA call with static shapes.  Total complexity O(N * sum_l K_l^2), minimized
 by balanced factors (Lemma 1) -- ``default_plan`` picks them.
+
+Categorical constraints (Section 4.3) compose across levels: each level
+stratifies within its groups, and since ``ceil(ceil(n/a)/b) == ceil(n/(ab))``
+(and likewise for floor), the final K = prod(plan) anticlusters satisfy the
+global constraint (5) exactly.  ``hierarchical_core`` therefore threads
+``categories`` through every level.
 """
 
 from __future__ import annotations
@@ -21,31 +27,50 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.aba import aba, aba_batched
+from repro.core.aba import aba_core
 from repro.core.assignment import AuctionConfig
 
 
-def default_plan(k: int, max_k: int = 512) -> tuple[int, ...]:
-    """Balanced factorization of k per Lemma 1 (each factor <= max_k).
-
-    Mirrors the paper's Table 5/7 settings, e.g. 5000 -> (10, 500) style
-    splits; prime k falls back to (k,).
-    """
+def _plan_search(k: int, max_k: int) -> tuple[int, ...] | None:
+    """Balanced factorization with backtracking; None if none is admissible."""
     if k <= max_k:
         return (k,)
     n_levels = 2
     while k ** (1.0 / n_levels) > max_k:
         n_levels += 1
     target = k ** (1.0 / n_levels)
-    best = None
-    for d in range(2, int(math.isqrt(k)) + 1):
+    cands, seen = [], set()
+    for d in range(2, math.isqrt(k) + 1):
         for cand in (d, k // d):
-            if k % cand == 0 and cand <= max_k:
-                if best is None or abs(cand - target) < abs(best - target):
-                    best = cand
-    if best is None:  # prime or no factor under max_k
-        return (k,)
-    return (best,) + default_plan(k // best, max_k)
+            if k % cand == 0 and 2 <= cand <= max_k and cand not in seen:
+                seen.add(cand)
+                cands.append(cand)
+    # stable sort keeps the legacy greedy preference among equidistant factors
+    cands.sort(key=lambda c: abs(c - target))
+    for cand in cands:
+        rest = _plan_search(k // cand, max_k)
+        if rest is not None:
+            return (cand,) + rest
+    return None
+
+
+def default_plan(k: int, max_k: int = 512) -> tuple[int, ...]:
+    """Balanced factorization of k per Lemma 1, every factor <= ``max_k``.
+
+    Mirrors the paper's Table 5/7 settings, e.g. 5000 -> (50, 100) style
+    splits.  The ``max_k`` contract is strict: when no factorization of k
+    into factors <= max_k exists (k prime, or k with an unavoidable prime
+    factor > max_k), a ValueError is raised instead of silently scheduling
+    the full k x k auction the hierarchy was supposed to prevent.
+    """
+    if k < 1:
+        raise ValueError(f"k={k} must be >= 1")
+    plan = _plan_search(k, max_k)
+    if plan is None:
+        raise ValueError(
+            f"k={k} has no factorization with every factor <= max_k={max_k} "
+            f"(prime factor too large); raise max_k or choose an adjacent k")
+    return plan
 
 
 def _regroup(glabels: jnp.ndarray, valid: jnp.ndarray, n_groups: int,
@@ -65,47 +90,67 @@ def _regroup(glabels: jnp.ndarray, valid: jnp.ndarray, n_groups: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("plan", "variant", "solver", "auction_config", "batched"),
+    static_argnames=("plan", "variant", "n_categories", "solver",
+                     "auction_config", "batched"),
 )
-def hierarchical_aba(
+def hierarchical_core(
     x: jnp.ndarray,
     plan: tuple[int, ...],
     *,
     variant: str = "auto",
+    categories: jnp.ndarray | None = None,
+    n_categories: int = 0,
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
     batched: bool = True,
 ) -> jnp.ndarray:
-    """ABA with L = len(plan) hierarchical levels; returns labels in [0, prod(plan)).
+    """ABA with L = len(plan) hierarchical levels; labels in [0, prod(plan)).
 
-    With ``batched=True`` (default) every level >= 2 is ONE ``aba_batched``
-    call whose scan steps each solve the whole (G, k_l, k_l) LAP stack in a
-    single batched auction loop; ``batched=False`` keeps the legacy ``vmap``
-    over per-group scalar solves (the two give identical labels -- the flag
-    exists so benchmarks can measure the difference).
+    Every level runs through the one rank-polymorphic ``aba_core``: level 1
+    as the G=1 flat case (with the full variant/categorical machinery), each
+    level >= 2 as ONE stacked call whose scan steps solve the whole
+    (G, k_l, k_l) LAP stack in a single batched auction loop.
+    ``batched=False`` keeps the legacy ``vmap`` over per-group G=1 cores (the
+    two give identical labels -- the flag exists so benchmarks can measure
+    the difference).  ``categories`` stratifies at every level (see module
+    docstring for why the global constraint (5) still holds exactly).
     """
     n = x.shape[0]
     k_total = math.prod(plan)
     if k_total > n:
         raise ValueError(f"prod(plan)={k_total} > n={n}")
-    kw = dict(variant=variant, solver=solver, auction_config=auction_config)
+    kw = dict(variant=variant, solver=solver, auction_config=auction_config,
+              n_categories=n_categories)
 
     xf = x.astype(jnp.float32)
     x_ext = jnp.concatenate([xf, jnp.zeros((1, xf.shape[1]), jnp.float32)])
+    if categories is not None:
+        cat_i = categories.astype(jnp.int32)
+        cat_ext = jnp.concatenate([cat_i, jnp.zeros((1,), jnp.int32)])
 
-    glabels = aba(xf, plan[0], **kw)
+    glabels = aba_core(
+        xf[None], plan[0],
+        categories=None if categories is None else cat_i[None], **kw)[0]
     n_groups = plan[0]
     m = -(-n // n_groups)  # static upper bound on group size
 
     for k_l in plan[1:]:
         idx, valid = _regroup(glabels, jnp.ones((n,), jnp.bool_), n_groups, m)
         xg = x_ext[jnp.minimum(idx, n)]  # (G, M, D)
+        cg = None if categories is None else cat_ext[jnp.minimum(idx, n)]
         if batched:
-            sub = aba_batched(xg, k_l, valid, solver=solver,
-                              auction_config=auction_config)
+            sub = aba_core(xg, k_l, valid, variant="base", categories=cg,
+                           n_categories=n_categories, solver=solver,
+                           auction_config=auction_config)
+        elif cg is None:
+            sub = jax.vmap(
+                lambda xx, vm: aba_core(xx[None], k_l, vm[None], **kw)[0]
+            )(xg, valid)
         else:
             sub = jax.vmap(
-                lambda xx, vm: aba(xx, k_l, valid_mask=vm, **kw))(xg, valid)
+                lambda xx, vm, cc: aba_core(
+                    xx[None], k_l, vm[None], categories=cc[None], **kw)[0]
+            )(xg, valid, cg)
         new_global = (jnp.arange(n_groups, dtype=jnp.int32)[:, None] * k_l + sub)
         glabels = jnp.zeros((n + 1,), jnp.int32).at[
             jnp.minimum(idx.reshape(-1), n)
@@ -115,9 +160,42 @@ def hierarchical_aba(
     return glabels
 
 
-def aba_auto(x, k: int, *, max_k: int = 512, batched: bool = True, **kw):
-    """ABA with an automatically chosen hierarchical plan (paper Table 5)."""
+# ---------------------------------------------------------------------------
+# Deprecated shims (exact-parity wrappers over hierarchical_core)
+# ---------------------------------------------------------------------------
+
+def hierarchical_aba(
+    x: jnp.ndarray,
+    plan: tuple[int, ...],
+    *,
+    variant: str = "auto",
+    solver: str = "auction",
+    auction_config: AuctionConfig = AuctionConfig(),
+    batched: bool = True,
+) -> jnp.ndarray:
+    """Deprecated: use ``repro.anticluster.anticluster`` with ``plan=...``."""
+    from repro.core.aba import _deprecated
+    _deprecated("hierarchical_aba",
+                "repro.anticluster.anticluster(x, spec) with spec.plan")
+    return hierarchical_core(x, plan, variant=variant, solver=solver,
+                             auction_config=auction_config, batched=batched)
+
+
+def aba_auto(x, k: int, *, max_k: int = 512, batched: bool = True,
+             variant: str = "auto", categories: jnp.ndarray | None = None,
+             n_categories: int = 0, solver: str = "auction",
+             auction_config: AuctionConfig = AuctionConfig()):
+    """Deprecated: use ``repro.anticluster.anticluster`` (plan="auto")."""
+    from repro.core.aba import _deprecated
+    _deprecated("aba_auto",
+                'repro.anticluster.anticluster(x, spec) with plan="auto"')
     plan = default_plan(k, max_k=max_k)
+    kw = dict(variant=variant, n_categories=n_categories, solver=solver,
+              auction_config=auction_config)
     if len(plan) == 1:
-        return aba(x, k, **kw)
-    return hierarchical_aba(x, plan, batched=batched, **kw)
+        return aba_core(
+            x[None], k,
+            categories=None if categories is None else categories[None],
+            **kw)[0]
+    return hierarchical_core(x, plan, categories=categories, batched=batched,
+                             **kw)

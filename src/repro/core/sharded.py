@@ -28,11 +28,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.assignment import AuctionConfig
-from repro.core.hierarchical import default_plan, hierarchical_aba
-from repro.core.aba import aba
+from repro.core.hierarchical import default_plan, hierarchical_core
+from repro.core.aba import aba_core
 
 
-def sharded_aba(
+def sharded_core(
     x: jnp.ndarray,
     k: int,
     mesh: Mesh,
@@ -49,7 +49,7 @@ def sharded_aba(
     ``k`` must be divisible by the total data-parallel shard count; each shard
     owns n/n_shards rows (pad the dataset first if needed).  ``batched``
     routes each shard's hierarchical levels through the single-call batched
-    auction engine (see ``hierarchical_aba``).
+    auction engine (see ``hierarchical_core``).
     """
     axes = tuple(a for a in data_axes if a in mesh.axis_names)
     n_shards = math.prod(mesh.shape[a] for a in axes)
@@ -63,9 +63,9 @@ def sharded_aba(
         # collapse the leading shard axes added by shard_map
         xs = x_local.reshape((-1, x_local.shape[-1]))
         if len(plan) == 1:
-            local = aba(xs, k_local, **kw)
+            local = aba_core(xs[None], k_local, **kw)[0]
         else:
-            local = hierarchical_aba(xs, plan, batched=batched, **kw)
+            local = hierarchical_core(xs, plan, batched=batched, **kw)
         offset = jnp.int32(0)
         for a in axes:
             offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
@@ -77,10 +77,19 @@ def sharded_aba(
     return fn(x)
 
 
+def sharded_aba(x: jnp.ndarray, k: int, mesh: Mesh, **kw):
+    """Deprecated: use ``repro.anticluster.anticluster`` with ``spec.mesh``
+    (or ``sharded_core`` for the raw jit-able labels)."""
+    from repro.core.aba import _deprecated
+    _deprecated("sharded_aba",
+                "repro.anticluster.anticluster(x, spec) with spec.mesh")
+    return sharded_core(x, k, mesh, **kw)
+
+
 def sharded_aba_lowerable(mesh: Mesh, n: int, d: int, k: int,
                           **kw):
     """(jitted fn, arg specs) for dry-run lowering of the ABA data step."""
-    fn = functools.partial(sharded_aba, k=k, mesh=mesh, **kw)
+    fn = functools.partial(sharded_core, k=k, mesh=mesh, **kw)
     jitted = jax.jit(
         fn,
         in_shardings=NamedSharding(mesh, P(("pod", "data") if "pod" in

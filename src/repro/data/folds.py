@@ -8,21 +8,26 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.aba import aba
-from repro.core.hierarchical import aba_auto
+from repro.anticluster import AnticlusterSpec, anticluster
 
 
 def aba_folds(features: np.ndarray, n_folds: int, *,
-              categories: np.ndarray | None = None, seed: int = 0):
-    """Returns fold labels (N,) int32 in [0, n_folds)."""
-    x = jnp.asarray(features)
-    if categories is not None:
-        g = int(categories.max()) + 1
-        labels = aba(x, n_folds, categories=jnp.asarray(categories),
-                     n_categories=g)
-    else:
-        labels = aba_auto(x, n_folds)
-    return np.asarray(labels)
+              categories: np.ndarray | None = None, seed: int = 0,
+              max_k: int = 512):
+    """Returns fold labels (N,) int32 in [0, n_folds).
+
+    Routes through the spec dispatcher, so ``n_folds`` larger than ``max_k``
+    takes the hierarchical plan -- including with ``categories``: each level
+    stratifies within its groups and ceil/floor compose across levels, so the
+    exact per-category constraint (5) holds for the final folds (see
+    ``repro.core.hierarchical``).  Legacy behaviour silently dropped the
+    hierarchy whenever categories were given.
+    """
+    del seed  # ABA is deterministic; kept for API stability
+    from repro.data.minibatch import _auto_or_flat_spec
+    spec = _auto_or_flat_spec(n_folds, max_k).replace(
+        categories=None if categories is None else jnp.asarray(categories))
+    return np.asarray(anticluster(jnp.asarray(features), spec).labels)
 
 
 def fold_splits(labels: np.ndarray, n_folds: int):

@@ -9,18 +9,39 @@ fault-tolerance story of the training loop leans on this.
 Two modes:
   * single-host: hierarchical ABA over the example embeddings;
   * sharded: each data-parallel shard anticlusters its local rows via
-    ``repro.core.sharded.sharded_aba`` (collective-free; the host sharding is
-    the top hierarchy level).
+    ``repro.core.sharded.sharded_core`` / ``anticluster(x, spec)`` with
+    ``spec.mesh`` (collective-free; the host sharding is the top hierarchy
+    level).
 """
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.hierarchical import aba_auto, default_plan
-from repro.core.aba import aba
+from repro.anticluster import AnticlusterSpec, anticluster
 from repro.core.objective import diversity_per_cluster
+
+
+def _auto_or_flat_spec(k: int, max_k: int) -> AnticlusterSpec:
+    """Auto-plan spec, falling back to the flat path when k is unfactorable.
+
+    ``default_plan`` enforces its max_k contract by raising (e.g. prime
+    k > max_k).  Here k is derived from the data size, not chosen by the
+    user, so a slow-but-correct flat solve beats a crash -- but loudly.
+    """
+    spec = AnticlusterSpec(k=k, plan="auto", max_k=max_k)
+    try:
+        spec.resolve_plan()
+        return spec
+    except ValueError:
+        warnings.warn(
+            f"k={k} has no hierarchical plan with factors <= {max_k}; "
+            "falling back to the flat single-level solve (slower at this k)",
+            RuntimeWarning, stacklevel=3)
+        return spec.replace(plan=None)
 
 
 class ABABatchSequencer:
@@ -42,8 +63,10 @@ class ABABatchSequencer:
         self.k = max(n // batch_size, 1)
         self.n_used = self.k * batch_size
         self.seed = seed
-        labels = np.asarray(aba_auto(jnp.asarray(features[:self.n_used]),
-                                     self.k, max_k=max_k))
+        self.result = anticluster(
+            jnp.asarray(features[:self.n_used]),
+            _auto_or_flat_spec(self.k, max_k))
+        labels = np.asarray(self.result.labels)
         order = np.argsort(labels, kind="stable")
         self.batches = order.reshape(self.k, -1) if self.k > 1 else (
             order[None, :])

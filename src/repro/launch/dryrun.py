@@ -142,14 +142,14 @@ ABA_CELLS = {
 
 def lower_aba_cell(shape_name: str, *, multi_pod: bool):
     from repro.core.assignment import AuctionConfig
-    from repro.core.sharded import sharded_aba
+    from repro.core.sharded import sharded_core
     spec = ABA_CELLS[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     acfg = AuctionConfig(fixed_rounds=spec["rounds"])
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     def fn(x):
-        return sharded_aba(x, spec["k"], mesh, data_axes=("pod", "data"),
+        return sharded_core(x, spec["k"], mesh, data_axes=("pod", "data"),
                            auction_config=acfg)
 
     x_sh = NamedSharding(mesh, P(dp_axes, None))

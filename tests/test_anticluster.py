@@ -1,0 +1,328 @@
+"""The spec-driven front door: dispatch parity with the legacy entry points
+(bit-for-bit), the solver registry, the default_plan max_k contract, the
+result object, and the public-API snapshot."""
+
+import math
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.anticluster
+import repro.core
+from repro.anticluster import (AnticlusterSpec, AnticlusterResult,
+                               anticluster, available_solvers, get_solver,
+                               register_solver)
+from repro.core import (aba, aba_auto, aba_batched, default_plan,
+                        hierarchical_aba)
+from repro.core.assignment import scipy_solve_jax
+from repro.core.objective import balance_ok, objective_centroid
+from repro.core.sharded import sharded_aba
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _legacy(fn, *args, **kw):
+    """Call a deprecated entry point, asserting it warns."""
+    with pytest.warns(DeprecationWarning):
+        return np.asarray(fn(*args, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Shim parity: every legacy entry point == the equivalent anticluster() call
+# ---------------------------------------------------------------------------
+
+def test_flat_auction_parity():
+    x = jnp.asarray(_data(300, 6))
+    res = anticluster(x, k=7, plan=None)
+    np.testing.assert_array_equal(_legacy(aba, x, 7), np.asarray(res.labels))
+    assert res.plan == (7,) and res.balanced
+
+
+def test_categorical_parity():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(_data(500, 5, 5))
+    cats = rng.integers(0, 4, size=500).astype(np.int32)
+    legacy = _legacy(aba, x, 6, categories=jnp.asarray(cats), n_categories=4)
+    res = anticluster(x, k=6, plan=None, categories=cats)
+    np.testing.assert_array_equal(legacy, np.asarray(res.labels))
+
+
+def test_hierarchical_auto_plan_parity():
+    x = jnp.asarray(_data(2000, 6, 1))
+    legacy = _legacy(aba_auto, x, 100, max_k=30)
+    res = anticluster(x, k=100, max_k=30)
+    assert len(res.plan) > 1  # a k=5000-style multi-level route, scaled down
+    np.testing.assert_array_equal(legacy, np.asarray(res.labels))
+    assert res.balanced
+
+
+def test_explicit_plan_parity():
+    x = jnp.asarray(_data(600, 6, 2))
+    legacy = _legacy(hierarchical_aba, x, (4, 6))
+    res = anticluster(x, k=24, plan=(4, 6))
+    np.testing.assert_array_equal(legacy, np.asarray(res.labels))
+
+
+def test_fused_solver_parity():
+    x = jnp.asarray(_data(300, 5, 3))
+    legacy = _legacy(aba, x, 6, solver="auction_fused")
+    res = anticluster(x, k=6, plan=None, solver="auction_fused")
+    np.testing.assert_array_equal(legacy, np.asarray(res.labels))
+
+
+def test_stacked_rank_parity():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(4, 40, 5)).astype(np.float32)
+    vm = np.zeros((4, 40), bool)
+    for g, v in enumerate([40, 39, 40, 37]):
+        vm[g, :v] = True
+    legacy = _legacy(aba_batched, jnp.asarray(x), 5, jnp.asarray(vm))
+    res = anticluster(x, k=5, plan=None, variant="base", valid_mask=vm)
+    np.testing.assert_array_equal(np.where(vm, legacy, 0),
+                                  np.where(vm, np.asarray(res.labels), 0))
+    assert res.cluster_sizes.shape == (4, 5)
+    np.testing.assert_array_equal(res.n_valid, [40, 39, 40, 37])
+    assert res.balanced
+
+
+def test_sharded_parity(one_device_mesh):
+    x = jnp.asarray(_data(128, 4, 6))
+    legacy = _legacy(sharded_aba, x, 8, one_device_mesh,
+                     data_axes=("data",))
+    res = anticluster(x, k=8, mesh=one_device_mesh, data_axes=("data",))
+    np.testing.assert_array_equal(legacy, np.asarray(res.labels))
+
+
+def test_every_legacy_entry_point_warns():
+    x = jnp.asarray(_data(60, 3, 7))
+    _legacy(aba, x, 4)
+    _legacy(aba_batched, x[None], 4, jnp.ones((1, 60), bool))
+    _legacy(hierarchical_aba, x, (2, 2))
+    _legacy(aba_auto, x, 4)
+
+
+# ---------------------------------------------------------------------------
+# Solver registry
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip_custom_solver():
+    name = "test_hungarian"
+    if name not in available_solvers():
+        register_solver(name, scipy_solve_jax)
+    assert name in available_solvers()
+    assert get_solver(name).solve is scipy_solve_jax
+    x = jnp.asarray(_data(200, 5, 8))
+    res = anticluster(x, k=5, plan=None, solver=name)
+    assert balance_ok(np.asarray(res.labels), 5)
+    # the exact-LAP backend tracks the numpy Algorithm-1 reference (float32
+    # vs float64 centroid accumulation is the only difference left)
+    from repro.core import aba_reference
+    ref = aba_reference(_data(200, 5, 8), 5)
+    o_res = float(objective_centroid(x, res.labels, 5))
+    o_ref = float(objective_centroid(x, jnp.asarray(ref), 5))
+    assert abs(o_res - o_ref) / abs(o_ref) < 2e-3
+
+
+def test_registry_duplicate_and_unknown():
+    with pytest.raises(ValueError, match="already registered"):
+        register_solver("auction", scipy_solve_jax)
+    with pytest.raises(KeyError, match="unknown solver"):
+        get_solver("no_such_solver")
+    with pytest.raises(KeyError, match="no_such_solver"):
+        anticluster(jnp.asarray(_data(40, 3)), k=4, solver="no_such_solver")
+
+
+def test_registry_default_entries():
+    for name in ("auction", "auction_fused", "greedy", "scipy"):
+        assert name in available_solvers()
+    assert get_solver("auction_fused").factored is not None
+
+
+# ---------------------------------------------------------------------------
+# default_plan max_k contract (regression: prime / unfactorable k)
+# ---------------------------------------------------------------------------
+
+def test_default_plan_respects_max_k():
+    for k, max_k in [(5000, 512), (5000, 100), (1018, 512), (720, 16),
+                     (131072, 256), (505, 101)]:
+        plan = default_plan(k, max_k)
+        assert math.prod(plan) == k
+        assert all(f <= max_k for f in plan), (k, max_k, plan)
+
+
+def test_default_plan_large_prime_factor_at_the_limit():
+    # 1030 = 2 * 5 * 103: admissible only because 103 <= max_k exactly; the
+    # legacy greedy returned (k,)-style contract violations in this regime
+    plan = default_plan(1030, 103)
+    assert math.prod(plan) == 1030 and all(f <= 103 for f in plan)
+    assert 103 in plan
+
+
+@pytest.mark.parametrize("k,max_k", [(521, 512), (515, 100), (1042, 512)])
+def test_default_plan_raises_when_unfactorable(k, max_k):
+    with pytest.raises(ValueError, match="max_k"):
+        default_plan(k, max_k)
+
+
+def test_spec_plan_validation():
+    with pytest.raises(ValueError, match="prod"):
+        AnticlusterSpec(k=10, plan=(3, 4))
+    with pytest.raises(ValueError, match="plan"):
+        AnticlusterSpec(k=10, plan="fastest")
+    with pytest.raises(ValueError, match="k="):
+        AnticlusterSpec(k=0)
+
+
+# ---------------------------------------------------------------------------
+# Categorical + hierarchy (the aba_folds fix) and the result object
+# ---------------------------------------------------------------------------
+
+def test_categorical_hierarchical_constraint5():
+    """Stratification composes across levels: constraint (5) holds globally."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(_data(600, 5, 9))
+    cats = rng.integers(0, 3, size=600).astype(np.int32)
+    res = anticluster(x, k=12, plan=(3, 4), categories=cats)
+    lab = np.asarray(res.labels)
+    assert res.balanced and balance_ok(lab, 12, 600)
+    for g in range(3):
+        counts = np.bincount(lab[cats == g], minlength=12)
+        ng = (cats == g).sum()
+        assert counts.min() >= ng // 12 and counts.max() <= -(-ng // 12)
+
+
+def test_folds_take_hierarchy_with_categories():
+    """aba_folds no longer drops the hierarchy when categories are given."""
+    from repro.data.folds import aba_folds
+    rng = np.random.default_rng(10)
+    feats = _data(400, 4, 10)
+    cats = rng.integers(0, 2, size=400).astype(np.int32)
+    labels = aba_folds(feats, 8, categories=cats, max_k=4)  # forces (k1, k2)
+    assert balance_ok(labels, 8, 400)
+    for g in range(2):
+        counts = np.bincount(labels[cats == g], minlength=8)
+        ng = (cats == g).sum()
+        assert counts.min() >= ng // 8 and counts.max() <= -(-ng // 8)
+
+
+@pytest.mark.parametrize("n,k", [(103, 5), (101, 4), (37, 7)])
+def test_result_sizes_when_k_does_not_divide_n(n, k):
+    """Proposition 1 through the result object: sizes differ by at most 1."""
+    res = anticluster(jnp.asarray(_data(n, 4, n)), k=k, plan=None)
+    sizes = np.asarray(res.cluster_sizes)
+    assert sizes.sum() == n and res.n_valid == n
+    assert sizes.min() == n // k and sizes.max() == -(-n // k)
+    assert res.balanced
+    assert balance_ok(np.asarray(res.labels), k, n)
+
+
+def test_result_is_a_pytree():
+    res = anticluster(jnp.asarray(_data(60, 3, 11)), k=4, plan=None)
+    leaves, treedef = jax.tree_util.tree_flatten(res)
+    res2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(res2, AnticlusterResult)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(res2.labels))
+    assert res2.plan == res.plan and res2.solver == res.solver
+
+
+def test_spec_overrides_and_replace():
+    x = jnp.asarray(_data(80, 3, 12))
+    spec = AnticlusterSpec(k=4, plan=None)
+    r1 = anticluster(x, spec)
+    r2 = anticluster(x, spec, solver="scipy")
+    assert r1.solver == "auction" and r2.solver == "scipy"
+    assert spec.replace(solver="greedy").solver == "greedy"
+    assert spec.solver == "auction"  # frozen: replace does not mutate
+
+
+def test_stats_false_skips_diversity_only():
+    x = jnp.asarray(_data(90, 3, 14))
+    full = anticluster(x, k=4, plan=None)
+    lean = anticluster(x, k=4, plan=None, stats=False)
+    np.testing.assert_array_equal(np.asarray(full.labels),
+                                  np.asarray(lean.labels))
+    np.testing.assert_array_equal(np.asarray(full.cluster_sizes),
+                                  np.asarray(lean.cluster_sizes))
+    assert float(lean.diversity_sd) == 0.0 and lean.balanced
+
+
+def test_result_stats_match_objective_helpers():
+    """Drift guard: the masked stats equal the flat objective helpers."""
+    from repro.anticluster import _result_stats
+    from repro.core.objective import cluster_sizes, diversity_stats
+    x = jnp.asarray(_data(150, 4, 15))
+    res = anticluster(x, k=6, plan=None)
+    np.testing.assert_array_equal(
+        np.asarray(res.cluster_sizes), np.asarray(cluster_sizes(res.labels, 6)))
+    sd, rng = diversity_stats(x, res.labels, 6)
+    np.testing.assert_allclose(float(res.diversity_sd), float(sd), rtol=1e-5)
+    np.testing.assert_allclose(float(res.diversity_range), float(rng),
+                               rtol=1e-5)
+
+
+def test_data_layer_falls_back_flat_on_unfactorable_k():
+    """k derived from data size must not crash when it has no plan."""
+    from repro.data.minibatch import ABABatchSequencer
+    from repro.data.folds import aba_folds
+    feats = _data(56, 4, 16)
+    with pytest.warns(RuntimeWarning, match="flat single-level"):
+        seq = ABABatchSequencer(feats, 8, max_k=4)  # k = 7, prime > max_k
+    assert len(seq) == 7 and seq.result.plan == (7,)
+    with pytest.warns(RuntimeWarning, match="flat single-level"):
+        labels = aba_folds(feats, 7, max_k=4)
+    assert balance_ok(labels, 7, 56)
+
+
+def test_kplus_rejects_stacked_or_masked_input():
+    x3 = _data(60, 4, 17).reshape(3, 20, 4)
+    with pytest.raises(NotImplementedError, match="kplus"):
+        anticluster(x3, k=4, plan=None, kplus_moments=2)
+    x2 = _data(40, 4, 18)
+    with pytest.raises(NotImplementedError, match="kplus"):
+        anticluster(x2, k=4, plan=None, kplus_moments=2,
+                    valid_mask=np.arange(40) < 30)
+
+
+def test_kplus_spec_field():
+    x = _data(240, 3, 13)
+    res = anticluster(x, k=4, plan=None, kplus_moments=2)
+    assert res.balanced
+    from repro.core.kplus import moment_spread
+    lab = np.asarray(res.labels)
+    plain = np.asarray(anticluster(x, k=4, plan=None).labels)
+    assert (moment_spread(x, lab, 4, moment=2)
+            <= moment_spread(x, plain, 4, moment=2) * 1.5)
+
+
+# ---------------------------------------------------------------------------
+# Public-API snapshot
+# ---------------------------------------------------------------------------
+
+def test_public_api_snapshot():
+    assert repro.anticluster.__all__ == [
+        "AnticlusterSpec", "AnticlusterResult", "anticluster",
+        "register_solver", "get_solver", "available_solvers",
+    ]
+    assert repro.core.__all__ == [
+        "aba", "aba_batched", "aba_core", "aba_reference",
+        "interleave_permutation",
+        "AuctionConfig", "auction_solve", "auction_solve_factored",
+        "greedy_solve", "scipy_solve", "assignment_value",
+        "register_solver", "get_solver", "available_solvers",
+        "aba_auto", "default_plan", "hierarchical_aba", "hierarchical_core",
+        "balance_ok", "centroids",
+        "cluster_sizes", "cut_cost", "diversity_per_cluster",
+        "diversity_stats",
+        "objective_centroid", "objective_pairwise", "total_pairwise",
+        "baselines",
+    ]
+    for name in repro.core.__all__:
+        assert hasattr(repro.core, name)
+    for name in repro.anticluster.__all__:
+        assert hasattr(repro.anticluster, name)
