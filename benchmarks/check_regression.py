@@ -1,0 +1,76 @@
+"""CI gate on the benchmark trajectory: fail if any smoke bench regresses.
+
+Compares a freshly emitted ``BENCH_*.json`` (``benchmarks.common``'s
+``BENCH_SCHEMA`` rows) against the checked-in baseline under
+``benchmarks/baselines/`` and exits non-zero when any matching ``bench`` id
+got more than ``--factor`` times slower.  Benches present only on one side
+are reported but never fail the gate (new benchmarks should not need a
+baseline update in the same commit to go green; stale baseline rows rot
+loudly instead of silently).
+
+Usage (exactly what ci.yml runs):
+
+    python -m benchmarks.check_regression BENCH_kernel.json \
+        benchmarks/baselines/BENCH_kernel.json --factor 2.0
+
+Baselines are refreshed by copying a representative run's JSON over the
+baseline file (they are wall-clock numbers from a CI-class machine; the 2x
+default factor absorbs runner jitter, not algorithmic regressions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["bench"]: r for r in rows}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly emitted BENCH_*.json")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when wall_s exceeds factor * baseline")
+    ap.add_argument("--min-seconds", type=float, default=0.005,
+                    help="both sides are floored to this before the ratio: "
+                         "sub-millisecond rows are pure scheduler jitter on "
+                         "shared runners, so a 0.5ms bench only fails once "
+                         "it crosses factor * max(baseline, floor)")
+    args = ap.parse_args(argv)
+
+    cur, base = load(args.current), load(args.baseline)
+    failures, checked = [], 0
+    for bench, row in sorted(cur.items()):
+        b = base.get(bench)
+        if b is None:
+            print(f"NEW       {bench}: {row['wall_s']:.4f}s (no baseline)")
+            continue
+        checked += 1
+        ratio = (max(row["wall_s"], args.min_seconds)
+                 / max(b["wall_s"], args.min_seconds, 1e-9))
+        status = "REGRESSED" if ratio > args.factor else "ok"
+        print(f"{status:9s} {bench}: {row['wall_s']:.4f}s vs "
+              f"baseline {b['wall_s']:.4f}s ({ratio:.2f}x floored)")
+        if ratio > args.factor:
+            failures.append((bench, ratio))
+    for bench in sorted(set(base) - set(cur)):
+        print(f"STALE     {bench}: in baseline but not emitted")
+
+    if failures:
+        print(f"\n{len(failures)} bench(es) regressed past "
+              f"{args.factor:.1f}x: "
+              + ", ".join(f"{b} ({r:.2f}x)" for b, r in failures))
+        return 1
+    print(f"\nregression gate OK ({checked} benches within "
+          f"{args.factor:.1f}x of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

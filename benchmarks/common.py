@@ -11,10 +11,42 @@ roofline instead.
 
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 import jax.numpy as jnp
+
+# The one benchmark-trajectory schema: every BENCH_*.json is a list of rows
+# with exactly these keys.  ``bench`` is a stable slash-separated id (the
+# regression gate matches on it), ``shape`` a human-readable "NxKxD" string,
+# ``wall_s`` seconds (warm, compile excluded via timed()'s warmup call), and
+# ``objective`` the workload's quality number (null for pure-speed kernels).
+BENCH_SCHEMA = ("bench", "shape", "wall_s", "objective")
+
+
+class BenchRecorder:
+    """Accumulates schema rows and writes a machine-readable BENCH_*.json.
+
+    CI uploads the JSON as a workflow artifact and feeds it to
+    ``benchmarks.check_regression`` against the checked-in baseline under
+    ``benchmarks/baselines/`` -- the benchmark *trajectory* is part of the
+    test surface, not just a printout.
+    """
+
+    def __init__(self):
+        self.rows: list[dict] = []
+
+    def add(self, bench: str, shape: str, wall_s: float,
+            objective: float | None = None):
+        self.rows.append(dict(zip(BENCH_SCHEMA, (
+            bench, shape, float(wall_s),
+            None if objective is None else float(objective)))))
+
+    def write(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.rows, f, indent=1)
+        print(f"# wrote {len(self.rows)} rows -> {path}", flush=True)
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

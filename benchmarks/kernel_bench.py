@@ -16,7 +16,9 @@ Reports three stories:
    (``repro.core.assignment.available_solvers``) on the same stack, so a
    ``register_solver``-ed backend shows up here with zero edits.
 
-``--smoke`` runs tiny shapes only (the CI smoke step).
+``--smoke`` runs tiny shapes only (the CI smoke step) and, like every run,
+writes the machine-readable trajectory to ``BENCH_kernel.json``
+(``benchmarks.common.BENCH_SCHEMA``) for the CI regression gate.
 """
 
 from __future__ import annotations
@@ -27,14 +29,16 @@ import jax.numpy as jnp
 
 from repro.core.assignment import (AuctionConfig, auction_solve,
                                    available_solvers, get_solver, scipy_solve)
-from repro.kernels import bid_top2, bid_top2_ref, cdist_ref
+from repro.kernels import bid_top2, bid_top2_ref, cdist, cdist_ref
 from repro.kernels.ops import resolve_path
 
-from benchmarks.common import row, timed
+from benchmarks.common import BenchRecorder, row, timed
 
 
-def run(full: bool = False, smoke: bool = False):
+def run(full: bool = False, smoke: bool = False,
+        json_path: str = "BENCH_kernel.json"):
     rng = np.random.default_rng(0)
+    rec = BenchRecorder()
 
     cdist_shapes = [(256, 256, 32)] if smoke else [(512, 512, 64),
                                                    (1024, 1024, 256)]
@@ -45,6 +49,15 @@ def run(full: bool = False, smoke: bool = False):
         ai = (2 * m * k * d) / ((m * d + k * d + m * k) * 4)
         row(f"kernel/cdist_ref/{m}x{k}x{d}", t,
             f"arith_intensity={ai:.1f}flops_per_byte")
+        rec.add(f"kernel/cdist_ref/{m}x{k}x{d}", f"{m}x{k}x{d}", t)
+        # leading-chunk-dim dispatch (the streaming path's call shape):
+        # the same rows as (C, m/C, d) chunks against shared centroids
+        xc = x.reshape(4, m // 4, d)
+        _, t_c = timed(lambda: cdist(xc, c).block_until_ready(), repeats=5)
+        row(f"kernel/cdist_chunked/4x{m // 4}x{k}x{d}", t_c,
+            f"flat_us={t * 1e6:.1f};path={resolve_path(m, k)}")
+        rec.add(f"kernel/cdist_chunked/4x{m // 4}x{k}x{d}",
+                f"4x{m // 4}x{k}x{d}", t_c)
 
     # --- fused vs naive bidding round ------------------------------------
     bid_shapes = [(128, 256, 16)] if smoke else \
@@ -60,6 +73,7 @@ def run(full: bool = False, smoke: bool = False):
         row(f"kernel/bid_top2_fused/{m}x{k}x{d}", t_f,
             f"naive_us={t_n * 1e6:.1f};speedup={t_n / t_f:.2f}x;"
             f"path={resolve_path(m, k)}")
+        rec.add(f"kernel/bid_top2_fused/{m}x{k}x{d}", f"{m}x{k}x{d}", t_f)
 
     # --- batched vs vmapped auction solver -------------------------------
     stack_shapes = [(8, 24)] if smoke else \
@@ -73,6 +87,7 @@ def run(full: bool = False, smoke: bool = False):
         row(f"solver/auction_batched/{B}x{n}", t_b,
             f"vmap_us={t_v * 1e6:.1f};speedup={t_v / t_b:.2f}x;"
             f"solves_per_s={B / t_b:.0f}")
+        rec.add(f"solver/auction_batched/{B}x{n}", f"{B}x{n}", t_b)
 
     solver_ns = (24,) if smoke else (64, 128, 256) + ((512,) if full else ())
     for n in solver_ns:
@@ -82,6 +97,7 @@ def run(full: bool = False, smoke: bool = False):
         cn = np.asarray(cmat)
         _, t_s = timed(lambda: scipy_solve(cn), repeats=3)
         row(f"solver/auction/{n}", t_a, f"scipy_lapjv_us={t_s*1e6:.0f}")
+        rec.add(f"solver/auction/{n}", f"{n}x{n}", t_a)
 
     # --- registry sweep: every registered LAP backend on one stack --------
     B, n = (4, 16) if smoke else (16, 64)
@@ -94,6 +110,9 @@ def run(full: bool = False, smoke: bool = False):
         row(f"solver/registry/{name}/{B}x{n}", t,
             f"solves_per_s={B / t:.0f};"
             f"factored={'yes' if solver.factored else 'no'}")
+        rec.add(f"solver/registry/{name}/{B}x{n}", f"{B}x{n}", t)
+
+    rec.write(json_path)
 
 
 if __name__ == "__main__":
@@ -103,5 +122,7 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes only (CI smoke step)")
+    ap.add_argument("--json", default="BENCH_kernel.json",
+                    help="trajectory output path (BENCH_SCHEMA rows)")
     args = ap.parse_args()
-    run(full=args.full, smoke=args.smoke)
+    run(full=args.full, smoke=args.smoke, json_path=args.json)

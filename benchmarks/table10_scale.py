@@ -1,0 +1,105 @@
+"""Paper Tables 8/10 scale trajectory: streaming (chunked, matrix-free) ABA
+vs the dense one-shot core across dataset sizes.
+
+The paper's headline claim is million-object instances "within short running
+times"; the streaming execution path (``chunk_size`` in ``AnticlusterSpec``,
+``repro.core.aba.aba_stream`` underneath) is what carries that regime here:
+peak live memory beyond the input is O(chunk*d + k*d) instead of the dense
+core's O(n*d) permuted copy, and with the factored auction the (k, k) value
+matrix is never materialized per round either.
+
+Every run emits the machine-readable trajectory ``BENCH_scale.json``
+(``benchmarks.common.BENCH_SCHEMA``); CI runs ``--smoke`` (downscaled
+shapes, CPU-interpret-friendly), uploads the JSON as a workflow artifact
+and gates on ``benchmarks.check_regression`` against the checked-in
+baseline.  ``--full`` sweeps up to the paper's 10^6-class shapes (TPU or a
+patient CPU).  The smallest shape always re-checks the parity contract:
+``chunk_size >= n`` must reproduce the dense labels bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.anticluster import anticluster
+from repro.core import objective_centroid
+from repro.data import synthetic
+
+from benchmarks.common import BenchRecorder, dev_pct, row
+
+
+def _labels(x, k, chunk, max_k, solver):
+    t0 = time.time()
+    res = anticluster(x, k=k, plan="auto", max_k=max_k, chunk_size=chunk,
+                      solver=solver, stats=False)
+    lab = np.asarray(res.labels)  # blocks; anticluster already synced labels
+    return lab, time.time() - t0, res
+
+
+def run(full: bool = False, smoke: bool = False,
+        json_path: str = "BENCH_scale.json"):
+    rec = BenchRecorder()
+    # (n, d, k, chunk, also_run_dense)
+    if smoke:
+        shapes = [(2048, 8, 16, 512, True),
+                  (8192, 8, 32, 1024, True)]
+    elif full:
+        shapes = [(131072, 32, 256, 8192, True),
+                  (1048576, 32, 4096, 8192, False),  # the Table-10 regime
+                  (1048576, 32, 131072, 8192, False)]
+    else:
+        shapes = [(32768, 16, 64, 4096, True),
+                  (131072, 16, 256, 8192, False)]
+    max_k = 256
+    print(f"# table10_scale: n,d,k,chunk,stream_s,dense_s,ofv_stream,dev%")
+
+    for i, (n, d, k, chunk, run_dense) in enumerate(shapes):
+        x = jnp.asarray(synthetic.make("lowrank", n, d, seed=0))
+        # warm (compile) then measure: trajectory rows are warm wall times
+        _labels(x, k, chunk, max_k, "auction_fused")
+        lab_s, t_s, _ = _labels(x, k, chunk, max_k, "auction_fused")
+        o_s = float(objective_centroid(x, jnp.asarray(lab_s), k))
+        counts = np.bincount(lab_s, minlength=k)
+        assert counts.min() >= n // k and counts.max() <= -(-n // k), \
+            "streaming path lost balance"
+        rec.add(f"scale/stream/n{n}_k{k}", f"{n}x{d}x{k}", t_s, o_s)
+
+        t_d, o_d = float("nan"), float("nan")
+        if run_dense:
+            _labels(x, k, None, max_k, "auction")
+            lab_d, t_d, _ = _labels(x, k, None, max_k, "auction")
+            o_d = float(objective_centroid(x, jnp.asarray(lab_d), k))
+            rec.add(f"scale/dense/n{n}_k{k}", f"{n}x{d}x{k}", t_d, o_d)
+        if i == 0:
+            # the parity contract, re-proven at benchmark scale: one chunk
+            # covering all rows reproduces the dense labels bit-for-bit
+            lab_p, _, _ = _labels(x, k, n, max_k, "auction")
+            lab_f, _, _ = _labels(x, k, None, max_k, "auction")
+            assert np.array_equal(lab_p, lab_f), \
+                "chunk_size >= n must be bit-identical to the dense path"
+            print("# parity: chunk_size>=n == dense (bit-for-bit) OK")
+
+        dev = dev_pct(o_s, o_d) if run_dense else float("nan")
+        print(f"table10,{n},{d},{k},{chunk},{t_s:.2f},{t_d:.2f},"
+              f"{o_s:.1f},{dev:+.4f}", flush=True)
+        row(f"scale/stream/n{n}_k{k}", t_s,
+            f"dense_s={t_d:.2f};ofv={o_s:.1f};dev_dense={dev:+.3f}%")
+
+    rec.write(json_path)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes (10^6 objects)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes only (CI smoke step)")
+    ap.add_argument("--json", default="BENCH_scale.json",
+                    help="trajectory output path (BENCH_SCHEMA rows)")
+    args = ap.parse_args()
+    run(full=args.full, smoke=args.smoke, json_path=args.json)

@@ -11,10 +11,14 @@ One entry point replaces the six legacy ones (``aba``, ``aba_batched``,
     res = anticluster(x, k=512, mesh=mesh)                # shard_map across mesh
     res.labels, res.plan, res.cluster_sizes, res.balanced # result pytree
 
-``anticluster`` routes flat -> hierarchical -> sharded execution from the
-spec alone; every regime runs on the ONE rank-polymorphic masked core
-(``repro.core.aba.aba_core``) so there is exactly one implementation of the
-centrality sort / padding / Algorithm-1 scan.  The LAP backend is looked up
+``anticluster`` routes flat -> streaming -> hierarchical -> sharded
+execution from the spec alone; every regime runs on the ONE rank-polymorphic
+masked core (``repro.core.aba.aba_core``) so there is exactly one
+implementation of the centrality sort / padding / Algorithm-1 scan.  At
+million-object scale (``chunk_size="auto"`` or an explicit int) the flat
+level runs through the chunked matrix-free twin ``repro.core.aba.aba_stream``
+(same per-batch step, O(chunk*d + k*d) working set, bit-identical labels
+when ``chunk_size >= n``).  The LAP backend is looked up
 in the solver registry (``register_solver`` / ``get_solver``), so new
 backends are a registry entry, not a seventh entry point.
 
@@ -33,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aba import aba_core
+from repro.core.aba import aba_core, aba_stream
 from repro.core.assignment import (AuctionConfig, available_solvers,
                                    get_solver, register_solver)
 from repro.core.hierarchical import default_plan, hierarchical_core
@@ -43,6 +47,14 @@ __all__ = [
     "AnticlusterSpec", "AnticlusterResult", "anticluster",
     "register_solver", "get_solver", "available_solvers",
 ]
+
+# Streaming auto-selection thresholds: below _AUTO_STREAM_MIN rows the dense
+# core's one-shot gather is cheap and ``chunk_size="auto"`` stays flat; at or
+# above it the streaming core engages with ~_AUTO_CHUNK_ROWS rows per chunk
+# (rounded to a multiple of k inside ``aba_stream``), keeping the working
+# set O(chunk*d + k*d) regardless of n.
+_AUTO_STREAM_MIN = 1 << 16   # 65536 rows
+_AUTO_CHUNK_ROWS = 1 << 13   # 8192 rows per chunk
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -65,6 +77,19 @@ class AnticlusterSpec:
       plan: hierarchy plan (Section 4.4).  ``"auto"`` factorizes k with
         ``default_plan`` (every factor <= ``max_k``); a tuple is used as-is
         (must multiply to k); ``None`` forces the flat single-level path.
+      chunk_size: streaming execution (million-scale path).  ``None`` keeps
+        the dense one-shot core; an int streams the centrality-sorted object
+        list through ``repro.core.aba.aba_stream`` in chunks of that many
+        rows (peak live memory O(chunk_size*d + k*d) beyond the input);
+        ``"auto"`` streams only at scale (n >= 65536 rows, ~8192-row chunks)
+        and additionally upgrades the default "auction" solver to
+        "auction_fused" so each batch LAP is matrix-free (the (k, k) value
+        matrix is never built -- the paper's Tables 8/10 operating range).
+        Applies to the flat path, the first (full-data) hierarchical level,
+        and each shard's local solve under ``mesh``.  Streaming needs flat
+        category-free unmasked input: an explicit int raises otherwise,
+        ``"auto"`` quietly stays dense.  With ``chunk_size >= n`` labels are
+        bit-for-bit identical to the dense path.
       max_k: largest admissible LAP size for the auto plan.
       mesh: optional ``jax.sharding.Mesh`` -- routes through ``shard_map``
         (the data sharding becomes the first hierarchy level); k must be
@@ -89,6 +114,7 @@ class AnticlusterSpec:
     solver: str = "auction"
     auction_config: AuctionConfig = AuctionConfig()
     plan: Any = "auto"
+    chunk_size: Any = None
     max_k: int = 512
     mesh: Any = None
     data_axes: tuple[str, ...] = ("pod", "data")
@@ -108,6 +134,11 @@ class AnticlusterSpec:
                 and self.plan != "auto":
             raise ValueError(f'plan must be "auto", a tuple, or None; '
                              f"got {self.plan!r}")
+        if self.chunk_size is not None and self.chunk_size != "auto" and \
+                (not isinstance(self.chunk_size, int)
+                 or self.chunk_size < 1):
+            raise ValueError(f'chunk_size must be None, "auto", or a '
+                             f"positive int; got {self.chunk_size!r}")
 
     def replace(self, **overrides) -> "AnticlusterSpec":
         return dataclasses.replace(self, **overrides)
@@ -127,6 +158,21 @@ class AnticlusterSpec:
                     f"k={k} must be divisible by shard count {n_shards}")
             k = k // n_shards
         return default_plan(k, max_k=self.max_k)
+
+    def resolve_chunk(self, n: int, k: int) -> int | None:
+        """Concrete per-level chunk size for ``n`` rows, or None (dense).
+
+        ``k`` is the level's anticluster count (the chunk is rounded to a
+        multiple of it inside ``aba_stream``); "auto" engages only when the
+        level is large enough for chunking to pay for itself.
+        """
+        if self.chunk_size is None:
+            return None
+        if self.chunk_size == "auto":
+            if n < _AUTO_STREAM_MIN:
+                return None
+            return max(k, _AUTO_CHUNK_ROWS)
+        return int(self.chunk_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +213,14 @@ jax.tree_util.register_dataclass(
     data_fields=["labels", "cluster_sizes", "diversity_sd",
                  "diversity_range"],
     meta_fields=["k", "plan", "solver", "variant"])
+
+
+def _mesh_shards(spec: "AnticlusterSpec") -> int:
+    """Total data-parallel shard count for the spec's mesh (1 if no mesh)."""
+    if spec.mesh is None:
+        return 1
+    axes = [a for a in spec.data_axes if a in spec.mesh.axis_names]
+    return math.prod(spec.mesh.shape[a] for a in axes)
 
 
 def _result_stats(x, labels, k, valid_mask, diversity=True):
@@ -249,7 +303,26 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
         spec.valid_mask, jnp.bool_)
     get_solver(spec.solver)  # fail fast with the registered-name list
     plan = spec.resolve_plan()
-    kw = dict(variant=spec.variant, solver=spec.solver,
+
+    # --- streaming route selection (million-scale path) --------------------
+    streamable = x.ndim == 2 and cats is None and vm is None
+    if spec.chunk_size is not None and not streamable \
+            and spec.chunk_size != "auto":
+        raise NotImplementedError(
+            "chunk_size streaming needs flat (n, d) input without "
+            'categories or valid_mask; chunk_size="auto" falls back to the '
+            "dense core for those")
+
+    def chunk_for(n_level: int, k_level: int) -> int | None:
+        return spec.resolve_chunk(n_level, k_level) if streamable else None
+
+    solver = spec.solver
+    if spec.chunk_size == "auto" and solver == "auction" and streamable:
+        n_level = x.shape[0] // max(_mesh_shards(spec), 1)
+        if chunk_for(n_level, plan[0]) is not None:
+            # at scale the matrix-free factored auction is the default engine
+            solver = "auction_fused"
+    kw = dict(variant=spec.variant, solver=solver,
               auction_config=spec.auction_config)
 
     if spec.mesh is not None:
@@ -262,11 +335,13 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
             raise NotImplementedError(
                 'mesh execution resolves its per-shard plan from max_k; '
                 'use plan="auto"')
-        axes = [a for a in spec.data_axes if a in spec.mesh.axis_names]
-        n_shards = math.prod(spec.mesh.shape[a] for a in axes)
+        n_shards = _mesh_shards(spec)
         labels = sharded_core(x, spec.k, spec.mesh,
                               data_axes=spec.data_axes, max_k=spec.max_k,
-                              batched=spec.batched, **kw)
+                              batched=spec.batched,
+                              chunk_size=chunk_for(
+                                  x.shape[0] // max(n_shards, 1), plan[0]),
+                              **kw)
         plan = ((n_shards,) + plan) if n_shards > 1 else plan
     elif x.ndim == 3:
         if len(plan) > 1:
@@ -282,12 +357,18 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
                 "padding rows instead")
         labels = hierarchical_core(x, plan, categories=cats,
                                    n_categories=n_categories,
-                                   batched=spec.batched, **kw)
+                                   batched=spec.batched,
+                                   chunk_size=chunk_for(x.shape[0], plan[0]),
+                                   **kw)
     else:
-        labels = aba_core(
-            x[None], spec.k, None if vm is None else vm[None],
-            categories=None if cats is None else cats[None],
-            n_categories=n_categories, **kw)[0]
+        chunk = chunk_for(x.shape[0], spec.k)
+        if chunk is not None:
+            labels = aba_stream(x, spec.k, chunk, **kw)
+        else:
+            labels = aba_core(
+                x[None], spec.k, None if vm is None else vm[None],
+                categories=None if cats is None else cats[None],
+                n_categories=n_categories, **kw)[0]
 
     # Finish the label computation before dispatching the statistics ops:
     # host-callback solvers (e.g. "scipy") deadlock on CPU if new work is
@@ -297,5 +378,5 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
                                    diversity=spec.stats)
     return AnticlusterResult(
         labels=labels, cluster_sizes=sizes, diversity_sd=sd,
-        diversity_range=rng, k=spec.k, plan=plan, solver=spec.solver,
+        diversity_range=rng, k=spec.k, plan=plan, solver=solver,
         variant=spec.variant)

@@ -1,13 +1,15 @@
 """ABA core: the paper's primary contribution as composable JAX modules.
 
 ``aba_core`` is the one rank-polymorphic implementation of Algorithm 1;
+``aba_stream`` is its chunked matrix-free twin for million-scale flat inputs
+(same per-batch step, O(chunk*d + k*d) working set);
 ``hierarchical_core`` stacks it per Section 4.4.  The legacy entry points
 (``aba``, ``aba_batched``, ``hierarchical_aba``, ``aba_auto``) are deprecated
 exact-parity shims -- new code goes through ``repro.anticluster``.
 """
 
 from repro.core.aba import (aba, aba_batched, aba_core, aba_reference,
-                            interleave_permutation)
+                            aba_stream, interleave_permutation)
 from repro.core.assignment import (AuctionConfig, assignment_value,
                                    auction_solve, auction_solve_factored,
                                    available_solvers, get_solver,
@@ -21,7 +23,7 @@ from repro.core.objective import (balance_ok, centroids, cluster_sizes,
 from repro.core import baselines
 
 __all__ = [
-    "aba", "aba_batched", "aba_core", "aba_reference",
+    "aba", "aba_batched", "aba_core", "aba_reference", "aba_stream",
     "interleave_permutation",
     "AuctionConfig", "auction_solve", "auction_solve_factored",
     "greedy_solve", "scipy_solve", "assignment_value",

@@ -99,6 +99,49 @@ def categorical_sort_order(categories: jnp.ndarray, rank_in_cat: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# The shared Algorithm-1 batch step
+# ---------------------------------------------------------------------------
+
+def _assign_batch(solver_obj, fused, auction_config, cents, counts,
+                  cat_counts, xb, is_real, cb=None, ub=None):
+    """One Algorithm-1 batch on a (G, k, ...) stack: solve the LAP against
+    the current centroids and fold the assigned rows into the running
+    moments.  The ONE copy of the batch update -- the dense core's scan and
+    the streaming core's chunked scan both call it, which is what makes the
+    ``chunk_size >= n`` parity guarantee hold bit-for-bit.
+    """
+    garange = jnp.arange(cents.shape[0])[:, None]
+    if fused:
+        # matrix-free bidding: the (k, k) value matrix is never built;
+        # each auction round is one fused bid_top2 kernel call.
+        assign = solver_obj.factored(xb, cents, is_real=is_real,
+                                     config=auction_config)
+    else:
+        # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
+        cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
+                + jnp.sum(cents * cents, axis=-1)[:, None, :])
+        cost = jnp.where(is_real[..., None], cost, 0.0)  # neutral dummies
+        if ub is not None:
+            full = (jnp.take_along_axis(
+                cat_counts, cb[:, None, :], axis=2).swapaxes(1, 2)
+                >= jnp.take_along_axis(ub, cb, axis=1)[..., None])
+            cost = jnp.where(jnp.logical_and(full, is_real[..., None]),
+                             _MASK_COST, cost)
+        assign = solver_obj.solve(cost, auction_config)  # (G, k) batched
+    # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
+    new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
+    delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
+    upd = jnp.zeros_like(cents).at[garange, assign].add(
+        jnp.where(is_real[..., None], delta, 0.0))
+    cents = cents + upd / jnp.maximum(
+        new_counts, 1)[..., None].astype(jnp.float32)
+    if ub is not None:
+        cat_counts = cat_counts.at[garange, assign, cb].add(
+            is_real.astype(jnp.int32))
+    return cents, new_counts, cat_counts, assign
+
+
+# ---------------------------------------------------------------------------
 # The rank-polymorphic masked core
 # ---------------------------------------------------------------------------
 
@@ -144,8 +187,9 @@ def aba_core(
         defaults: "auction" | "auction_fused" | "greedy" | "scipy".  A solver
         with a matrix-free ``factored`` path (e.g. "auction_fused", whose
         bidding top-2 streams through the Pallas ``bid_top2`` kernel) uses it
-        for G=1 category-free problems and falls back to its dense ``solve``
-        otherwise (the categorical upper-bound mask cannot be factored).
+        for category-free problems at any G (the stacked bidding vmaps the
+        kernel) and falls back to its dense ``solve`` when categories are in
+        play (the categorical upper-bound mask cannot be factored).
 
     Returns:
       (G, M) int32 labels in [0, k).
@@ -240,42 +284,17 @@ def aba_core(
         return out[:, :M]
 
     # --- scan over remaining batches: one (G, k, k) LAP stack per step -----
-    fused = (solver_obj.factored is not None and ub is None and G == 1)
+    fused = (solver_obj.factored is not None and ub is None)
 
     def step(carry, inp):
         cents, counts, cat_counts = carry
         idx, is_real = inp  # (G, k) each
         xb = jnp.take_along_axis(x_ext, jnp.minimum(idx, M)[..., None], axis=1)
-        if ub is not None:
-            cb = jnp.take_along_axis(cat_ext, jnp.minimum(idx, M), axis=1)
-        if fused:
-            # matrix-free bidding: the (k, k) value matrix is never built;
-            # each auction round is one fused bid_top2 kernel call.
-            assign = solver_obj.factored(
-                xb[0], cents[0], is_real=is_real[0],
-                config=auction_config)[None]
-        else:
-            # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
-            cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
-                    + jnp.sum(cents * cents, axis=-1)[:, None, :])
-            cost = jnp.where(is_real[..., None], cost, 0.0)  # neutral dummies
-            if ub is not None:
-                full = (jnp.take_along_axis(
-                    cat_counts, cb[:, None, :], axis=2).swapaxes(1, 2)
-                    >= jnp.take_along_axis(ub, cb, axis=1)[..., None])
-                cost = jnp.where(jnp.logical_and(full, is_real[..., None]),
-                                 _MASK_COST, cost)
-            assign = solver_obj.solve(cost, auction_config)  # (G, k) batched
-        # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
-        new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
-        delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
-        upd = jnp.zeros_like(cents).at[garange, assign].add(
-            jnp.where(is_real[..., None], delta, 0.0))
-        cents = cents + upd / jnp.maximum(
-            new_counts, 1)[..., None].astype(jnp.float32)
-        if ub is not None:
-            cat_counts = cat_counts.at[garange, assign, cb].add(
-                is_real.astype(jnp.int32))
+        cb = (jnp.take_along_axis(cat_ext, jnp.minimum(idx, M), axis=1)
+              if ub is not None else None)
+        cents, new_counts, cat_counts, assign = _assign_batch(
+            solver_obj, fused, auction_config, cents, counts, cat_counts,
+            xb, is_real, cb=cb, ub=ub)
         return (cents, new_counts, cat_counts), assign
 
     (_, _, _), assigns = jax.lax.scan(
@@ -289,6 +308,184 @@ def aba_core(
     ].set(labels_all.reshape(G, -1), mode="drop")
     # padding rows of the *input* keep whatever label they drew (callers mask)
     return out[:, :M]
+
+
+# ---------------------------------------------------------------------------
+# The streaming (chunked, matrix-free) core
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "chunk_size", "variant", "solver",
+                     "auction_config"),
+)
+def aba_stream(
+    x: jnp.ndarray,
+    k: int,
+    chunk_size: int,
+    *,
+    variant: Variant = "base",
+    solver: str = "auction",
+    auction_config: AuctionConfig = AuctionConfig(),
+) -> jnp.ndarray:
+    """Streaming ABA on flat ``(n, d)`` features: Algorithm 1 in fixed-size
+    chunks, for n far beyond what the dense core's working set allows.
+
+    The dense core materializes a permuted copy of the whole dataset (its
+    ``x_ext`` gather is O(n*d)); here the centrality pass uses running
+    moments (one scan for the global centroid, one chunked distance pass),
+    and the assignment phase is a two-level scan -- outer over chunks of
+    ``chunk_size`` rows (ONE (chunk, d) gather each), inner over the chunk's
+    n/k batches -- so peak live memory beyond the input is
+    O(chunk_size * d + k * d) in the feature dimension (plus the O(n)
+    scalar dist/order/label vectors every path needs), not O(n * d): there
+    is no concatenated/permuted dataset copy anywhere (chunks are dynamic
+    slices; sentinel rows are clamped gathers masked by ``is_real``).  With a ``factored`` solver
+    (e.g. "auction_fused") each batch's LAP is matrix-free on top: the
+    (k, k) value matrix is never built either (`bid_top2` streams column
+    tiles through VMEM on TPU).
+
+    Every batch runs through the same ``_assign_batch`` step as the dense
+    core, so with ``chunk_size >= n`` the labels are bit-for-bit identical
+    to ``aba_core(x[None], k)[0]`` with the same solver/variant (the parity
+    contract tested in tests/test_anticluster.py).  Larger chunks only
+    change *memory*, never assignment order; smaller chunks are exactly
+    equivalent too except that the global centroid is accumulated chunk by
+    chunk (same sum, same result -- the permutation and all LAPs see
+    identical inputs).
+
+    Categories and valid_mask are not supported here -- the front door
+    routes those through the dense core.
+
+    Args:
+      x: (n, d) float features.
+      k: number of anticlusters (static).
+      chunk_size: rows processed per outer step (static); rounded down to a
+        multiple of k (at least one k-batch).
+      variant: "base" | "interleave" | "auto" (same rule as ``aba_core``).
+      solver / auction_config: LAP backend (registry name) and schedule.
+
+    Returns:
+      (n,) int32 labels in [0, k).
+    """
+    n, d = x.shape
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+    solver_obj = get_solver(solver)
+    xf = x.astype(jnp.float32)
+    cpb = max(1, int(chunk_size) // k)  # batches per chunk
+    chunk = cpb * k
+
+    # --- centrality: running moments + chunked distance pass ---------------
+    # No padded O(n*d) copy: chunks are dynamic slices of the input.  The
+    # tail chunk is clamped to the last `chunk` rows and masks its overlap
+    # with the previous chunk (overlapping *distances* recompute to the same
+    # values, so the update-slice reassembly is idempotent there).
+    n_chunks = -(-n // chunk)
+    if int(chunk_size) >= n or n_chunks == 1:
+        # One covering chunk: identical ops to the dense core.  Keyed on the
+        # *requested* chunk_size, not the k-rounded chunk, so the bit-parity
+        # contract "chunk_size >= n == dense labels" holds structurally
+        # (rounding down to a k-multiple must not switch the float reduction
+        # order of the centrality mean).
+        mu = jnp.mean(xf, axis=0)
+        dist = jnp.sum((xf - mu[None, :]) ** 2, axis=-1)
+    else:
+        starts = jnp.minimum(
+            jnp.arange(n_chunks, dtype=jnp.int32) * chunk, n - chunk)
+        offs = jnp.arange(n_chunks, dtype=jnp.int32) * chunk - starts
+        crange = jnp.arange(chunk, dtype=jnp.int32)
+
+        def moment_step(acc, inp):
+            s, off = inp
+            xc = jax.lax.dynamic_slice(xf, (s, 0), (chunk, d))
+            w = (crange >= off).astype(jnp.float32)[:, None]
+            return acc + jnp.sum(xc * w, axis=0), None
+
+        total, _ = jax.lax.scan(
+            moment_step, jnp.zeros((d,), jnp.float32), (starts, offs))
+        mu = total / n
+
+        def dist_step(buf, inp):
+            s, _off = inp
+            xc = jax.lax.dynamic_slice(xf, (s, 0), (chunk, d))
+            dc = jnp.sum((xc - mu[None, :]) ** 2, axis=-1)
+            return jax.lax.dynamic_update_slice(buf, dc, (s,)), None
+
+        dist, _ = jax.lax.scan(
+            dist_step, jnp.zeros((n,), jnp.float32), (starts, offs))
+    order = jnp.argsort(-dist, stable=True).astype(jnp.int32)
+
+    # --- rearrangement (static; same rule as the dense core) ---------------
+    if variant == "interleave" or (variant == "auto" and n // k <= 8):
+        order = order[jnp.asarray(interleave_permutation(n, k))]
+
+    # --- pad to full batches, then to full chunks ---------------------------
+    n_batches = -(-n // k)
+    order_p = (jnp.concatenate([order, jnp.full((n_batches * k - n,), n,
+                                                jnp.int32)])
+               if n_batches * k > n else order)
+    real = order_p < n
+    batches = order_p.reshape(n_batches, k)
+    real_b = real.reshape(n_batches, k)
+
+    # Sentinel indices (== n) clamp to the last row instead of indexing a
+    # concatenated zero-row copy: a clamped gather avoids the dense core's
+    # O(n*d) ``x_ext`` duplicate, and every consumer of a dummy row's values
+    # masks them with ``is_real`` (cost neutralized, centroid delta zeroed),
+    # so the clamped garbage never leaks -- labels stay bit-identical.
+
+    # --- batch 1 initializes centroids (its k rows are always real) ---------
+    first_idx = jnp.minimum(batches[0], n - 1)
+    centroids0 = xf[first_idx][None]              # (1, k, d)
+    counts0 = real_b[0].astype(jnp.int32)[None]   # (1, k)
+    labels0 = jnp.arange(k, dtype=jnp.int32)
+    cat0 = jnp.zeros((1, k, 1), jnp.int32)        # no categories here
+    if n_batches == 1:
+        return jnp.zeros((n + 1,), jnp.int32).at[first_idx].set(
+            labels0, mode="drop")[:n]
+
+    # --- stream the remaining batches in chunks of cpb ----------------------
+    rem = n_batches - 1
+    n_bchunks = -(-rem // cpb)
+    bpad = n_bchunks * cpb - rem
+    idx_rest = batches[1:]
+    real_rest = real_b[1:]
+    if bpad:  # sentinel batches: all-dummy rows, a no-op for _assign_batch
+        idx_rest = jnp.concatenate(
+            [idx_rest, jnp.full((bpad, k), n, jnp.int32)])
+        real_rest = jnp.concatenate(
+            [real_rest, jnp.zeros((bpad, k), jnp.bool_)])
+    idx_rest = idx_rest.reshape(n_bchunks, cpb, k)
+    real_rest = real_rest.reshape(n_bchunks, cpb, k)
+
+    fused = solver_obj.factored is not None
+
+    def chunk_step(carry, inp):
+        cents, counts = carry
+        idx_c, real_c = inp                      # (cpb, k)
+        xc = xf[jnp.minimum(idx_c, n - 1)]       # ONE (chunk, d) gather
+
+        def batch_step(bcarry, binp):
+            bcents, bcounts = bcarry
+            xb, is_real = binp                   # (k, d), (k,)
+            bcents, bcounts, _cc, assign = _assign_batch(
+                solver_obj, fused, auction_config, bcents, bcounts, cat0,
+                xb[None], is_real[None])
+            return (bcents, bcounts), assign[0]
+
+        (cents, counts), assigns = jax.lax.scan(
+            batch_step, (cents, counts), (xc, real_c))
+        return (cents, counts), assigns          # (cpb, k)
+
+    (_, _), assigns = jax.lax.scan(
+        chunk_step, (centroids0, counts0), (idx_rest, real_rest))
+
+    labels_all = jnp.concatenate(
+        [labels0, assigns.reshape(-1)[:rem * k]])
+    out = jnp.zeros((n + 1,), jnp.int32).at[jnp.minimum(order_p, n)].set(
+        labels_all, mode="drop")
+    return out[:n]
 
 
 # ---------------------------------------------------------------------------

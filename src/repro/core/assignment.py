@@ -239,48 +239,61 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
     so the (k, k) value matrix is never re-materialized per round.  Only the
     one-off span estimate for the eps schedule touches a dense product.
 
+    A first-class registry backend (``"auction_fused"``'s ``factored``
+    path): it takes a single ``(k, d) x (k, d)`` problem OR the ABA core's
+    stacked ``(G, k, d) x (G, k, d)`` batch (per-group centroids; the
+    bidding reduction vmaps the kernel, which on TPU is one extra grid dim).
     ``is_real`` marks dummy rows whose cost is the neutral constant 0,
-    matching the dense masked path in :func:`repro.core.aba.aba`.
-    Returns ``row_to_col`` (k,) int32; requires ``x.shape[0] == c.shape[0]``.
+    matching the dense masked path in :func:`repro.core.aba.aba_core`.
+    Returns ``row_to_col`` (k,) / (G, k) int32.
     """
     from repro.kernels.ops import bid_top2
 
-    if x.shape[0] != c.shape[0]:
-        raise ValueError(f"LAP must be square: {x.shape[0]} != {c.shape[0]}")
-    n = x.shape[0]
+    if x.shape[-2] != c.shape[-2]:
+        raise ValueError(
+            f"LAP must be square: {x.shape[-2]} != {c.shape[-2]}")
+    squeeze = x.ndim == 2
+    if squeeze:
+        x, c = x[None], c[None]
+        is_real = None if is_real is None else is_real[None]
+    G, n, _ = x.shape
     if n == 1:
-        return jnp.zeros((1,), jnp.int32)
+        out = jnp.zeros((G, 1), jnp.int32)
+        return out[0] if squeeze else out
     x = x.astype(jnp.float32)
     c = c.astype(jnp.float32)
-    cn = jnp.sum(c * c, axis=1)
+    cn = jnp.sum(c * c, axis=-1)  # (G, n)
 
     # one-off span for the eps schedule (fused per-row extrema: the max is
     # bid_top2 at zero prices; the min is the max of the negated values,
     # reachable with prices = 2 * ||c||^2 and x -> -x)
-    hi_v1, _, _ = bid_top2(x, c, jnp.zeros((n,), jnp.float32), force=force)
+    hi_v1, _, _ = bid_top2(x, c, jnp.zeros((G, n), jnp.float32), force=force)
     lo_v1, _, _ = bid_top2(-x, c, 2.0 * cn, force=force)
     if is_real is not None:
-        any_dummy = jnp.any(~is_real)
-        hi = jnp.max(jnp.where(is_real, hi_v1, _NEG))
-        lo = -jnp.max(jnp.where(is_real, lo_v1, _NEG))
+        any_dummy = jnp.any(~is_real, axis=1)
+        hi = jnp.max(jnp.where(is_real, hi_v1, _NEG), axis=1)
+        lo = -jnp.max(jnp.where(is_real, lo_v1, _NEG), axis=1)
         hi = jnp.where(any_dummy, jnp.maximum(hi, 0.0), hi)
         lo = jnp.where(any_dummy, jnp.minimum(lo, 0.0), lo)
     else:
-        hi = jnp.max(hi_v1)
-        lo = -jnp.max(lo_v1)
-    span = jnp.maximum(hi - lo, 1e-6)[None]
+        hi = jnp.max(hi_v1, axis=1)
+        lo = -jnp.max(lo_v1, axis=1)
+    span = jnp.maximum(hi - lo, 1e-6)  # (G,)
 
     def top2_fn(prices):
-        v1, j1, v2 = bid_top2(x, c, prices[0], force=force)
+        v1, j1, v2 = bid_top2(x, c, prices, force=force)
         if is_real is not None:
-            # dummy rows see the constant-0 cost row: value = -prices
-            dv1, dj1, dv2 = _top2_batched(-prices[0][None])
-            v1 = jnp.where(is_real, v1, dv1[0])
-            j1 = jnp.where(is_real, j1, dj1[0])
-            v2 = jnp.where(is_real, v2, dv2[0])
-        return v1[None], j1[None], v2[None]
+            # dummy rows see the constant-0 cost row: value = -prices, the
+            # same vector for every dummy row of a group, so the per-group
+            # (G,) top-2 broadcasts across the row axis
+            dv1, dj1, dv2 = _top2_batched(-prices)
+            v1 = jnp.where(is_real, v1, dv1[:, None])
+            j1 = jnp.where(is_real, j1, dj1[:, None])
+            v2 = jnp.where(is_real, v2, dv2[:, None])
+        return v1, j1, v2
 
-    return _run_phases(top2_fn, _eps_schedule(span, n, config), n, config)[0]
+    out = _run_phases(top2_fn, _eps_schedule(span, n, config), n, config)
+    return out[0] if squeeze else out
 
 
 def _repair_permutation(assign: jnp.ndarray) -> jnp.ndarray:
@@ -338,8 +351,10 @@ class Solver(NamedTuple):
     ``(n, n)`` matrix) and returns ``row_to_col`` of shape ``(B, n)`` /
     ``(n,)``, MAXIMIZING total cost; it must be jit/scan-safe (host solvers
     wrap themselves in ``jax.pure_callback``).  ``factored`` is the optional
-    matrix-free path ``factored(x, c, is_real=..., config=...)`` used when
-    the cost factors as ``-2 x.c^T + ||c||^2`` (the fused-kernel auction).
+    matrix-free path ``factored(x, c, is_real=..., config=...)`` used by the
+    ABA core whenever the cost factors as ``-2 x.c^T + ||c||^2`` (no
+    categorical mask); it must accept both ``(n, d)`` and the core's stacked
+    ``(G, n, d)`` inputs (the fused-kernel auction does).
     """
 
     solve: Callable

@@ -27,7 +27,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.aba import aba_core
+from repro.core.aba import aba_core, aba_stream
 from repro.core.assignment import AuctionConfig
 
 
@@ -91,7 +91,7 @@ def _regroup(glabels: jnp.ndarray, valid: jnp.ndarray, n_groups: int,
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "variant", "n_categories", "solver",
-                     "auction_config", "batched"),
+                     "auction_config", "batched", "chunk_size"),
 )
 def hierarchical_core(
     x: jnp.ndarray,
@@ -103,6 +103,7 @@ def hierarchical_core(
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
     batched: bool = True,
+    chunk_size: int | None = None,
 ) -> jnp.ndarray:
     """ABA with L = len(plan) hierarchical levels; labels in [0, prod(plan)).
 
@@ -114,6 +115,11 @@ def hierarchical_core(
     two give identical labels -- the flag exists so benchmarks can measure
     the difference).  ``categories`` stratifies at every level (see module
     docstring for why the global constraint (5) still holds exactly).
+
+    ``chunk_size`` streams **level 1** (the only level that sees all n rows
+    at once) through ``repro.core.aba.aba_stream``; levels >= 2 work on
+    n/K_1-row group stacks and stay on the dense batched core.  Level-1
+    streaming requires category-free input (the front door guarantees it).
     """
     n = x.shape[0]
     k_total = math.prod(plan)
@@ -128,9 +134,13 @@ def hierarchical_core(
         cat_i = categories.astype(jnp.int32)
         cat_ext = jnp.concatenate([cat_i, jnp.zeros((1,), jnp.int32)])
 
-    glabels = aba_core(
-        xf[None], plan[0],
-        categories=None if categories is None else cat_i[None], **kw)[0]
+    if chunk_size is not None and categories is None:
+        glabels = aba_stream(xf, plan[0], chunk_size, variant=variant,
+                             solver=solver, auction_config=auction_config)
+    else:
+        glabels = aba_core(
+            xf[None], plan[0],
+            categories=None if categories is None else cat_i[None], **kw)[0]
     n_groups = plan[0]
     m = -(-n // n_groups)  # static upper bound on group size
 

@@ -29,7 +29,7 @@ from repro.compat import shard_map
 
 from repro.core.assignment import AuctionConfig
 from repro.core.hierarchical import default_plan, hierarchical_core
-from repro.core.aba import aba_core
+from repro.core.aba import aba_core, aba_stream
 
 
 def sharded_core(
@@ -43,13 +43,17 @@ def sharded_core(
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
     batched: bool = True,
+    chunk_size: int | None = None,
 ):
     """Partition sharded ``x`` (n, d) into k anticlusters; returns (n,) labels.
 
     ``k`` must be divisible by the total data-parallel shard count; each shard
     owns n/n_shards rows (pad the dataset first if needed).  ``batched``
     routes each shard's hierarchical levels through the single-call batched
-    auction engine (see ``hierarchical_core``).
+    auction engine (see ``hierarchical_core``).  ``chunk_size`` streams each
+    shard's *local* full-data level through ``repro.core.aba.aba_stream``
+    (per-shard working set O(chunk_size*d + k_local*d)); the shard level
+    itself is already collective-free, so streaming composes with it.
     """
     axes = tuple(a for a in data_axes if a in mesh.axis_names)
     n_shards = math.prod(mesh.shape[a] for a in axes)
@@ -62,10 +66,14 @@ def sharded_core(
     def local_fn(x_local):
         # collapse the leading shard axes added by shard_map
         xs = x_local.reshape((-1, x_local.shape[-1]))
-        if len(plan) == 1:
+        if len(plan) == 1 and chunk_size is not None:
+            local = aba_stream(xs, k_local, chunk_size, variant=variant,
+                               solver=solver, auction_config=auction_config)
+        elif len(plan) == 1:
             local = aba_core(xs[None], k_local, **kw)[0]
         else:
-            local = hierarchical_core(xs, plan, batched=batched, **kw)
+            local = hierarchical_core(xs, plan, batched=batched,
+                                      chunk_size=chunk_size, **kw)
         offset = jnp.int32(0)
         for a in axes:
             offset = offset * mesh.shape[a] + jax.lax.axis_index(a)

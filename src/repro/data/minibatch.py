@@ -25,14 +25,19 @@ from repro.anticluster import AnticlusterSpec, anticluster
 from repro.core.objective import diversity_per_cluster
 
 
-def _auto_or_flat_spec(k: int, max_k: int) -> AnticlusterSpec:
+def _auto_or_flat_spec(k: int, max_k: int,
+                       chunk_size="auto") -> AnticlusterSpec:
     """Auto-plan spec, falling back to the flat path when k is unfactorable.
 
     ``default_plan`` enforces its max_k contract by raising (e.g. prime
     k > max_k).  Here k is derived from the data size, not chosen by the
     user, so a slow-but-correct flat solve beats a crash -- but loudly.
+    ``chunk_size`` defaults to "auto": epoch-scale datasets stream the
+    full-data level in fixed-size chunks (``repro.core.aba.aba_stream``)
+    instead of materializing the permuted copy; small datasets stay dense.
     """
-    spec = AnticlusterSpec(k=k, plan="auto", max_k=max_k)
+    spec = AnticlusterSpec(k=k, plan="auto", max_k=max_k,
+                           chunk_size=chunk_size)
     try:
         spec.resolve_plan()
         return spec
@@ -54,10 +59,12 @@ class ABABatchSequencer:
       batch_size: examples per step; K = floor(N / batch_size) anticlusters.
       epoch_shuffle: reshuffle the *order of batches* per epoch with a
         counter-based rng (batch membership stays fixed and deterministic).
+      chunk_size: streaming execution for epoch-scale feature sets (see
+        ``AnticlusterSpec.chunk_size``); "auto" engages only at scale.
     """
 
     def __init__(self, features: np.ndarray, batch_size: int, *,
-                 max_k: int = 512, seed: int = 0):
+                 max_k: int = 512, seed: int = 0, chunk_size="auto"):
         n = features.shape[0]
         self.batch_size = batch_size
         self.k = max(n // batch_size, 1)
@@ -65,7 +72,7 @@ class ABABatchSequencer:
         self.seed = seed
         self.result = anticluster(
             jnp.asarray(features[:self.n_used]),
-            _auto_or_flat_spec(self.k, max_k))
+            _auto_or_flat_spec(self.k, max_k, chunk_size))
         labels = np.asarray(self.result.labels)
         order = np.argsort(labels, kind="stable")
         self.batches = order.reshape(self.k, -1) if self.k > 1 else (

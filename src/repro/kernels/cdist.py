@@ -55,14 +55,24 @@ def cdist_pallas(
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jnp.ndarray:
-    """(m, d), (n, d) -> (m, n) squared distances.  Pads to block multiples."""
+    """(m, d), (n, d) -> (m, n) squared distances.  Pads to block multiples.
+
+    Leading chunk dims are handled by the ``repro.kernels.ops.cdist``
+    dispatcher (it flattens them into ``m``); already-aligned inputs are fed
+    straight to the kernel so the streaming path's chunked calls do not pay
+    an extra O(m*d) padded copy.
+    """
     m, d = x.shape
     n, d2 = c.shape
     assert d == d2, (x.shape, c.shape)
     bm, bn, bk = min(bm, _rup(m, 8)), min(bn, _rup(n, 128)), min(bk, _rup(d, 128))
     mp, np_, dp = _rup(m, bm), _rup(n, bn), _rup(d, bk)
-    xp = jnp.zeros((mp, dp), jnp.float32).at[:m, :d].set(x.astype(jnp.float32))
-    cp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(c.astype(jnp.float32))
+    xp = (x.astype(jnp.float32) if (mp, dp) == (m, d) else
+          jnp.zeros((mp, dp), jnp.float32).at[:m, :d].set(
+              x.astype(jnp.float32)))
+    cp = (c.astype(jnp.float32) if (np_, dp) == (n, d) else
+          jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(
+              c.astype(jnp.float32)))
     xn = jnp.sum(xp * xp, axis=1)
     cn = jnp.sum(cp * cp, axis=1)
     k_steps = dp // bk

@@ -4,6 +4,25 @@ On TPU the kernels run compiled; on CPU (this container) they run in
 ``interpret=True`` mode, which executes the kernel body in Python -- correct
 but slow, so the wrappers fall back to the jnp reference for *large* CPU
 inputs while tests pin ``force="pallas"`` to exercise the kernel path.
+
+Both dispatchers accept leading *chunk*/stack dims:
+
+- ``cdist`` takes ``(..., m, d)`` rows against one shared ``(n, d)`` centroid
+  set; leading dims are flattened into the row axis (one tiled kernel launch,
+  not one per chunk) and restored on the output.  Used by chunked distance
+  workloads (e.g. ``benchmarks.kernel_bench``'s chunked row); the streaming
+  ABA core's own centrality pass stays on fused elementwise jnp because its
+  single-centroid distance is bandwidth-bound either way and the bit-parity
+  contract pins its exact arithmetic.
+- ``bid_top2`` takes an optional stacked ``(G, m, d) x (G, k, d)`` problem
+  batch -- the ABA core's fused path feeds its per-scan-step group stacks
+  through this (per-group centroids differ, so it vmaps the kernel; Pallas
+  turns the vmap into an extra grid dimension on TPU and the interpret path
+  is vmap-safe on CPU).
+
+The interpret-budget rule sees the *total* row count either way, so a big
+chunked CPU call still falls back to the jnp reference instead of crawling
+through Python-interpreted tiles.
 """
 
 from __future__ import annotations
@@ -26,7 +45,8 @@ def resolve_path(m: int, k: int, force: str | None = None) -> str:
     """Which path an (m, k)-sized dispatch takes: 'pallas' (TPU compiled),
     'pallas-interpret' (forced, or CPU under the interpret budget), or 'ref'
     (jnp fallback).  The single copy of the rule: the dispatchers below
-    branch on it and benchmarks label their rows with it.
+    branch on it and benchmarks label their rows with it.  ``m`` is the
+    *total* row count (leading chunk dims included).
     """
     if force == "ref":
         return "ref"
@@ -39,16 +59,37 @@ def resolve_path(m: int, k: int, force: str | None = None) -> str:
 
 def cdist(x: jnp.ndarray, c: jnp.ndarray, *, force: str | None = None,
           **block_kw) -> jnp.ndarray:
-    """Squared-distance cost matrix; kernel on TPU, ref fallback on big-CPU."""
+    """Squared-distance cost matrix; kernel on TPU, ref fallback on big-CPU.
+
+    ``x`` may carry leading chunk dims: ``(..., m, d) x (n, d) -> (..., m, n)``
+    (flattened into one tiled launch against the shared ``c``).
+    """
+    lead = x.shape[:-2]
+    if lead:
+        x = x.reshape(-1, x.shape[-1])
     path = resolve_path(x.shape[0], c.shape[0], force)
-    if path == "ref":
-        return cdist_ref(x, c)
-    return cdist_pallas(x, c, interpret=path != "pallas", **block_kw)
+    out = (cdist_ref(x, c) if path == "ref"
+           else cdist_pallas(x, c, interpret=path != "pallas", **block_kw))
+    return out.reshape(*lead, -1, out.shape[-1]) if lead else out
 
 
 def bid_top2(x: jnp.ndarray, c: jnp.ndarray, prices: jnp.ndarray, *,
              force: str | None = None, **block_kw):
-    """Fused auction bidding reduction (v1, j1, v2 per row)."""
+    """Fused auction bidding reduction (v1, j1, v2 per row).
+
+    Accepts a single ``(m, d) x (k, d)`` problem or a stacked
+    ``(G, m, d) x (G, k, d)`` batch with ``(G, k)`` prices (each group has
+    its own centroid set, so the stack vmaps the kernel).
+    """
+    if x.ndim == 3:
+        total_m = x.shape[0] * x.shape[1]
+        path = resolve_path(total_m, c.shape[-2], force)
+        if path == "ref":
+            return jax.vmap(bid_top2_ref)(x, c, prices)
+        return jax.vmap(
+            lambda xg, cg, pg: bid_top2_pallas(
+                xg, cg, pg, interpret=path != "pallas", **block_kw)
+        )(x, c, prices)
     path = resolve_path(x.shape[0], c.shape[0], force)
     if path == "ref":
         return bid_top2_ref(x, c, prices)

@@ -301,6 +301,132 @@ def test_kplus_spec_field():
 
 
 # ---------------------------------------------------------------------------
+# Streaming execution path (chunk_size)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["auction", "auction_fused"])
+def test_stream_parity_with_flat(solver):
+    """The acceptance contract: chunk_size >= n is bit-for-bit label-equal
+    to the flat dense path, for the dense and the matrix-free solver."""
+    x = jnp.asarray(_data(300, 6, 21))
+    flat = np.asarray(anticluster(x, k=7, plan=None, solver=solver).labels)
+    for cs in (300, 301, 1200):
+        res = anticluster(x, k=7, plan=None, solver=solver, chunk_size=cs)
+        np.testing.assert_array_equal(flat, np.asarray(res.labels))
+
+
+def test_stream_parity_interleave_variant():
+    x = jnp.asarray(_data(256, 4, 22))
+    flat = np.asarray(anticluster(x, k=64, plan=None,
+                                  variant="interleave").labels)
+    res = anticluster(x, k=64, plan=None, variant="interleave",
+                      chunk_size=256)
+    np.testing.assert_array_equal(flat, np.asarray(res.labels))
+
+
+@pytest.mark.parametrize("n,k,cs", [(300, 7, 49), (257, 16, 16), (300, 6, 100)])
+def test_stream_multichunk_balance_and_quality(n, k, cs):
+    """Chunks smaller than n keep Proposition 1 and the objective: only the
+    centroid accumulation order changes, never the assignment structure."""
+    x = jnp.asarray(_data(n, 5, n))
+    flat = anticluster(x, k=k, plan=None)
+    res = anticluster(x, k=k, plan=None, chunk_size=cs)
+    assert res.balanced and balance_ok(np.asarray(res.labels), k, n)
+    of = float(objective_centroid(x, flat.labels, k))
+    os = float(objective_centroid(x, res.labels, k))
+    assert abs(os - of) / abs(of) < 5e-3
+
+
+def test_stream_hierarchical_level1_parity():
+    """chunk_size streams level 1 of a hierarchy; one covering chunk is
+    bit-identical to the dense hierarchical route."""
+    x = jnp.asarray(_data(600, 6, 23))
+    dense = anticluster(x, k=24, plan=(4, 6))
+    res = anticluster(x, k=24, plan=(4, 6), chunk_size=600)
+    np.testing.assert_array_equal(np.asarray(dense.labels),
+                                  np.asarray(res.labels))
+
+
+def test_stream_auto_small_n_stays_dense():
+    x = jnp.asarray(_data(200, 4, 24))
+    dense = anticluster(x, k=5, plan=None)
+    auto = anticluster(x, k=5, plan=None, chunk_size="auto")
+    np.testing.assert_array_equal(np.asarray(dense.labels),
+                                  np.asarray(auto.labels))
+    assert auto.solver == "auction"  # no at-scale solver upgrade either
+
+
+def test_stream_auto_at_scale_upgrades_to_factored(monkeypatch):
+    """At scale, auto-streaming makes the matrix-free factored auction the
+    default engine (threshold monkeypatched so the test stays tiny)."""
+    monkeypatch.setattr(repro.anticluster, "_AUTO_STREAM_MIN", 128)
+    monkeypatch.setattr(repro.anticluster, "_AUTO_CHUNK_ROWS", 64)
+    x = jnp.asarray(_data(200, 4, 25))
+    res = anticluster(x, k=5, plan=None, chunk_size="auto")
+    assert res.solver == "auction_fused"
+    assert res.balanced and balance_ok(np.asarray(res.labels), 5, 200)
+    # an explicitly chosen solver is never silently swapped
+    res2 = anticluster(x, k=5, plan=None, chunk_size="auto", solver="greedy")
+    assert res2.solver == "greedy"
+
+
+def test_stream_explicit_chunk_rejects_unstreamable_input():
+    x = jnp.asarray(_data(120, 4, 26))
+    cats = np.zeros(120, np.int32)
+    with pytest.raises(NotImplementedError, match="chunk_size"):
+        anticluster(x, k=4, plan=None, chunk_size=64, categories=cats)
+    with pytest.raises(NotImplementedError, match="chunk_size"):
+        anticluster(x, k=4, plan=None, chunk_size=64,
+                    valid_mask=np.arange(120) < 100)
+    # "auto" quietly falls back to the dense core for the same inputs
+    res = anticluster(x, k=4, plan=None, chunk_size="auto", categories=cats)
+    assert res.balanced
+
+
+def test_stream_spec_validation():
+    with pytest.raises(ValueError, match="chunk_size"):
+        AnticlusterSpec(k=4, chunk_size=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        AnticlusterSpec(k=4, chunk_size="fastest")
+    assert AnticlusterSpec(k=4, chunk_size="auto").resolve_chunk(100, 4) \
+        is None  # below the auto threshold
+    assert AnticlusterSpec(k=4, chunk_size=77).resolve_chunk(100, 4) == 77
+
+
+def test_fused_solver_hierarchical_stack():
+    """Regression: the factored path must handle G>1 stacks with dummy rows
+    (hierarchical level >= 2 feeds padded group batches through it; the
+    (G,) dummy-row top-2 must broadcast across the row axis)."""
+    x = jnp.asarray(_data(600, 6, 28))
+    res = anticluster(x, k=24, plan=(4, 6), solver="auction_fused")
+    assert res.balanced and balance_ok(np.asarray(res.labels), 24, 600)
+    dense = anticluster(x, k=24, plan=(4, 6))
+    od = float(objective_centroid(x, dense.labels, 24))
+    of = float(objective_centroid(x, res.labels, 24))
+    assert abs(of - od) / abs(od) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# scipy host-callback solver through the front door (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+def test_scipy_solver_stats_no_deadlock():
+    """The "scipy" registry solver (jax.pure_callback) must run through
+    anticluster() WITH eager result statistics: the blocks-on-labels guard
+    is load-bearing -- dispatching the stats ops while the callback solve is
+    in flight deadlocks CPU jax (a hang here, caught by CI's job timeout,
+    is that regression)."""
+    x = jnp.asarray(_data(150, 4, 27))
+    res = anticluster(x, k=6, plan=None, solver="scipy", stats=True)
+    assert res.balanced and int(res.n_valid) == 150
+    assert np.isfinite(float(res.diversity_sd))
+    assert np.isfinite(float(res.diversity_range))
+    # and again through a hierarchy (two sequential callback regimes)
+    res_h = anticluster(x, k=6, plan=(2, 3), solver="scipy")
+    assert res_h.balanced and np.isfinite(float(res_h.diversity_sd))
+
+
+# ---------------------------------------------------------------------------
 # Public-API snapshot
 # ---------------------------------------------------------------------------
 
@@ -310,7 +436,7 @@ def test_public_api_snapshot():
         "register_solver", "get_solver", "available_solvers",
     ]
     assert repro.core.__all__ == [
-        "aba", "aba_batched", "aba_core", "aba_reference",
+        "aba", "aba_batched", "aba_core", "aba_reference", "aba_stream",
         "interleave_permutation",
         "AuctionConfig", "auction_solve", "auction_solve_factored",
         "greedy_solve", "scipy_solve", "assignment_value",

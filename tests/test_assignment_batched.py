@@ -120,6 +120,26 @@ def test_factored_fused_with_dummy_rows(rng):
     assert vs - assignment_value(cost, af) <= span / 4.0 + 1e-2
 
 
+def test_factored_stacked_matches_per_instance(rng):
+    """A (G, n, d) factored stack (with per-group dummy rows) returns the
+    same assignments as G independent factored solves."""
+    G, n, d = 3, 18, 5
+    x = rng.normal(size=(G, n, d)).astype(np.float32)
+    c = rng.normal(size=(G, n, d)).astype(np.float32)
+    ir = np.ones((G, n), bool)
+    ir[1, 13:] = False
+    ir[2, 5:] = False
+    out = np.asarray(auction_solve_factored(
+        jnp.asarray(x), jnp.asarray(c), is_real=jnp.asarray(ir)))
+    singles = np.stack([
+        np.asarray(auction_solve_factored(
+            jnp.asarray(x[g]), jnp.asarray(c[g]), is_real=jnp.asarray(ir[g])))
+        for g in range(G)])
+    np.testing.assert_array_equal(out, singles)
+    for a in out:
+        assert sorted(a) == list(range(n))
+
+
 def test_aba_fused_solver_quality(rng):
     x = rng.normal(size=(300, 5)).astype(np.float32)
     lf = np.asarray(aba(jnp.asarray(x), 6, solver="auction_fused"))
