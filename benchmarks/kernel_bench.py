@@ -15,10 +15,21 @@ Reports three stories:
 4. **Registry sweep**: every LAP backend in the solver registry
    (``repro.core.assignment.available_solvers``) on the same stack, so a
    ``register_solver``-ed backend shows up here with zero edits.
+5. **Epoch bench (cold vs warm)**: one ``anticluster()`` one-shot epoch vs
+   one warm ``AnticlusterEngine.repartition`` epoch on the same shape --
+   the repeated-workload story (mini-batch creation per training epoch).
+   The regression gate compares wall time per row (so a warm-path slowdown
+   past 2x the checked-in baseline fails CI); both rows also record the
+   anticlustering objective into the trajectory JSON for drift inspection,
+   and the printed ``speedup=``/``obj_dev_pct=`` labels carry the
+   warm-beats-cold evidence (the tested quality contract -- warm objective
+   within 1% of cold -- lives in tests/test_engine.py).
 
 ``--smoke`` runs tiny shapes only (the CI smoke step) and, like every run,
 writes the machine-readable trajectory to ``BENCH_kernel.json``
-(``benchmarks.common.BENCH_SCHEMA``) for the CI regression gate.
+(``benchmarks.common.BENCH_SCHEMA``) for the CI regression gate; the
+nightly workflow runs the full (non-smoke) sweep including the full-size
+epoch bench.
 """
 
 from __future__ import annotations
@@ -100,17 +111,49 @@ def run(full: bool = False, smoke: bool = False,
         rec.add(f"solver/auction/{n}", f"{n}x{n}", t_a)
 
     # --- registry sweep: every registered LAP backend on one stack --------
+    # (canonical price-carrying signature: solve -> (assignment, prices))
     B, n = (4, 16) if smoke else (16, 64)
     stack = jnp.asarray(rng.normal(size=(B, n, n)).astype(np.float32))
     for name in available_solvers():
         solver = get_solver(name)
         _, t = timed(
-            lambda: solver.solve(stack, AuctionConfig()).block_until_ready(),
-            repeats=3)
+            lambda: solver.solve(stack, AuctionConfig())[0]
+            .block_until_ready(), repeats=3)
         row(f"solver/registry/{name}/{B}x{n}", t,
             f"solves_per_s={B / t:.0f};"
             f"factored={'yes' if solver.factored else 'no'}")
         rec.add(f"solver/registry/{name}/{B}x{n}", f"{B}x{n}", t)
+
+    # --- epoch bench: cold one-shot vs warm engine repartition ------------
+    from repro.anticluster import AnticlusterEngine, AnticlusterSpec, \
+        anticluster
+    from repro.core.objective import objective_centroid
+
+    n_e, k_e, d_e = (2048, 16, 8) if smoke else (
+        (65536, 64, 16) if full else (16384, 64, 16))
+    x = jnp.asarray(rng.normal(size=(n_e, d_e)).astype(np.float32))
+    spec = AnticlusterSpec(k=k_e, plan=None, stats=False)
+    cold_res, t_cold = timed(lambda: anticluster(x, spec), repeats=3)
+    obj_cold = float(objective_centroid(x, cold_res.labels, k_e))
+
+    engine = AnticlusterEngine(spec)
+    _res0, state0 = engine.partition(x)  # compile + cold solve
+    carry = {"state": state0}
+
+    def warm_epoch():
+        r, carry["state"] = engine.repartition(x, carry["state"])
+        carry["res"] = r
+        return r.labels
+
+    _, t_warm = timed(warm_epoch, repeats=3)
+    obj_warm = float(objective_centroid(x, carry["res"].labels, k_e))
+    shape_e = f"{n_e}x{k_e}x{d_e}"
+    row(f"engine/epoch_warm/{shape_e}", t_warm,
+        f"cold_us={t_cold * 1e6:.1f};speedup={t_cold / t_warm:.2f}x;"
+        f"obj_dev_pct={(obj_warm - obj_cold) / abs(obj_cold) * 100:.4f};"
+        f"compiles={engine.compile_count}")
+    rec.add(f"engine/epoch_cold/{shape_e}", shape_e, t_cold, obj_cold)
+    rec.add(f"engine/epoch_warm/{shape_e}", shape_e, t_warm, obj_warm)
 
     rec.write(json_path)
 

@@ -1,7 +1,11 @@
 """The spec-driven front door for Euclidean anticlustering.
 
-One entry point replaces the six legacy ones (``aba``, ``aba_batched``,
-``hierarchical_aba``, ``aba_auto``, ``sharded_aba``, ``aba_reference``):
+Two public surfaces over one rank-polymorphic core:
+
+* :func:`anticluster` -- the one-shot call.  ``anticluster(x, spec)`` is
+  semantically ``AnticlusterEngine(spec).partition(x)[0]`` (a parity test
+  pins the two bit-for-bit) but dispatches straight to the module-level
+  jitted cores, so repeated one-shot calls share the global compile cache.
 
     from repro.anticluster import AnticlusterSpec, anticluster
 
@@ -10,6 +14,22 @@ One entry point replaces the six legacy ones (``aba``, ``aba_batched``,
     res = anticluster(x, k=5, categories=y)               # stratified (4.3)
     res = anticluster(x, k=512, mesh=mesh)                # shard_map across mesh
     res.labels, res.plan, res.cluster_sizes, res.balanced # result pytree
+
+* :class:`AnticlusterEngine` -- the session API for the paper's *repeated*
+  workloads (a fresh mini-batch partition every training epoch,
+  representative K-fold CV, request serving).  The engine compiles one
+  shape-keyed executable per input signature (state buffers donated) and
+  carries an explicit :class:`ABAState` pytree -- the auction's dual prices
+  per hierarchy level, the centrality running moments, and the previous
+  labels -- so ``engine.repartition(x, state)`` warm-starts every
+  epsilon-scaling auction instead of re-discovering the price equilibrium
+  from zero:
+
+    engine = AnticlusterEngine(AnticlusterSpec(k=64))
+    res, state = engine.partition(x)            # compiles once for x.shape
+    for epoch in range(E):
+        x = embed(data)                         # same shape, drifted values
+        res, state = engine.repartition(x, state)   # zero retrace, warm solve
 
 ``anticluster`` routes flat -> streaming -> hierarchical -> sharded
 execution from the spec alone; every regime runs on the ONE rank-polymorphic
@@ -31,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any
 
 import jax
@@ -40,11 +61,13 @@ import numpy as np
 from repro.core.aba import aba_core, aba_stream
 from repro.core.assignment import (AuctionConfig, available_solvers,
                                    get_solver, register_solver)
-from repro.core.hierarchical import default_plan, hierarchical_core
+from repro.core.hierarchical import (default_plan, hierarchical_core,
+                                     plan_price_shapes)
 from repro.core.kplus import kplus_augment
 
 __all__ = [
     "AnticlusterSpec", "AnticlusterResult", "anticluster",
+    "AnticlusterEngine", "ABAState",
     "register_solver", "get_solver", "available_solvers",
 ]
 
@@ -215,12 +238,153 @@ jax.tree_util.register_dataclass(
     meta_fields=["k", "plan", "solver", "variant"])
 
 
+@dataclasses.dataclass(frozen=True)
+class ABAState:
+    """The carried solver state of one anticlustering session.
+
+    A pure-array pytree (jit/``device_put``/pickle-safe; every field is a
+    leaf, there is no static metadata), produced by
+    ``AnticlusterEngine.partition`` / ``repartition`` and consumed by
+    ``repartition`` to warm-start the next same-shape solve:
+
+    * ``prices`` -- the auction's dual price vectors, one per hierarchy
+      level (level l is ``(prod(plan[:l-1]), plan[l-1])`` float32; flat,
+      streamed and stacked runs carry a 1-tuple).  These are shift-invariant
+      (the engine re-centers them per group), and a zeroed tuple is exactly
+      the cold start: ``repartition`` with ``init_state``'s zeros is
+      bit-identical to ``partition``.
+    * ``moment_sum`` / ``moment_count`` -- the running centrality moments
+      (per-group feature sums and valid-row counts) behind the level-1
+      centrality sort; mergeable across sessions the way ``aba_stream``
+      merges its chunk moments.
+    * ``prev_labels`` -- the previous assignment ((n,) or (G, M) int32;
+      ``-1`` before the first partition).
+    """
+
+    prices: tuple[jnp.ndarray, ...]
+    moment_sum: jnp.ndarray
+    moment_count: jnp.ndarray
+    prev_labels: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    ABAState,
+    data_fields=["prices", "moment_sum", "moment_count", "prev_labels"],
+    meta_fields=[])
+
+
 def _mesh_shards(spec: "AnticlusterSpec") -> int:
     """Total data-parallel shard count for the spec's mesh (1 if no mesh)."""
     if spec.mesh is None:
         return 1
     axes = [a for a in spec.data_axes if a in spec.mesh.axis_names]
     return math.prod(spec.mesh.shape[a] for a in axes)
+
+
+def _route(spec: AnticlusterSpec, shape: tuple[int, ...],
+           has_categories: bool, has_valid_mask: bool):
+    """Static dispatch decisions shared by ``anticluster()`` and the engine.
+
+    Returns ``(mode, plan, solver, chunk)``: ``mode`` in ``"mesh"`` |
+    ``"stacked"`` | ``"hier"`` | ``"stream"`` | ``"flat"``; ``solver`` the
+    resolved registry name (the at-scale auto upgrade applied); ``chunk``
+    the concrete per-level row count or None.  One function, so the engine
+    and the one-shot wrapper can never disagree on the execution route.
+    """
+    if len(shape) not in (2, 3):
+        raise ValueError(f"x must be (n, d) or (G, M, D), got {shape}")
+    plan = spec.resolve_plan()
+    streamable = (len(shape) == 2 and not has_categories
+                  and not has_valid_mask)
+    if spec.chunk_size is not None and not streamable \
+            and spec.chunk_size != "auto":
+        raise NotImplementedError(
+            "chunk_size streaming needs flat (n, d) input without "
+            'categories or valid_mask; chunk_size="auto" falls back to the '
+            "dense core for those")
+
+    def chunk_for(n_level: int, k_level: int) -> int | None:
+        return spec.resolve_chunk(n_level, k_level) if streamable else None
+
+    n = shape[0]
+    solver = spec.solver
+    if spec.chunk_size == "auto" and solver == "auction" and streamable:
+        n_level = n // max(_mesh_shards(spec), 1)
+        if chunk_for(n_level, plan[0]) is not None:
+            # at scale the matrix-free factored auction is the default engine
+            solver = "auction_fused"
+
+    if spec.mesh is not None:
+        if len(shape) != 2 or has_categories or has_valid_mask:
+            raise NotImplementedError(
+                "mesh execution takes flat (n, d) data without categories "
+                "or valid_mask (shards are the first hierarchy level)")
+        if spec.plan != "auto":
+            raise NotImplementedError(
+                'mesh execution resolves its per-shard plan from max_k; '
+                'use plan="auto"')
+        n_shards = _mesh_shards(spec)
+        return "mesh", plan, solver, chunk_for(n // max(n_shards, 1), plan[0])
+    if len(shape) == 3:
+        if len(plan) > 1:
+            raise NotImplementedError(
+                "stacked (G, M, D) input requires a flat plan "
+                f"(got plan={plan}); hierarchy nests via repeated calls")
+        return "stacked", plan, solver, None
+    if len(plan) > 1:
+        if has_valid_mask:
+            raise NotImplementedError(
+                "hierarchical plans do not support valid_mask; drop the "
+                "padding rows instead")
+        return "hier", plan, solver, chunk_for(n, plan[0])
+    chunk = chunk_for(n, spec.k)
+    return ("stream" if chunk is not None else "flat"), plan, solver, chunk
+
+
+def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
+               chunk, cats, n_categories: int, vm,
+               prices=None, return_state: bool = False):
+    """Dispatch one solve to the right core (shared engine/one-shot path).
+
+    ``prices`` is the per-level tuple from :class:`ABAState` (flat /
+    streamed / stacked runs use a 1-tuple); ``None`` is the cold path and is
+    bit-identical.  With ``return_state`` the return is ``(labels, state)``
+    where ``state["prices"]`` is the per-level tuple and ``state["mu"]`` the
+    level-1 centrality centroid ((d,); (G, d) for stacked input).
+    """
+    kw = dict(variant=spec.variant, solver=solver,
+              auction_config=spec.auction_config)
+    p0 = None if prices is None else prices[0]
+    if mode == "stacked":
+        out = aba_core(x, spec.k, vm, categories=cats,
+                       n_categories=n_categories, prices=p0,
+                       return_state=return_state, **kw)
+        if not return_state:
+            return out
+        labels, st = out
+        return labels, {"prices": (st["prices"],), "mu": st["mu"]}
+    if mode == "hier":
+        return hierarchical_core(x, plan, categories=cats,
+                                 n_categories=n_categories,
+                                 batched=spec.batched, chunk_size=chunk,
+                                 prices=prices, return_state=return_state,
+                                 **kw)
+    if mode == "stream":
+        out = aba_stream(x, spec.k, chunk, prices=p0,
+                         return_state=return_state, **kw)
+        if not return_state:
+            return out
+        labels, st = out
+        return labels, {"prices": (st["prices"],), "mu": st["mu"]}
+    # flat: the G=1 specialization of the stacked core
+    out = aba_core(x[None], spec.k, None if vm is None else vm[None],
+                   categories=None if cats is None else cats[None],
+                   n_categories=n_categories, prices=p0,
+                   return_state=return_state, **kw)
+    if not return_state:
+        return out[0]
+    labels, st = out
+    return labels[0], {"prices": (st["prices"],), "mu": st["mu"][0]}
 
 
 def _result_stats(x, labels, k, valid_mask, diversity=True):
@@ -266,6 +430,14 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
                 **overrides) -> AnticlusterResult:
     """Partition ``x`` into ``spec.k`` anticlusters per the spec.
 
+    The one-shot form of the session API: equivalent to
+    ``AnticlusterEngine(spec).partition(x)[0]`` (bit-for-bit -- both sides
+    run the same ``_route``/``_call_core`` dispatch with cold prices) but
+    calling the module-level jitted cores directly, so repeated one-shot
+    calls share the global compile cache instead of building per-session
+    executables.  Use :class:`AnticlusterEngine` when you call repeatedly on
+    same-shaped data and want warm-started prices + donated state buffers.
+
     Args:
       x: (n, d) features, or a stacked (G, M, D) batch of padded subproblems
         (pair with ``spec.valid_mask``; the stacked rank requires a flat
@@ -302,73 +474,21 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
     vm = None if spec.valid_mask is None else jnp.asarray(
         spec.valid_mask, jnp.bool_)
     get_solver(spec.solver)  # fail fast with the registered-name list
-    plan = spec.resolve_plan()
+    mode, plan, solver, chunk = _route(spec, tuple(x.shape),
+                                       cats is not None, vm is not None)
 
-    # --- streaming route selection (million-scale path) --------------------
-    streamable = x.ndim == 2 and cats is None and vm is None
-    if spec.chunk_size is not None and not streamable \
-            and spec.chunk_size != "auto":
-        raise NotImplementedError(
-            "chunk_size streaming needs flat (n, d) input without "
-            'categories or valid_mask; chunk_size="auto" falls back to the '
-            "dense core for those")
-
-    def chunk_for(n_level: int, k_level: int) -> int | None:
-        return spec.resolve_chunk(n_level, k_level) if streamable else None
-
-    solver = spec.solver
-    if spec.chunk_size == "auto" and solver == "auction" and streamable:
-        n_level = x.shape[0] // max(_mesh_shards(spec), 1)
-        if chunk_for(n_level, plan[0]) is not None:
-            # at scale the matrix-free factored auction is the default engine
-            solver = "auction_fused"
-    kw = dict(variant=spec.variant, solver=solver,
-              auction_config=spec.auction_config)
-
-    if spec.mesh is not None:
+    if mode == "mesh":
         from repro.core.sharded import sharded_core
-        if x.ndim != 2 or cats is not None or vm is not None:
-            raise NotImplementedError(
-                "mesh execution takes flat (n, d) data without categories "
-                "or valid_mask (shards are the first hierarchy level)")
-        if spec.plan != "auto":
-            raise NotImplementedError(
-                'mesh execution resolves its per-shard plan from max_k; '
-                'use plan="auto"')
         n_shards = _mesh_shards(spec)
         labels = sharded_core(x, spec.k, spec.mesh,
                               data_axes=spec.data_axes, max_k=spec.max_k,
-                              batched=spec.batched,
-                              chunk_size=chunk_for(
-                                  x.shape[0] // max(n_shards, 1), plan[0]),
-                              **kw)
+                              batched=spec.batched, chunk_size=chunk,
+                              variant=spec.variant, solver=solver,
+                              auction_config=spec.auction_config)
         plan = ((n_shards,) + plan) if n_shards > 1 else plan
-    elif x.ndim == 3:
-        if len(plan) > 1:
-            raise NotImplementedError(
-                "stacked (G, M, D) input requires a flat plan "
-                f"(got plan={plan}); hierarchy nests via repeated calls")
-        labels = aba_core(x, spec.k, vm, categories=cats,
-                          n_categories=n_categories, **kw)
-    elif len(plan) > 1:
-        if vm is not None:
-            raise NotImplementedError(
-                "hierarchical plans do not support valid_mask; drop the "
-                "padding rows instead")
-        labels = hierarchical_core(x, plan, categories=cats,
-                                   n_categories=n_categories,
-                                   batched=spec.batched,
-                                   chunk_size=chunk_for(x.shape[0], plan[0]),
-                                   **kw)
     else:
-        chunk = chunk_for(x.shape[0], spec.k)
-        if chunk is not None:
-            labels = aba_stream(x, spec.k, chunk, **kw)
-        else:
-            labels = aba_core(
-                x[None], spec.k, None if vm is None else vm[None],
-                categories=None if cats is None else cats[None],
-                n_categories=n_categories, **kw)[0]
+        labels = _call_core(x, spec, mode, plan, solver, chunk,
+                            cats, n_categories, vm)
 
     # Finish the label computation before dispatching the statistics ops:
     # host-callback solvers (e.g. "scipy") deadlock on CPU if new work is
@@ -380,3 +500,186 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
         labels=labels, cluster_sizes=sizes, diversity_sd=sd,
         diversity_range=rng, k=spec.k, plan=plan, solver=solver,
         variant=spec.variant)
+
+
+class AnticlusterEngine:
+    """Device-resident, warm-startable session API for repeated solves.
+
+    One engine per repeated workload (a training run's per-epoch mini-batch
+    partitions, a CV harness, a serving lane).  The engine builds ONE
+    jit-compiled executable per input signature ``(shape, dtype)`` --
+    verified by :attr:`compile_count` staying at 1 across same-shape epochs
+    -- with the incoming :class:`ABAState` buffers donated (on backends that
+    support donation the old state's memory is reused in place), and keeps
+    the result *statistics* out of the compiled path (they are host-level
+    conveniences, skippable via ``spec.stats=False``).
+
+    ``partition(x)`` is the cold start: it runs with a zeroed state and is
+    bit-for-bit identical to ``anticluster(x, spec)``.  ``repartition(x,
+    state)`` threads the carried state through the cores: every batch LAP at
+    every hierarchy level warm-starts its epsilon-scaling schedule from the
+    previous run's final prices, which is where the paper's repeated
+    workloads (Section 1) recover their throughput -- the assignment stays
+    eps-optimal (warm prices change round counts, not the optimality
+    guarantee), and the objective stays within the auction's usual tolerance
+    of the cold solve.
+
+    Not supported here (use the one-shot :func:`anticluster`): ``spec.mesh``
+    (shard_map execution), ``spec.kplus_moments > 1`` (host-side feature
+    augmentation), ``spec.batched=False`` (legacy benchmarking path).
+    """
+
+    _donation_advisory_silenced = False
+
+    def __init__(self, spec: AnticlusterSpec | None = None, **overrides):
+        # Engines always request state-buffer donation; backends that cannot
+        # honor it (CPU) emit an advisory per executable.  Install the filter
+        # once, process-wide -- a per-call warnings.catch_warnings() would
+        # mutate global filter state on every repartition and race under
+        # threaded serving.
+        if not AnticlusterEngine._donation_advisory_silenced:
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            AnticlusterEngine._donation_advisory_silenced = True
+        if spec is None:
+            spec = AnticlusterSpec(**overrides)
+        elif overrides:
+            spec = spec.replace(**overrides)
+        if spec.mesh is not None:
+            raise NotImplementedError(
+                "AnticlusterEngine is single-session/single-device; use "
+                "anticluster(x, spec) for shard_map execution")
+        if spec.kplus_moments > 1:
+            raise NotImplementedError(
+                "kplus_moments augmentation is host-side; use the one-shot "
+                "anticluster()")
+        if not spec.batched:
+            raise NotImplementedError(
+                "the engine requires the batched level engine "
+                "(spec.batched=True)")
+        get_solver(spec.solver)  # fail fast
+        self.spec = spec
+        self._cats = (None if spec.categories is None
+                      else jnp.asarray(spec.categories, jnp.int32))
+        self._n_categories = spec.n_categories
+        if self._cats is not None and self._n_categories <= 0:
+            self._n_categories = int(np.asarray(self._cats).max()) + 1
+        self._vm = (None if spec.valid_mask is None
+                    else jnp.asarray(spec.valid_mask, jnp.bool_))
+        self._fns: dict = {}
+        self._routes: dict = {}  # shape -> (mode, plan, solver, chunk)
+        self._trace_count = 0
+
+    @property
+    def compile_count(self) -> int:
+        """Number of executable traces built so far (1 per input signature).
+
+        Incremented from inside the traced function, so it counts actual
+        (re)traces -- the compile-exactly-once contract across same-shape
+        epochs is ``engine.compile_count == 1``.
+        """
+        return self._trace_count
+
+    def _routed(self, shape: tuple[int, ...]):
+        # memoized: repartition is the per-epoch hot path and the route
+        # (incl. resolve_plan's factorization search) is static per shape
+        routed = self._routes.get(shape)
+        if routed is None:
+            routed = _route(self.spec, shape, self._cats is not None,
+                            self._vm is not None)
+            self._routes[shape] = routed
+        return routed
+
+    def price_shapes(self, shape) -> tuple[tuple[int, int], ...]:
+        """Per-level price shapes of the state carried for input ``shape``."""
+        mode, plan, _solver, _chunk = self._routed(tuple(shape))
+        if mode == "stacked":
+            return ((shape[0], self.spec.k),)
+        if mode == "hier":
+            return plan_price_shapes(plan)
+        return ((1, self.spec.k),)
+
+    def init_state(self, x_or_shape) -> ABAState:
+        """A zeroed (cold-start) :class:`ABAState` for ``x`` / its shape."""
+        shape = (tuple(x_or_shape) if isinstance(x_or_shape, (tuple, list))
+                 else tuple(jnp.shape(x_or_shape)))
+        mode, _plan, _solver, _chunk = self._routed(shape)
+        prices = tuple(jnp.zeros(s, jnp.float32)
+                       for s in self.price_shapes(shape))
+        if mode == "stacked":
+            G, M, D = shape
+            return ABAState(prices, jnp.zeros((G, D), jnp.float32),
+                            jnp.zeros((G,), jnp.float32),
+                            jnp.full((G, M), -1, jnp.int32))
+        n, d = shape
+        return ABAState(prices, jnp.zeros((d,), jnp.float32),
+                        jnp.zeros((), jnp.float32),
+                        jnp.full((n,), -1, jnp.int32))
+
+    def partition(self, x) -> tuple[AnticlusterResult, ABAState]:
+        """Cold solve: ``repartition`` from a zeroed state (bit-identical to
+        ``anticluster(x, spec)``); compiles on first use per shape."""
+        return self.repartition(x, self.init_state(jnp.shape(x)))
+
+    def repartition(self, x,
+                    state: ABAState) -> tuple[AnticlusterResult, ABAState]:
+        """Warm solve: same-shape re-partition carrying ``state``'s prices.
+
+        The state is *consumed* (its buffers are donated to the compiled
+        call); use the returned state for the next epoch.  A zeroed state
+        (``init_state``) reproduces ``partition`` bit-for-bit.
+        """
+        spec = self.spec
+        x = jnp.asarray(x).astype(spec.dtype)
+        shape = tuple(x.shape)
+        expected = self.price_shapes(shape)
+        got = tuple(tuple(p.shape) for p in state.prices)
+        if got != expected:
+            raise ValueError(
+                f"state prices {got} do not match the {expected} this "
+                f"engine carries for input shape {shape} (state from a "
+                "different shape/plan?)")
+        key = (shape, jnp.dtype(spec.dtype).name)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._build(shape)
+            self._fns[key] = fn
+        labels, prices, msum, mcnt = fn(x, tuple(state.prices))
+        # Finish labels before dispatching the (host-level) statistics ops:
+        # host-callback solvers deadlock otherwise (see anticluster()).
+        labels = jax.block_until_ready(labels)
+        mode, plan, solver, _chunk = self._routed(shape)
+        sizes, sd, rng = _result_stats(x, labels, spec.k, self._vm,
+                                       diversity=spec.stats)
+        result = AnticlusterResult(
+            labels=labels, cluster_sizes=sizes, diversity_sd=sd,
+            diversity_range=rng, k=spec.k, plan=plan, solver=solver,
+            variant=spec.variant)
+        return result, ABAState(prices=prices, moment_sum=msum,
+                                moment_count=mcnt, prev_labels=labels)
+
+    def _build(self, shape: tuple[int, ...]):
+        """One shape-keyed executable: solve + state refresh, donated state."""
+        spec = self.spec
+        mode, plan, solver, chunk = self._routed(shape)
+        cats, ncats, vm = self._cats, self._n_categories, self._vm
+
+        def fn(x, prices):
+            self._trace_count += 1  # python side effect: runs once per trace
+            labels, st = _call_core(x, spec, mode, plan, solver, chunk,
+                                    cats, ncats, vm, prices=prices,
+                                    return_state=True)
+            # re-center the dual prices per group (the auction is invariant
+            # to a uniform shift) so carried state stays bounded over epochs
+            new_prices = tuple(p - jnp.max(p, axis=-1, keepdims=True)
+                               for p in st["prices"])
+            mu = st["mu"]
+            if mode == "stacked":
+                cnt = (jnp.full((shape[0],), float(shape[1]), jnp.float32)
+                       if vm is None else jnp.sum(vm, axis=1, dtype=jnp.float32))
+            else:
+                cnt = (jnp.asarray(float(shape[0]), jnp.float32)
+                       if vm is None else jnp.sum(vm, dtype=jnp.float32))
+            return labels, new_prices, mu * cnt[..., None], cnt
+
+        return jax.jit(fn, donate_argnums=(1,))

@@ -103,19 +103,24 @@ def categorical_sort_order(categories: jnp.ndarray, rank_in_cat: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _assign_batch(solver_obj, fused, auction_config, cents, counts,
-                  cat_counts, xb, is_real, cb=None, ub=None):
+                  cat_counts, xb, is_real, cb=None, ub=None, prices=None):
     """One Algorithm-1 batch on a (G, k, ...) stack: solve the LAP against
     the current centroids and fold the assigned rows into the running
     moments.  The ONE copy of the batch update -- the dense core's scan and
     the streaming core's chunked scan both call it, which is what makes the
     ``chunk_size >= n`` parity guarantee hold bit-for-bit.
+
+    ``prices`` warm-starts the batch LAP from a carried (G, k) price vector
+    (``None`` = zeros: the cold path, unchanged); the solver's final prices
+    are returned so a stateful caller can carry them into its next run.
     """
     garange = jnp.arange(cents.shape[0])[:, None]
     if fused:
         # matrix-free bidding: the (k, k) value matrix is never built;
         # each auction round is one fused bid_top2 kernel call.
-        assign = solver_obj.factored(xb, cents, is_real=is_real,
-                                     config=auction_config)
+        assign, p_out = solver_obj.factored(xb, cents, is_real=is_real,
+                                            config=auction_config,
+                                            prices=prices)
     else:
         # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
         cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
@@ -127,7 +132,8 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
                 >= jnp.take_along_axis(ub, cb, axis=1)[..., None])
             cost = jnp.where(jnp.logical_and(full, is_real[..., None]),
                              _MASK_COST, cost)
-        assign = solver_obj.solve(cost, auction_config)  # (G, k) batched
+        assign, p_out = solver_obj.solve(cost, auction_config,
+                                         prices)  # (G, k) batched
     # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
     new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
     delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
@@ -138,7 +144,7 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
     if ub is not None:
         cat_counts = cat_counts.at[garange, assign, cb].add(
             is_real.astype(jnp.int32))
-    return cents, new_counts, cat_counts, assign
+    return cents, new_counts, cat_counts, assign, p_out
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +154,7 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
 @functools.partial(
     jax.jit,
     static_argnames=("k", "variant", "n_categories", "solver",
-                     "auction_config"),
+                     "auction_config", "return_state"),
 )
 def aba_core(
     x: jnp.ndarray,
@@ -160,6 +166,8 @@ def aba_core(
     n_categories: int = 0,
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
+    prices: jnp.ndarray | None = None,
+    return_state: bool = False,
 ) -> jnp.ndarray:
     """Assignment-Based Anticlustering on a ``(G, M, D)`` stack of problems.
 
@@ -190,9 +198,19 @@ def aba_core(
         for category-free problems at any G (the stacked bidding vmaps the
         kernel) and falls back to its dense ``solve`` when categories are in
         play (the categorical upper-bound mask cannot be factored).
+      prices: optional (G, k) float32 warm-start prices: every batch LAP in
+        this run starts its epsilon schedule from this carried vector
+        instead of zeros.  ``None`` (or zeros) is the cold path and is
+        bit-for-bit identical to the pre-warm-start behaviour -- the
+        assignment is eps-optimal either way, warm prices only cut rounds.
+      return_state: also return the run's carried state as a dict with
+        ``"prices"`` ((G, k) final prices of the last batch, the warm start
+        for a repeated same-shape run) and ``"mu"`` ((G, d) per-group
+        centrality centroid, the running moment of the sort phase).
 
     Returns:
-      (G, M) int32 labels in [0, k).
+      (G, M) int32 labels in [0, k); with ``return_state`` a
+      ``(labels, state)`` tuple.
     """
     G, M, D = x.shape
     if k > M:
@@ -278,27 +296,38 @@ def aba_core(
         ub = None
         cat_counts0 = jnp.zeros((G, k, 1), jnp.int32)
 
+    prices_in = (None if prices is None
+                 else jnp.asarray(prices, jnp.float32))
     if n_batches == 1:
         out = jnp.zeros((G, M + 1), jnp.int32).at[
             garange, first_idx].set(labels0, mode="drop")
+        if return_state:
+            p_out = (jnp.zeros((G, k), jnp.float32) if prices_in is None
+                     else prices_in)
+            return out[:, :M], {"prices": p_out, "mu": mu}
         return out[:, :M]
 
     # --- scan over remaining batches: one (G, k, k) LAP stack per step -----
     fused = (solver_obj.factored is not None and ub is None)
+    p_init = (jnp.zeros((G, k), jnp.float32) if prices_in is None
+              else prices_in)
 
     def step(carry, inp):
-        cents, counts, cat_counts = carry
+        cents, counts, cat_counts, _p_last = carry
         idx, is_real = inp  # (G, k) each
         xb = jnp.take_along_axis(x_ext, jnp.minimum(idx, M)[..., None], axis=1)
         cb = (jnp.take_along_axis(cat_ext, jnp.minimum(idx, M), axis=1)
               if ub is not None else None)
-        cents, new_counts, cat_counts, assign = _assign_batch(
+        # every batch warm-starts from the SAME carried epoch prices (not the
+        # previous batch's): the cold path (prices=None -> per-batch zeros)
+        # stays bit-identical, and warm prices never compound across batches
+        cents, new_counts, cat_counts, assign, p_out = _assign_batch(
             solver_obj, fused, auction_config, cents, counts, cat_counts,
-            xb, is_real, cb=cb, ub=ub)
-        return (cents, new_counts, cat_counts), assign
+            xb, is_real, cb=cb, ub=ub, prices=prices_in)
+        return (cents, new_counts, cat_counts, p_out), assign
 
-    (_, _, _), assigns = jax.lax.scan(
-        step, (centroids0, counts0, cat_counts0),
+    (_, _, _, prices_f), assigns = jax.lax.scan(
+        step, (centroids0, counts0, cat_counts0, p_init),
         (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
 
     labels_all = jnp.concatenate(
@@ -307,6 +336,8 @@ def aba_core(
         garange, jnp.minimum(order_p, M)
     ].set(labels_all.reshape(G, -1), mode="drop")
     # padding rows of the *input* keep whatever label they drew (callers mask)
+    if return_state:
+        return out[:, :M], {"prices": prices_f, "mu": mu}
     return out[:, :M]
 
 
@@ -317,7 +348,7 @@ def aba_core(
 @functools.partial(
     jax.jit,
     static_argnames=("k", "chunk_size", "variant", "solver",
-                     "auction_config"),
+                     "auction_config", "return_state"),
 )
 def aba_stream(
     x: jnp.ndarray,
@@ -327,6 +358,8 @@ def aba_stream(
     variant: Variant = "base",
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
+    prices: jnp.ndarray | None = None,
+    return_state: bool = False,
 ) -> jnp.ndarray:
     """Streaming ABA on flat ``(n, d)`` features: Algorithm 1 in fixed-size
     chunks, for n far beyond what the dense core's working set allows.
@@ -364,9 +397,15 @@ def aba_stream(
         multiple of k (at least one k-batch).
       variant: "base" | "interleave" | "auto" (same rule as ``aba_core``).
       solver / auction_config: LAP backend (registry name) and schedule.
+      prices: optional (1, k) float32 warm-start prices, same contract as
+        ``aba_core`` (every batch LAP starts from this carried vector; None
+        is the bit-identical cold path).
+      return_state: also return ``{"prices": (1, k), "mu": (d,)}`` -- the
+        final batch's prices and the running-moment global centroid.
 
     Returns:
-      (n,) int32 labels in [0, k).
+      (n,) int32 labels in [0, k); with ``return_state`` a
+      ``(labels, state)`` tuple.
     """
     n, d = x.shape
     if k > n:
@@ -441,9 +480,16 @@ def aba_stream(
     counts0 = real_b[0].astype(jnp.int32)[None]   # (1, k)
     labels0 = jnp.arange(k, dtype=jnp.int32)
     cat0 = jnp.zeros((1, k, 1), jnp.int32)        # no categories here
+    prices_in = (None if prices is None
+                 else jnp.asarray(prices, jnp.float32))
     if n_batches == 1:
-        return jnp.zeros((n + 1,), jnp.int32).at[first_idx].set(
+        out1 = jnp.zeros((n + 1,), jnp.int32).at[first_idx].set(
             labels0, mode="drop")[:n]
+        if return_state:
+            p_out = (jnp.zeros((1, k), jnp.float32) if prices_in is None
+                     else prices_in)
+            return out1, {"prices": p_out, "mu": mu}
+        return out1
 
     # --- stream the remaining batches in chunks of cpb ----------------------
     rem = n_batches - 1
@@ -460,31 +506,36 @@ def aba_stream(
     real_rest = real_rest.reshape(n_bchunks, cpb, k)
 
     fused = solver_obj.factored is not None
+    p_init = (jnp.zeros((1, k), jnp.float32) if prices_in is None
+              else prices_in)
 
     def chunk_step(carry, inp):
-        cents, counts = carry
+        cents, counts, p_last = carry
         idx_c, real_c = inp                      # (cpb, k)
         xc = xf[jnp.minimum(idx_c, n - 1)]       # ONE (chunk, d) gather
 
         def batch_step(bcarry, binp):
-            bcents, bcounts = bcarry
+            bcents, bcounts, _bp = bcarry
             xb, is_real = binp                   # (k, d), (k,)
-            bcents, bcounts, _cc, assign = _assign_batch(
+            # same epoch-carried warm start per batch as the dense core
+            bcents, bcounts, _cc, assign, p_out = _assign_batch(
                 solver_obj, fused, auction_config, bcents, bcounts, cat0,
-                xb[None], is_real[None])
-            return (bcents, bcounts), assign[0]
+                xb[None], is_real[None], prices=prices_in)
+            return (bcents, bcounts, p_out), assign[0]
 
-        (cents, counts), assigns = jax.lax.scan(
-            batch_step, (cents, counts), (xc, real_c))
-        return (cents, counts), assigns          # (cpb, k)
+        (cents, counts, p_last), assigns = jax.lax.scan(
+            batch_step, (cents, counts, p_last), (xc, real_c))
+        return (cents, counts, p_last), assigns  # (cpb, k)
 
-    (_, _), assigns = jax.lax.scan(
-        chunk_step, (centroids0, counts0), (idx_rest, real_rest))
+    (_, _, prices_f), assigns = jax.lax.scan(
+        chunk_step, (centroids0, counts0, p_init), (idx_rest, real_rest))
 
     labels_all = jnp.concatenate(
         [labels0, assigns.reshape(-1)[:rem * k]])
     out = jnp.zeros((n + 1,), jnp.int32).at[jnp.minimum(order_p, n)].set(
         labels_all, mode="drop")
+    if return_state:
+        return out[:n], {"prices": prices_f, "mu": mu}
     return out[:n]
 
 

@@ -30,15 +30,26 @@ Solvers
 
 The **solver registry** (``register_solver`` / ``get_solver``) is how the ABA
 core finds its LAP backend: every entry is a :class:`Solver` whose ``solve``
-accepts a ``(B, n, n)`` stack (or ``(n, n)``) and maximizes total cost, with
-an optional matrix-free ``factored`` path.  ``auction``, ``auction_fused``,
+accepts a ``(B, n, n)`` stack (or ``(n, n)``) plus an optional warm-start
+``prices`` vector and returns ``(assignment, prices)``, maximizing total
+cost, with an optional matrix-free ``factored`` path.  The price vector is
+the auction's dual state: :class:`repro.anticluster.AnticlusterEngine`
+carries it across repeated same-shape solves (``repartition``) so each epoch
+warm-starts the epsilon-scaling schedule instead of re-discovering the
+equilibrium from zero.  Price-less backends (greedy, Hungarian) pass the
+incoming prices through unchanged.  ``auction``, ``auction_fused``,
 ``greedy`` and ``scipy`` are registered by default; benchmarks and users add
 LAP backends with one ``register_solver`` call instead of editing the core.
+Backends registered with the legacy price-less signature
+``solve(cost, config)`` are wrapped in a pass-through shim (with a
+``DeprecationWarning``) so third-party registrations keep working.
 """
 
 from __future__ import annotations
 
 import functools
+import inspect
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -84,6 +95,7 @@ def _top2_batched(values: jnp.ndarray):
 
 def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
                    max_rounds: int, fixed_rounds: int = 0,
+                   skip: jnp.ndarray | None = None,
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One epsilon phase of batched Jacobi forward auction (maximization).
 
@@ -95,6 +107,12 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
     prices persist across phases (standard eps-scaling).  A fully assigned
     instance places no bids, so the round update is a no-op for it while the
     rest of the batch keeps iterating (per-instance convergence masking).
+
+    ``skip`` ((B,) bool) marks instances that sit this phase out entirely:
+    their rows start pre-assigned (identity), so by the masking above they
+    never bid and their prices pass through untouched -- the warm-start path
+    uses this to run only the final small-eps phase per warm instance while
+    cold instances in the same stack keep the full ramp.
     """
     B, n = prices.shape
     rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
@@ -139,6 +157,9 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
         return assign, owner, prices, it + 1
 
     assign0 = jnp.full((B, n), -1, jnp.int32)
+    if skip is not None:
+        # pre-assigned identity: no bids, a fixed point of the round update
+        assign0 = jnp.where(skip[:, None], cols, assign0)
     owner0 = jnp.full((B, n), -1, jnp.int32)
     if fixed_rounds:
         # converged state is a fixed point of body (no bids -> no updates)
@@ -166,8 +187,32 @@ def _eps_schedule(span: jnp.ndarray, n: int, config: AuctionConfig):
 
 
 def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
-                config: AuctionConfig) -> jnp.ndarray:
+                config: AuctionConfig,
+                prices0: jnp.ndarray | None = None,
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the eps-scaling schedule; returns (assignment, final prices).
+
+    ``prices0`` warm-starts the solve ((B, n); ``None`` or all-zeros is the
+    cold path).  Epsilon scaling exists to tame the round count from
+    *uninformed* prices -- its early large-eps phases actively re-scramble
+    an already-converged price equilibrium (measured: warm-starting the full
+    schedule saves nothing, and re-running *every* phase at the final small
+    epsilon costs almost as much as the cold ramp).  So the price-carrying
+    path skips phases **per instance**: an instance whose incoming prices
+    are all zero (the engine's cold-start sentinel) runs the full ramp,
+    bit-identical to ``prices0=None``; an instance with carried (nonzero)
+    duals sits out every phase but the last (its rows start pre-assigned,
+    placing no bids -- the same per-instance convergence masking that lets
+    converged instances free-wheel) and solves only the final small-eps
+    phase, from which near-equilibrium prices converge in a handful of
+    rounds while keeping the *same* ``n * eps_lo`` optimality bound as the
+    full schedule's last phase.  (Duals far from equilibrium -- e.g.
+    carried across very different data -- still finish under the round cap,
+    just without the shortcut's speedup.)  The final prices are the dual
+    state a repeated caller threads into its next same-shape solve.
+    """
     B = eps_sched.shape[1]
+    n_phases = eps_sched.shape[0]
     max_rounds = config.max_rounds or (50 * n + 1000)
 
     def phase(prices, eps):
@@ -175,15 +220,43 @@ def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
                                         config.fixed_rounds)
         return prices, assign
 
-    prices0 = jnp.zeros((B, n), jnp.float32)
-    _prices, assigns = jax.lax.scan(phase, prices0, eps_sched)
-    # Safety net: if the round cap was hit, columns may be unassigned; patch
-    # them greedily so the result is always a permutation.
-    return _repair_permutation(assigns[-1])
+    if prices0 is None:
+        prices, assigns = jax.lax.scan(
+            phase, jnp.zeros((B, n), jnp.float32), eps_sched)
+        # Safety net: if the round cap was hit, columns may be unassigned;
+        # patch them greedily so the result is always a permutation.
+        return _repair_permutation(assigns[-1]), prices
+
+    prices0 = prices0.astype(jnp.float32)
+    is_warm = jnp.any(prices0 != 0.0, axis=1)          # (B,) per instance
+    is_last = jnp.arange(n_phases) == n_phases - 1
+
+    def phase_p(prices, inp):
+        eps, last = inp
+        assign, prices = _auction_phase(
+            top2_fn, prices, eps, max_rounds, config.fixed_rounds,
+            skip=jnp.logical_and(is_warm, jnp.logical_not(last)))
+        return prices, assign
+
+    def per_instance(p0):
+        prices, assigns = jax.lax.scan(phase_p, p0, (eps_sched, is_last))
+        return assigns[-1], prices
+
+    def all_warm(p0):
+        # steady-state fast path: one final-eps phase, no skipped-phase
+        # while_loop overhead (the common engine case: every instance warm)
+        return _auction_phase(top2_fn, p0, eps_sched[-1], max_rounds,
+                              config.fixed_rounds)
+
+    assign, prices = jax.lax.cond(jnp.all(is_warm), all_warm, per_instance,
+                                  prices0)
+    return _repair_permutation(assign), prices
 
 
-def _solve_stack(cost: jnp.ndarray, config: AuctionConfig) -> jnp.ndarray:
-    """(B, n, n) -> (B, n); the dense batched engine."""
+def _solve_stack(cost: jnp.ndarray, config: AuctionConfig,
+                 prices0: jnp.ndarray | None = None,
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, n, n) -> ((B, n) assignment, (B, n) prices); the dense engine."""
     B, n, _ = cost.shape
     finite = jnp.where(cost <= _NEG / 2, 0.0, cost)
     span = jnp.maximum(jnp.max(finite, axis=(1, 2))
@@ -192,12 +265,15 @@ def _solve_stack(cost: jnp.ndarray, config: AuctionConfig) -> jnp.ndarray:
     def top2_fn(prices):
         return _top2_batched(cost - prices[:, None, :])
 
-    return _run_phases(top2_fn, _eps_schedule(span, n, config), n, config)
+    return _run_phases(top2_fn, _eps_schedule(span, n, config), n, config,
+                       prices0)
 
 
-@functools.partial(jax.jit, static_argnames=("config",))
+@functools.partial(jax.jit, static_argnames=("config", "return_prices"))
 def auction_solve(cost: jnp.ndarray,
-                  config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+                  config: AuctionConfig = AuctionConfig(), *,
+                  prices: jnp.ndarray | None = None,
+                  return_prices: bool = False) -> jnp.ndarray:
     """eps-optimal max-cost assignment; single matrix or batched stack.
 
     ``(n, n)`` input returns ``row_to_col`` (n,) int32; a stacked
@@ -207,6 +283,12 @@ def auction_solve(cost: jnp.ndarray,
     Rectangular problems must be padded by the caller (constant-cost dummy
     rows are neutral: any column suits them; a padded instance converges
     early and free-wheels at its fixed point while the rest finish).
+
+    ``prices`` warm-starts the epsilon schedule from a carried price vector
+    ((n,) / (B, n); ``None`` = zeros, the cold path -- bit-identical to the
+    pre-warm-start behaviour).  ``return_prices=True`` additionally returns
+    the final prices (the shape of the assignment), which is what the
+    registry's price-carrying ``solve`` signature exposes.
     """
     cost = cost.astype(jnp.float32)
     in_shape = cost.shape
@@ -215,21 +297,29 @@ def auction_solve(cost: jnp.ndarray,
     squeeze = cost.ndim == 2
     if squeeze:
         cost = cost[None]
+        prices = None if prices is None else prices[None]
     B, n, n2 = cost.shape
     if n != n2:
         raise ValueError(f"cost must be square, got {in_shape}")
     if n == 1:
         out = jnp.zeros((B, 1), jnp.int32)
+        p_out = (jnp.zeros((B, 1), jnp.float32) if prices is None
+                 else prices.astype(jnp.float32))
     else:
-        out = _solve_stack(cost, config)
+        out, p_out = _solve_stack(cost, config, prices)
+    if return_prices:
+        return (out[0], p_out[0]) if squeeze else (out, p_out)
     return out[0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("config", "force"))
+@functools.partial(jax.jit,
+                   static_argnames=("config", "force", "return_prices"))
 def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
                            is_real: jnp.ndarray | None = None,
                            config: AuctionConfig = AuctionConfig(),
-                           force: str | None = None) -> jnp.ndarray:
+                           force: str | None = None,
+                           prices: jnp.ndarray | None = None,
+                           return_prices: bool = False) -> jnp.ndarray:
     """Matrix-free auction on ``cost[i, j] = -2 x_i . c_j + ||c_j||^2``.
 
     This is the ABA batch-to-centroid LAP with the row-constant ``||x||^2``
@@ -245,6 +335,8 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
     bidding reduction vmaps the kernel, which on TPU is one extra grid dim).
     ``is_real`` marks dummy rows whose cost is the neutral constant 0,
     matching the dense masked path in :func:`repro.core.aba.aba_core`.
+    ``prices`` / ``return_prices`` carry the auction's dual state exactly as
+    in :func:`auction_solve` (warm start in, final prices out).
     Returns ``row_to_col`` (k,) / (G, k) int32.
     """
     from repro.kernels.ops import bid_top2
@@ -256,9 +348,14 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
     if squeeze:
         x, c = x[None], c[None]
         is_real = None if is_real is None else is_real[None]
+        prices = None if prices is None else prices[None]
     G, n, _ = x.shape
     if n == 1:
         out = jnp.zeros((G, 1), jnp.int32)
+        if return_prices:
+            p_out = (jnp.zeros((G, 1), jnp.float32) if prices is None
+                     else prices.astype(jnp.float32))
+            return (out[0], p_out[0]) if squeeze else (out, p_out)
         return out[0] if squeeze else out
     x = x.astype(jnp.float32)
     c = c.astype(jnp.float32)
@@ -292,7 +389,10 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
             v2 = jnp.where(is_real, v2, dv2[:, None])
         return v1, j1, v2
 
-    out = _run_phases(top2_fn, _eps_schedule(span, n, config), n, config)
+    out, p_out = _run_phases(top2_fn, _eps_schedule(span, n, config), n,
+                             config, prices)
+    if return_prices:
+        return (out[0], p_out[0]) if squeeze else (out, p_out)
     return out[0] if squeeze else out
 
 
@@ -347,14 +447,23 @@ def assignment_value(cost: np.ndarray, row_to_col: np.ndarray) -> float:
 class Solver(NamedTuple):
     """A registered LAP backend for the ABA core.
 
-    ``solve(cost, config)`` takes a ``(B, n, n)`` stack (or a single
-    ``(n, n)`` matrix) and returns ``row_to_col`` of shape ``(B, n)`` /
-    ``(n,)``, MAXIMIZING total cost; it must be jit/scan-safe (host solvers
-    wrap themselves in ``jax.pure_callback``).  ``factored`` is the optional
-    matrix-free path ``factored(x, c, is_real=..., config=...)`` used by the
-    ABA core whenever the cost factors as ``-2 x.c^T + ||c||^2`` (no
-    categorical mask); it must accept both ``(n, d)`` and the core's stacked
-    ``(G, n, d)`` inputs (the fused-kernel auction does).
+    ``solve(cost, config, prices=None)`` takes a ``(B, n, n)`` stack (or a
+    single ``(n, n)`` matrix) plus an optional warm-start price vector
+    ((B, n) / (n,)) and returns ``(row_to_col, prices)`` of shapes
+    ``(B, n)`` / ``(n,)``, MAXIMIZING total cost; it must be jit/scan-safe
+    (host solvers wrap themselves in ``jax.pure_callback``).  ``prices=None``
+    is the cold start; backends without a price concept (greedy, Hungarian)
+    return the incoming prices unchanged (zeros when cold) so the engine's
+    state threading stays a no-op for them.  ``factored`` is the optional
+    matrix-free path ``factored(x, c, is_real=..., config=..., prices=...)``
+    -> ``(row_to_col, prices)`` used by the ABA core whenever the cost
+    factors as ``-2 x.c^T + ||c||^2`` (no categorical mask); it must accept
+    both ``(n, d)`` and the core's stacked ``(G, n, d)`` inputs (the
+    fused-kernel auction does).
+
+    Backends registered with the legacy price-less signature
+    ``solve(cost, config) -> row_to_col`` are auto-wrapped in a pass-through
+    shim by :func:`register_solver` (with a ``DeprecationWarning``).
     """
 
     solve: Callable
@@ -364,10 +473,49 @@ class Solver(NamedTuple):
 _REGISTRY: dict[str, Solver] = {}
 
 
+def _accepts_prices(fn: Callable) -> bool:
+    try:
+        return "prices" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # C callables etc.: assume legacy
+        return False
+
+
+def _prices_or_zeros(shape_src: jnp.ndarray, prices):
+    """Pass-through prices for price-less backends ((..., n) from (..., n, n))."""
+    if prices is not None:
+        return jnp.asarray(prices, jnp.float32)
+    return jnp.zeros(shape_src.shape[:-1], jnp.float32)
+
+
+def _legacy_solve_shim(solve: Callable) -> Callable:
+    @functools.wraps(solve)
+    def shim(cost, config=AuctionConfig(), prices=None):
+        return solve(cost, config), _prices_or_zeros(cost, prices)
+    return shim
+
+
+def _legacy_factored_shim(factored: Callable) -> Callable:
+    @functools.wraps(factored)
+    def shim(x, c, *, is_real=None, config=AuctionConfig(), prices=None):
+        out = factored(x, c, is_real=is_real, config=config)
+        if prices is None:
+            prices = jnp.zeros(c.shape[:-1], jnp.float32)  # (G, n) / (n,)
+        return out, jnp.asarray(prices, jnp.float32)
+    return shim
+
+
 def register_solver(name: str, solve: Callable, *,
                     factored: Callable | None = None,
                     overwrite: bool = False) -> Solver:
     """Register a LAP backend under ``name`` (see :class:`Solver`).
+
+    The canonical signature is price-carrying:
+    ``solve(cost, config, prices=None) -> (row_to_col, prices)``.  A solver
+    whose signature has no ``prices`` parameter is treated as the legacy
+    price-less form ``solve(cost, config) -> row_to_col`` and wrapped in a
+    pass-through shim (incoming prices are returned unchanged, zeros when
+    cold) with a ``DeprecationWarning`` -- warm starts are a no-op for such
+    backends but everything else keeps working.
 
     The ABA core resolves ``name`` at *trace* time (solver names are static
     jit arguments), so ``overwrite=True`` does not reach already-compiled
@@ -378,6 +526,20 @@ def register_solver(name: str, solve: Callable, *,
     if not overwrite and name in _REGISTRY:
         raise ValueError(f"solver {name!r} already registered "
                          f"(pass overwrite=True to replace it)")
+    if not _accepts_prices(solve):
+        warnings.warn(
+            f"solver {name!r} uses the deprecated price-less signature "
+            "solve(cost, config); wrapping it in a pass-through shim. "
+            "Migrate to solve(cost, config, prices=None) -> "
+            "(assignment, prices) to participate in warm starts.",
+            DeprecationWarning, stacklevel=2)
+        solve = _legacy_solve_shim(solve)
+    if factored is not None and not _accepts_prices(factored):
+        warnings.warn(
+            f"solver {name!r}: factored path uses the deprecated price-less "
+            "signature; wrapping it in a pass-through shim.",
+            DeprecationWarning, stacklevel=2)
+        factored = _legacy_factored_shim(factored)
     solver = Solver(solve=solve, factored=factored)
     _REGISTRY[name] = solver
     return solver
@@ -391,15 +553,41 @@ def get_solver(name: str) -> Solver:
 
 
 def available_solvers() -> tuple[str, ...]:
+    """Sorted names of every registered LAP backend.
+
+    Every listed backend satisfies the price-carrying :class:`Solver`
+    contract (legacy registrations are shimmed at registration time), so
+    each is usable both by one-shot ``anticluster()`` calls and as the
+    warm-started engine inside ``AnticlusterEngine.repartition``.
+    """
     return tuple(sorted(_REGISTRY))
 
 
+def _auction_solve_p(cost: jnp.ndarray,
+                     config: AuctionConfig = AuctionConfig(),
+                     prices: jnp.ndarray | None = None):
+    """Registry entry: price-carrying wrapper over ``auction_solve``."""
+    return auction_solve(cost, config, prices=prices, return_prices=True)
+
+
+def _auction_factored_p(x: jnp.ndarray, c: jnp.ndarray, *,
+                        is_real: jnp.ndarray | None = None,
+                        config: AuctionConfig = AuctionConfig(),
+                        prices: jnp.ndarray | None = None):
+    """Registry entry: price-carrying wrapper over the matrix-free auction."""
+    return auction_solve_factored(x, c, is_real=is_real, config=config,
+                                  prices=prices, return_prices=True)
+
+
 def _greedy_stack(cost: jnp.ndarray,
-                  config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+                  config: AuctionConfig = AuctionConfig(),
+                  prices: jnp.ndarray | None = None):
     del config  # greedy has no tuning knobs
     if cost.ndim == 3:
-        return jax.vmap(greedy_solve)(cost)
-    return greedy_solve(cost)
+        out = jax.vmap(greedy_solve)(cost)
+    else:
+        out = greedy_solve(cost)
+    return out, _prices_or_zeros(cost, prices)  # price-less: pass-through
 
 
 def _scipy_host_stack(cost: np.ndarray) -> np.ndarray:
@@ -407,12 +595,15 @@ def _scipy_host_stack(cost: np.ndarray) -> np.ndarray:
 
 
 def scipy_solve_jax(cost: jnp.ndarray,
-                    config: AuctionConfig = AuctionConfig()) -> jnp.ndarray:
+                    config: AuctionConfig = AuctionConfig(),
+                    prices: jnp.ndarray | None = None):
     """Exact Hungarian as a jit/scan-safe backend via ``pure_callback``.
 
     The oracle solver, usable anywhere ``auction_solve`` is: each stack
     instance round-trips to the host, so it is CPU-speed by construction --
     the registry entry exists for exactness checks and tiny problems.
+    Hungarian has no dual price state worth carrying, so the warm-start
+    ``prices`` are passed through unchanged (zeros when cold).
     """
     del config
     cost = jnp.asarray(cost, jnp.float32)
@@ -422,11 +613,11 @@ def scipy_solve_jax(cost: jnp.ndarray,
         _scipy_host_stack,
         jax.ShapeDtypeStruct(stack.shape[:2], jnp.int32),
         stack, vmap_method="sequential")
-    return out[0] if squeeze else out
+    return out[0] if squeeze else out, _prices_or_zeros(cost, prices)
 
 
-register_solver("auction", auction_solve)
-register_solver("auction_fused", auction_solve,
-                factored=auction_solve_factored)
+register_solver("auction", _auction_solve_p)
+register_solver("auction_fused", _auction_solve_p,
+                factored=_auction_factored_p)
 register_solver("greedy", _greedy_stack)
 register_solver("scipy", scipy_solve_jax)

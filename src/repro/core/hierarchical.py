@@ -91,7 +91,8 @@ def _regroup(glabels: jnp.ndarray, valid: jnp.ndarray, n_groups: int,
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "variant", "n_categories", "solver",
-                     "auction_config", "batched", "chunk_size"),
+                     "auction_config", "batched", "chunk_size",
+                     "return_state"),
 )
 def hierarchical_core(
     x: jnp.ndarray,
@@ -104,6 +105,8 @@ def hierarchical_core(
     auction_config: AuctionConfig = AuctionConfig(),
     batched: bool = True,
     chunk_size: int | None = None,
+    prices: tuple[jnp.ndarray, ...] | None = None,
+    return_state: bool = False,
 ) -> jnp.ndarray:
     """ABA with L = len(plan) hierarchical levels; labels in [0, prod(plan)).
 
@@ -120,11 +123,22 @@ def hierarchical_core(
     at once) through ``repro.core.aba.aba_stream``; levels >= 2 work on
     n/K_1-row group stacks and stay on the dense batched core.  Level-1
     streaming requires category-free input (the front door guarantees it).
+
+    ``prices`` warm-starts every level's auction from a per-level carried
+    price tuple (level l has shape ``(prod(plan[:l]), plan[l])``, level 1 is
+    ``(1, plan[0])`` -- see :func:`plan_price_shapes`); ``None`` is the
+    bit-identical cold path.  ``return_state`` additionally returns
+    ``{"prices": per-level tuple, "mu": (d,) level-1 centrality moment}``.
+    State threading requires the ``batched=True`` level engine (the legacy
+    vmap path exists only for benchmarking).
     """
     n = x.shape[0]
     k_total = math.prod(plan)
     if k_total > n:
         raise ValueError(f"prod(plan)={k_total} > n={n}")
+    if (not batched) and (return_state or prices is not None):
+        raise NotImplementedError(
+            "price/state threading requires batched=True levels")
     kw = dict(variant=variant, solver=solver, auction_config=auction_config,
               n_categories=n_categories)
 
@@ -134,24 +148,35 @@ def hierarchical_core(
         cat_i = categories.astype(jnp.int32)
         cat_ext = jnp.concatenate([cat_i, jnp.zeros((1,), jnp.int32)])
 
+    p_levels = []
+    p_in = (lambda i: None) if prices is None else (lambda i: prices[i])
     if chunk_size is not None and categories is None:
-        glabels = aba_stream(xf, plan[0], chunk_size, variant=variant,
-                             solver=solver, auction_config=auction_config)
+        glabels, st1 = aba_stream(
+            xf, plan[0], chunk_size, variant=variant, solver=solver,
+            auction_config=auction_config, prices=p_in(0), return_state=True)
+        mu1 = st1["mu"]
     else:
-        glabels = aba_core(
+        glabels, st1 = aba_core(
             xf[None], plan[0],
-            categories=None if categories is None else cat_i[None], **kw)[0]
+            categories=None if categories is None else cat_i[None],
+            prices=p_in(0), return_state=True, **kw)
+        glabels = glabels[0]
+        mu1 = st1["mu"][0]
+    p_levels.append(st1["prices"])
     n_groups = plan[0]
     m = -(-n // n_groups)  # static upper bound on group size
 
-    for k_l in plan[1:]:
+    for li, k_l in enumerate(plan[1:], start=1):
         idx, valid = _regroup(glabels, jnp.ones((n,), jnp.bool_), n_groups, m)
         xg = x_ext[jnp.minimum(idx, n)]  # (G, M, D)
         cg = None if categories is None else cat_ext[jnp.minimum(idx, n)]
         if batched:
-            sub = aba_core(xg, k_l, valid, variant="base", categories=cg,
-                           n_categories=n_categories, solver=solver,
-                           auction_config=auction_config)
+            sub, st_l = aba_core(xg, k_l, valid, variant="base",
+                                 categories=cg, n_categories=n_categories,
+                                 solver=solver,
+                                 auction_config=auction_config,
+                                 prices=p_in(li), return_state=True)
+            p_levels.append(st_l["prices"])
         elif cg is None:
             sub = jax.vmap(
                 lambda xx, vm: aba_core(xx[None], k_l, vm[None], **kw)[0]
@@ -167,7 +192,23 @@ def hierarchical_core(
         ].set(jnp.where(valid, new_global, 0).reshape(-1), mode="drop")[:n]
         n_groups *= k_l
         m = -(-m // k_l)
+    if return_state:
+        return glabels, {"prices": tuple(p_levels), "mu": mu1}
     return glabels
+
+
+def plan_price_shapes(plan: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
+    """Per-level warm-start price shapes for ``hierarchical_core``.
+
+    Level 1 solves the full data as one G=1 stack -> ``(1, plan[0])``;
+    level l solves one LAP stack per group of the previous levels ->
+    ``(prod(plan[:l-1]), plan[l-1])`` in 1-based level terms.
+    """
+    shapes, groups = [], 1
+    for k_l in plan:
+        shapes.append((groups, k_l))
+        groups *= k_l
+    return tuple(shapes)
 
 
 # ---------------------------------------------------------------------------

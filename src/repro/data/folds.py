@@ -1,33 +1,72 @@
 """Representative K-fold cross-validation via anticlustering (paper Section 1:
 Papenberg & Klau's CV application).  Each fold is an anticluster -> folds
 mirror the full data distribution, and with ``categories`` (e.g. class
-labels) the folds are also stratified exactly (constraint (5))."""
+labels) the folds are also stratified exactly (constraint (5)).
+
+Built on :class:`repro.anticluster.AnticlusterEngine`: a CV harness that
+re-builds folds repeatedly (per seed sweep, per feature-set revision) passes
+one :func:`fold_engine` instance to every :func:`aba_folds` call and pays
+the compile exactly once; one-off calls construct a throwaway engine
+internally (same labels either way -- a cold engine partition is
+bit-identical to one-shot ``anticluster``)."""
 
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.anticluster import AnticlusterSpec, anticluster
+from repro.anticluster import AnticlusterEngine
+
+
+def fold_engine(n_folds: int, *, categories: np.ndarray | None = None,
+                max_k: int = 512, chunk_size="auto") -> AnticlusterEngine:
+    """An :class:`AnticlusterEngine` configured for ``n_folds`` CV folds.
+
+    Reuse it across repeated ``aba_folds`` calls on same-shaped features to
+    amortize compilation (``aba_folds`` itself always runs the cold
+    ``partition`` so fold labels stay reproducible run to run; drive
+    ``engine.repartition`` directly if you want warm-started prices between
+    successive builds and accept eps-optimal label drift).
+    """
+    from repro.data.minibatch import _auto_or_flat_spec
+    spec = _auto_or_flat_spec(n_folds, max_k, chunk_size).replace(
+        categories=None if categories is None else jnp.asarray(categories))
+    return AnticlusterEngine(spec)
 
 
 def aba_folds(features: np.ndarray, n_folds: int, *,
               categories: np.ndarray | None = None, seed: int = 0,
-              max_k: int = 512):
+              max_k: int = 512,
+              engine: AnticlusterEngine | None = None):
     """Returns fold labels (N,) int32 in [0, n_folds).
 
-    Routes through the spec dispatcher, so ``n_folds`` larger than ``max_k``
-    takes the hierarchical plan -- including with ``categories``: each level
-    stratifies within its groups and ceil/floor compose across levels, so the
-    exact per-category constraint (5) holds for the final folds (see
+    Routes through the engine (and thereby the spec dispatcher), so
+    ``n_folds`` larger than ``max_k`` takes the hierarchical plan --
+    including with ``categories``: each level stratifies within its groups
+    and ceil/floor compose across levels, so the exact per-category
+    constraint (5) holds for the final folds (see
     ``repro.core.hierarchical``).  Legacy behaviour silently dropped the
     hierarchy whenever categories were given.
+
+    ``engine`` (from :func:`fold_engine`) lets repeated callers share one
+    compiled executable (a cold partition per call -- deterministic labels);
+    when omitted a fresh engine is built per call.
     """
     del seed  # ABA is deterministic; kept for API stability
-    from repro.data.minibatch import _auto_or_flat_spec
-    spec = _auto_or_flat_spec(n_folds, max_k).replace(
-        categories=None if categories is None else jnp.asarray(categories))
-    return np.asarray(anticluster(jnp.asarray(features), spec).labels)
+    if engine is None:
+        engine = fold_engine(n_folds, categories=categories, max_k=max_k,
+                             chunk_size="auto")
+    elif engine.spec.k != n_folds:
+        raise ValueError(
+            f"engine was built for k={engine.spec.k} folds but "
+            f"n_folds={n_folds} was requested; build it with "
+            f"fold_engine({n_folds}, ...)")
+    elif (engine.spec.categories is None) != (categories is None):
+        raise ValueError(
+            "engine stratification does not match this call: pass the same "
+            "categories to fold_engine(...) and aba_folds(...)")
+    res, _state = engine.partition(jnp.asarray(features))
+    return np.asarray(res.labels)
 
 
 def fold_splits(labels: np.ndarray, n_folds: int):

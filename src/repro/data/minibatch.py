@@ -6,6 +6,14 @@ rows of Tables 4/8 are exactly this workload).  Because ABA is deterministic,
 the batch schedule is reproducible bit-for-bit after a restart -- the
 fault-tolerance story of the training loop leans on this.
 
+The sequencer owns ONE :class:`repro.anticluster.AnticlusterEngine` for the
+whole training run: the initial partition compiles the shape-keyed
+executable once, and per-epoch re-partitions (``epoch(i, features=...)`` /
+``refresh``) warm-start the auction from the carried :class:`ABAState`
+instead of re-tracing and cold-solving every epoch.  The compile-once
+contract is load-bearing (``engine.compile_count`` stays 1 across epochs)
+and pinned by ``tests/test_engine.py``.
+
 Two modes:
   * single-host: hierarchical ABA over the example embeddings;
   * sharded: each data-parallel shard anticlusters its local rows via
@@ -21,7 +29,7 @@ import warnings
 import numpy as np
 import jax.numpy as jnp
 
-from repro.anticluster import AnticlusterSpec, anticluster
+from repro.anticluster import AnticlusterEngine, AnticlusterSpec
 from repro.core.objective import diversity_per_cluster
 
 
@@ -52,6 +60,14 @@ def _auto_or_flat_spec(k: int, max_k: int,
 class ABABatchSequencer:
     """Deterministic diverse mini-batch schedule over a dataset.
 
+    Holds one :class:`AnticlusterEngine` for the training run.  The
+    constructor's cold partition compiles the executable; every later
+    re-partition (``refresh`` / ``epoch(i, features=...)`` on drifted
+    embeddings) reuses it with warm-started auction prices -- zero retraces
+    after epoch 0 (``self.engine.compile_count == 1``), which fixes the old
+    per-epoch behaviour of re-entering jit with fresh tracers for an
+    identical shape.
+
     Args:
       features: (N, D) embedding used for anticlustering (e.g. the doc/topic
         features from synthetic.lm_token_stream, pixel features, or an
@@ -70,15 +86,32 @@ class ABABatchSequencer:
         self.k = max(n // batch_size, 1)
         self.n_used = self.k * batch_size
         self.seed = seed
-        self.result = anticluster(
-            jnp.asarray(features[:self.n_used]),
+        self.engine = AnticlusterEngine(
             _auto_or_flat_spec(self.k, max_k, chunk_size))
+        self.result, self.state = self.engine.partition(
+            jnp.asarray(features[:self.n_used]))
+        self._features = features
+        self._rebuild_batches()
+
+    def _rebuild_batches(self):
         labels = np.asarray(self.result.labels)
         order = np.argsort(labels, kind="stable")
         self.batches = order.reshape(self.k, -1) if self.k > 1 else (
             order[None, :])
         # anticluster sizes are all exactly batch_size when K | N
+
+    def refresh(self, features: np.ndarray):
+        """Warm re-partition on updated (same-shape) features.
+
+        The carried :class:`ABAState` warm-starts every batch LAP; the
+        engine's compiled executable is reused as-is (no retrace).  Returns
+        the new :class:`AnticlusterResult`.
+        """
+        self.result, self.state = self.engine.repartition(
+            jnp.asarray(features[:self.n_used]), self.state)
         self._features = features
+        self._rebuild_batches()
+        return self.result
 
     def diversity_stats(self):
         f = jnp.asarray(self._features[:self.n_used])
@@ -88,11 +121,20 @@ class ABABatchSequencer:
         div = np.asarray(diversity_per_cluster(f, jnp.asarray(lab), self.k))
         return float(div.std()), float(div.max() - div.min())
 
-    def epoch(self, epoch_idx: int):
-        """Yield batch index arrays; order rotated deterministically."""
+    def epoch(self, epoch_idx: int, features: np.ndarray | None = None):
+        """Batch index arrays for one epoch; order rotated deterministically.
+
+        Pass ``features`` (same shape, drifted values -- e.g. the encoder
+        embedding after the previous epoch's updates) to warm re-partition
+        first; omit it to reuse the existing batch membership.  Returns a
+        list (not a generator) so the re-partition happens eagerly -- the
+        sequencer's ``result``/``state``/``diversity_stats`` reflect the new
+        epoch immediately, whether or not the batches are consumed.
+        """
+        if features is not None:
+            self.refresh(features)
         rng = np.random.default_rng(self.seed * 100003 + epoch_idx)
-        for b in rng.permutation(self.k):
-            yield self.batches[b]
+        return [self.batches[b] for b in rng.permutation(self.k)]
 
     def __len__(self):
         return self.k

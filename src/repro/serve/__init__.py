@@ -1,3 +1,4 @@
 from repro.serve.generate import Generator
+from repro.serve.anticluster_service import AnticlusterService
 
-__all__ = ["Generator"]
+__all__ = ["Generator", "AnticlusterService"]

@@ -1,0 +1,139 @@
+"""Request-batching anticlustering service over warm engine lanes.
+
+The serving shape of the paper's repeated-workload story: clients submit
+``(n, d)`` feature matrices (``partition`` for one, ``partition_many`` for a
+burst) and the service answers with :class:`AnticlusterResult` per request.
+Internally requests are grouped by input signature into **lanes**; each lane
+owns one :class:`repro.anticluster.AnticlusterEngine` plus its carried
+:class:`ABAState`, so a lane compiles on its first request and every later
+request warm-starts the auction from the previous traffic's prices --
+steady-state serving never retraces and never cold-solves.
+
+Same-shape requests arriving together are additionally *stacked* into one
+``(G, M, D)`` batch and solved by a single rank-polymorphic core call (the
+ABA core's group axis; flat-plan specs only -- hierarchical specs fall back
+to sequential warm calls on the same lane).  Stacked lanes pad the group
+axis to power-of-two buckets (repeating the last request) so a fluctuating
+burst size maps onto a handful of compiled executables instead of one per
+burst width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.anticluster import (ABAState, AnticlusterEngine,
+                               AnticlusterResult, AnticlusterSpec)
+
+__all__ = ["AnticlusterService"]
+
+
+@dataclasses.dataclass
+class _Lane:
+    engine: AnticlusterEngine
+    state: ABAState | None = None
+
+
+class AnticlusterService:
+    """Shape-keyed, warm-started request batching for ``anticluster``.
+
+    Args:
+      spec: the :class:`AnticlusterSpec` every request is solved under
+        (keyword ``overrides`` compose like ``anticluster``'s).  Specs with
+        ``categories`` / ``valid_mask`` / ``mesh`` are per-dataset rather
+        than per-request concepts and are rejected here.
+      max_group: cap on the stacked group axis; bursts larger than this are
+        split into successive stacked calls.
+    """
+
+    def __init__(self, spec: AnticlusterSpec | None = None, *,
+                 max_group: int = 32, **overrides):
+        if spec is None:
+            spec = AnticlusterSpec(**overrides)
+        elif overrides:
+            spec = spec.replace(**overrides)
+        if spec.mesh is not None or spec.categories is not None \
+                or spec.valid_mask is not None:
+            raise NotImplementedError(
+                "AnticlusterService serves anonymous flat (n, d) requests; "
+                "categories/valid_mask/mesh are per-dataset concepts -- use "
+                "AnticlusterEngine directly")
+        if max_group < 1:
+            raise ValueError(f"max_group={max_group} must be >= 1")
+        self.spec = spec
+        self.max_group = max_group
+        self._lanes: dict = {}
+        # stacked (G, M, D) execution needs a flat per-request plan; the
+        # factorization search is static per spec, so resolve it once here
+        self._flat_plan = len(spec.resolve_plan()) == 1
+
+    @property
+    def lane_count(self) -> int:
+        """Number of live (engine, state) lanes -- one per input signature."""
+        return len(self._lanes)
+
+    def _lane(self, key) -> _Lane:
+        lane = self._lanes.get(key)
+        if lane is None:
+            lane = _Lane(engine=AnticlusterEngine(self.spec))
+            self._lanes[key] = lane
+        return lane
+
+    def _can_stack(self, shape) -> bool:
+        return self._flat_plan and len(shape) == 2
+
+    def partition(self, x) -> AnticlusterResult:
+        """Serve one request on its (warm) lane."""
+        return self.partition_many([x])[0]
+
+    def partition_many(self, requests) -> list[AnticlusterResult]:
+        """Serve a burst; results align with the request order.
+
+        Same-shape requests are stacked into (G, M, D) engine calls in
+        power-of-two group buckets; each bucket size is its own lane (own
+        compiled executable + carried prices).
+        """
+        xs = [jnp.asarray(x).astype(self.spec.dtype) for x in requests]
+        groups: dict[tuple, list[int]] = {}
+        for i, x in enumerate(xs):
+            groups.setdefault(tuple(x.shape), []).append(i)
+        results: list = [None] * len(xs)
+        for shape, idxs in groups.items():
+            solo = idxs
+            if len(idxs) > 1 and self._can_stack(shape):
+                solo = []
+                for lo in range(0, len(idxs), self.max_group):
+                    part = idxs[lo:lo + self.max_group]
+                    if len(part) == 1:
+                        solo = part  # a burst remainder of 1: the solo
+                        continue     # lane already serves this signature
+                    self._serve_stacked(xs, part, shape, results)
+            lane = self._lane(("solo", shape)) if solo else None
+            for i in solo:
+                res, state = self._call(lane, xs[i])
+                lane.state = state
+                results[i] = res
+        return results
+
+    def _serve_stacked(self, xs, idxs, shape, results):
+        G = len(idxs)
+        bucket = 1 << (G - 1).bit_length()  # pad bursts to pow2 widths
+        stack = jnp.stack([xs[i] for i in idxs]
+                          + [xs[idxs[-1]]] * (bucket - G))
+        lane = self._lane(("stack", shape, bucket))
+        res, state = self._call(lane, stack)
+        lane.state = state
+        for g, i in enumerate(idxs):
+            results[i] = AnticlusterResult(
+                labels=res.labels[g], cluster_sizes=res.cluster_sizes[g],
+                diversity_sd=res.diversity_sd[g],
+                diversity_range=res.diversity_range[g],
+                k=res.k, plan=res.plan, solver=res.solver,
+                variant=res.variant)
+
+    def _call(self, lane: _Lane, x):
+        if lane.state is None:
+            return lane.engine.partition(x)
+        return lane.engine.repartition(x, lane.state)

@@ -1,0 +1,374 @@
+"""AnticlusterEngine session API: cold parity with the one-shot front door,
+zeroed-state repartition == partition (bit-for-bit), warm-start quality,
+compile-exactly-once across epochs, ABAState pytree round-trips, the
+price-carrying solver-registry signature (+ legacy deprecation shim), the
+engine-backed sequencer/folds consumers, and the serving shim."""
+
+import pickle
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.anticluster import (ABAState, AnticlusterEngine, AnticlusterSpec,
+                               anticluster, available_solvers, get_solver,
+                               register_solver)
+from repro.core.assignment import AuctionConfig, auction_solve
+from repro.core.objective import balance_ok, objective_centroid
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cold parity: engine.partition == one-shot anticluster, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(k=7, plan=None),
+    dict(k=24, plan=(4, 6)),
+    dict(k=7, plan=None, chunk_size=100),
+    dict(k=7, plan=None, solver="auction_fused"),
+])
+def test_partition_matches_oneshot(kw):
+    x = jnp.asarray(_data(600, 6, 31))
+    res, state = AnticlusterEngine(**kw).partition(x)
+    one = anticluster(x, **kw)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(one.labels))
+    assert res.plan == one.plan and res.solver == one.solver
+    np.testing.assert_array_equal(np.asarray(state.prev_labels),
+                                  np.asarray(res.labels))
+
+
+def test_partition_matches_oneshot_categorical():
+    rng = np.random.default_rng(32)
+    x = jnp.asarray(_data(500, 5, 32))
+    cats = rng.integers(0, 4, size=500).astype(np.int32)
+    eng = AnticlusterEngine(k=5, plan=None, categories=cats)
+    res, _ = eng.partition(x)
+    one = anticluster(x, k=5, plan=None, categories=cats)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(one.labels))
+
+
+def test_partition_matches_oneshot_stacked():
+    rng = np.random.default_rng(33)
+    x = rng.normal(size=(3, 40, 5)).astype(np.float32)
+    vm = np.ones((3, 40), bool)
+    vm[1, 37:] = False
+    eng = AnticlusterEngine(k=5, plan=None, variant="base", valid_mask=vm)
+    res, state = eng.partition(x)
+    one = anticluster(x, k=5, plan=None, variant="base", valid_mask=vm)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(one.labels))
+    assert state.prices[0].shape == (3, 5)
+    assert state.moment_count.shape == (3,)
+    np.testing.assert_array_equal(np.asarray(state.moment_count),
+                                  [40.0, 37.0, 40.0])
+
+
+# ---------------------------------------------------------------------------
+# Zeroed state == partition (the cold-sentinel contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(k=6, plan=None),
+    dict(k=12, plan=(3, 4)),
+    dict(k=6, plan=None, chunk_size=64),
+])
+def test_repartition_zeroed_state_bit_identical(kw):
+    x = jnp.asarray(_data(300, 5, 34))
+    eng = AnticlusterEngine(**kw)
+    res, _ = eng.partition(x)
+    res0, _ = eng.repartition(x, eng.init_state(x))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(res0.labels))
+    # and the shared executable never retraced between the two calls
+    assert eng.compile_count == 1
+
+
+# ---------------------------------------------------------------------------
+# Warm starts: balanced, objective within 1% of cold, zero retraces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(k=8, plan=None),
+    dict(k=24, plan=(4, 6)),
+    dict(k=8, plan=None, chunk_size=100),
+    dict(k=8, plan=None, solver="auction_fused"),
+])
+def test_warm_repartition_quality_and_compile_count(kw):
+    rng = np.random.default_rng(35)
+    x = _data(640, 6, 35)
+    eng = AnticlusterEngine(**kw)
+    res, state = eng.partition(jnp.asarray(x))
+    k = eng.spec.k
+    o_cold = float(objective_centroid(jnp.asarray(x), res.labels, k))
+    for _ in range(3):  # drifting epochs, same shape
+        x = x + rng.normal(size=x.shape).astype(np.float32) * 0.05
+        res, state = eng.repartition(jnp.asarray(x), state)
+        xj = jnp.asarray(x)
+        assert res.balanced and balance_ok(np.asarray(res.labels), k, 640)
+        o_warm = float(objective_centroid(xj, res.labels, k))
+        o_ref = float(objective_centroid(
+            xj, anticluster(xj, **kw).labels, k))
+        assert abs(o_warm - o_ref) / abs(o_ref) < 0.01  # within 1% of cold
+    assert eng.compile_count == 1  # one trace across all epochs
+    del o_cold
+
+
+def test_warm_prices_are_nonzero_and_recentered():
+    x = jnp.asarray(_data(300, 4, 36))
+    eng = AnticlusterEngine(k=6, plan=None)
+    _, state = eng.partition(x)
+    p = np.asarray(state.prices[0])
+    assert (p != 0).any()              # real dual state was carried out
+    np.testing.assert_allclose(p.max(axis=-1), 0.0, atol=1e-5)  # re-centered
+
+
+def test_state_shape_mismatch_raises():
+    eng = AnticlusterEngine(k=6, plan=None)
+    x = jnp.asarray(_data(120, 4, 37))
+    _, state = eng.partition(x)
+    with pytest.raises(ValueError, match="state prices"):
+        eng.repartition(jnp.asarray(_data(120, 4, 37)),
+                        ABAState((jnp.zeros((1, 7), jnp.float32),),
+                                 state.moment_sum, state.moment_count,
+                                 state.prev_labels))
+
+
+def test_engine_rejects_mesh_and_kplus():
+    with pytest.raises(NotImplementedError, match="anticluster"):
+        AnticlusterEngine(k=4, kplus_moments=2)
+    with pytest.raises(NotImplementedError, match="batched"):
+        AnticlusterEngine(k=4, batched=False)
+
+
+# ---------------------------------------------------------------------------
+# ABAState pytree: jit / device_put / pickle round-trips
+# ---------------------------------------------------------------------------
+
+def test_state_is_a_registered_pytree():
+    eng = AnticlusterEngine(k=6, plan=(2, 3))
+    x = jnp.asarray(_data(180, 4, 38))
+    _, state = eng.partition(x)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, ABAState)
+    # through jit (identity) -- the engine's own executables do exactly this
+    jitted = jax.jit(lambda s: s)(state)
+    np.testing.assert_array_equal(np.asarray(jitted.prev_labels),
+                                  np.asarray(state.prev_labels))
+    for a, b in zip(jitted.prices, state.prices):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # device_put
+    put = jax.device_put(state, jax.devices()[0])
+    np.testing.assert_array_equal(np.asarray(put.moment_sum),
+                                  np.asarray(state.moment_sum))
+    # pickle (checkpointing a session)
+    back = pickle.loads(pickle.dumps(jax.device_get(state)))
+    np.testing.assert_array_equal(np.asarray(back.prev_labels),
+                                  np.asarray(state.prev_labels))
+    # a restored state keeps warm-starting the same engine
+    res, _ = eng.repartition(x, jax.device_put(back))
+    assert res.balanced
+
+
+def test_pickled_state_round_trips_through_repartition():
+    eng = AnticlusterEngine(k=5, plan=None)
+    x = jnp.asarray(_data(150, 3, 39))
+    res1, state = eng.partition(x)
+    state2 = pickle.loads(pickle.dumps(jax.device_get(state)))
+    res2, _ = eng.repartition(x, state2)
+    res3, _ = eng.repartition(x, state)
+    np.testing.assert_array_equal(np.asarray(res2.labels),
+                                  np.asarray(res3.labels))
+
+
+def test_init_state_moments_and_shapes():
+    eng = AnticlusterEngine(k=12, plan=(3, 4))
+    st = eng.init_state((240, 5))
+    assert [tuple(p.shape) for p in st.prices] == [(1, 3), (3, 4)]
+    assert st.moment_sum.shape == (5,) and float(st.moment_count) == 0.0
+    assert st.prev_labels.shape == (240,)
+    assert int(np.asarray(st.prev_labels).max()) == -1
+    x = _data(240, 5, 40)
+    _, st2 = eng.partition(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(st2.moment_sum), x.sum(0),
+                               rtol=1e-4)
+    assert float(st2.moment_count) == 240.0
+
+
+# ---------------------------------------------------------------------------
+# Solver registry: price-carrying signature + legacy deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_registry_canonical_signature_returns_prices():
+    solver = get_solver("auction")
+    cost = jnp.asarray(_data(16, 16, 41) @ _data(16, 16, 41).T)
+    assign, prices = solver.solve(cost, AuctionConfig(), None)
+    assert sorted(np.asarray(assign)) == list(range(16))
+    assert prices.shape == (16,)
+    # warm re-solve accepts the returned prices
+    assign2, _ = solver.solve(cost, AuctionConfig(), prices)
+    assert sorted(np.asarray(assign2)) == list(range(16))
+
+
+def test_mixed_cold_warm_stack_is_per_instance():
+    """A cold (all-zero-price) instance inside a warm stack must keep its
+    full epsilon ramp -- the warm shortcut is decided per instance, so a
+    group whose re-centered duals degenerate to zeros (e.g. duplicated
+    rows) is never forced down the single-phase path."""
+    rng = np.random.default_rng(47)
+    cs = jnp.asarray(rng.normal(size=(4, 20, 20)).astype(np.float32))
+    a_cold, p_cold = auction_solve(cs, return_prices=True)
+    p = np.array(p_cold - p_cold.max(axis=-1, keepdims=True))
+    p[0] = 0.0  # instances 0/2 cold, 1/3 warm
+    p[2] = 0.0
+    a_mix, _ = auction_solve(cs, prices=jnp.asarray(p), return_prices=True)
+    for b in range(4):
+        assert sorted(np.asarray(a_mix[b])) == list(range(20))
+    # cold instances are bit-identical to the all-cold solve
+    np.testing.assert_array_equal(np.asarray(a_mix[0]), np.asarray(a_cold[0]))
+    np.testing.assert_array_equal(np.asarray(a_mix[2]), np.asarray(a_cold[2]))
+
+
+def test_legacy_priceless_solver_shim_warns_and_works():
+    name = "test_legacy_priceless"
+
+    def old_style(cost, config=AuctionConfig()):
+        return auction_solve(cost, config)
+
+    if name not in available_solvers():
+        with pytest.warns(DeprecationWarning, match="price-less"):
+            register_solver(name, old_style)
+    solver = get_solver(name)
+    cost = jnp.asarray(_data(12, 12, 42))
+    assign, prices = solver.solve(cost, AuctionConfig(), None)
+    assert sorted(np.asarray(assign)) == list(range(12))
+    np.testing.assert_array_equal(np.asarray(prices), np.zeros(12))  # cold
+    # incoming prices pass through unchanged (warm start is a no-op)
+    p_in = jnp.arange(12, dtype=jnp.float32)
+    _, p_out = solver.solve(cost, AuctionConfig(), p_in)
+    np.testing.assert_array_equal(np.asarray(p_out), np.asarray(p_in))
+    # and the shimmed backend runs end to end through the engine
+    eng = AnticlusterEngine(k=4, plan=None, solver=name)
+    x = jnp.asarray(_data(80, 3, 42))
+    r1, st = eng.partition(x)
+    r2, _ = eng.repartition(x, st)
+    np.testing.assert_array_equal(np.asarray(r1.labels),
+                                  np.asarray(r2.labels))  # stays cold
+
+
+def test_new_style_registration_does_not_warn():
+    name = "test_new_style_priced"
+    if name not in available_solvers():
+        def new_style(cost, config=AuctionConfig(), prices=None):
+            return auction_solve(cost, config, prices=prices,
+                                 return_prices=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            register_solver(name, new_style)
+    assert name in available_solvers()
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed consumers: sequencer, folds, serving shim
+# ---------------------------------------------------------------------------
+
+def test_sequencer_epoch_refresh_compiles_once():
+    """The PR-4 bugfix contract: per-epoch re-partitions reuse ONE compiled
+    executable (no fresh tracers per epoch for an identical shape)."""
+    from repro.data.minibatch import ABABatchSequencer
+    rng = np.random.default_rng(43)
+    feats = rng.normal(size=(512, 6)).astype(np.float32)
+    seq = ABABatchSequencer(feats, 64, chunk_size=None)
+    assert seq.engine.compile_count == 1
+    for epoch in range(1, 4):
+        feats = feats + rng.normal(size=feats.shape).astype(np.float32) * .05
+        batches = list(seq.epoch(epoch, features=feats))
+        assert len(batches) == len(seq)
+        flat = np.sort(np.concatenate(batches))
+        np.testing.assert_array_equal(flat, np.arange(512))  # exact partition
+    assert seq.engine.compile_count == 1  # zero retraces after epoch 0
+
+
+def test_sequencer_epoch_without_features_keeps_membership():
+    from repro.data.minibatch import ABABatchSequencer
+    feats = _data(256, 5, 44)
+    seq = ABABatchSequencer(feats, 32, chunk_size=None)
+    before = seq.batches.copy()
+    list(seq.epoch(1))  # no features -> no re-partition
+    np.testing.assert_array_equal(before, seq.batches)
+
+
+def test_folds_engine_reuse():
+    from repro.data.folds import aba_folds, fold_engine
+    feats = _data(200, 4, 45)
+    eng = fold_engine(5)
+    l1 = aba_folds(feats, 5, engine=eng)
+    l2 = aba_folds(feats, 5)  # throwaway engine, same labels (cold == cold)
+    np.testing.assert_array_equal(l1, l2)
+    assert balance_ok(l1, 5, 200)
+    # second build through the shared engine: compiled once, still balanced
+    l3 = aba_folds(feats + 0.05, 5, engine=eng)
+    assert balance_ok(l3, 5, 200)
+    assert eng.compile_count == 1
+
+
+def test_service_stacks_and_matches_oneshot():
+    from repro.serve import AnticlusterService
+    rng = np.random.default_rng(46)
+    svc = AnticlusterService(k=5, plan=None)
+    reqs = ([rng.normal(size=(100, 4)).astype(np.float32) for _ in range(3)]
+            + [rng.normal(size=(60, 4)).astype(np.float32) for _ in range(2)])
+    order = [reqs[0], reqs[3], reqs[1], reqs[2], reqs[4]]  # interleaved
+    outs = svc.partition_many(order)
+    for r, x in zip(outs, order):
+        one = anticluster(jnp.asarray(x), k=5, plan=None)
+        np.testing.assert_array_equal(np.asarray(r.labels),
+                                      np.asarray(one.labels))
+        assert r.balanced and r.labels.shape == (x.shape[0],)
+    # one stacked lane per (shape, bucket): 100-row burst of 3 pads to 4,
+    # 60-row burst of 2 stacks at 2
+    assert svc.lane_count == 2
+    # a second burst reuses the warm lanes (no new lane, still balanced)
+    outs2 = svc.partition_many(order)
+    assert svc.lane_count == 2 and all(r.balanced for r in outs2)
+
+
+def test_folds_engine_mismatch_raises():
+    from repro.data.folds import aba_folds, fold_engine
+    feats = _data(200, 4, 48)
+    with pytest.raises(ValueError, match="n_folds=10"):
+        aba_folds(feats, 10, engine=fold_engine(5))
+    with pytest.raises(ValueError, match="stratification"):
+        aba_folds(feats, 5, categories=np.zeros(200, np.int32),
+                  engine=fold_engine(5))
+
+
+def test_service_burst_remainder_uses_solo_lane():
+    from repro.serve import AnticlusterService
+    rng = np.random.default_rng(49)
+    svc = AnticlusterService(k=4, plan=None, max_group=2)
+    reqs = [rng.normal(size=(40, 3)).astype(np.float32) for _ in range(3)]
+    outs = svc.partition_many(reqs)  # 2-stack + remainder of 1 -> solo lane
+    for r, x in zip(outs, reqs):
+        one = anticluster(jnp.asarray(x), k=4, plan=None)
+        np.testing.assert_array_equal(np.asarray(r.labels),
+                                      np.asarray(one.labels))
+    assert svc.lane_count == 2  # ("stack", shape, 2) + ("solo", shape)
+    # a later single request reuses the same solo lane
+    svc.partition(reqs[0])
+    assert svc.lane_count == 2
+
+
+def test_service_rejects_per_dataset_specs():
+    from repro.serve import AnticlusterService
+    with pytest.raises(NotImplementedError, match="per-dataset"):
+        AnticlusterService(k=4, categories=np.zeros(10, np.int32))
