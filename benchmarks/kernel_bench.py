@@ -24,6 +24,15 @@ Reports three stories:
    and the printed ``speedup=``/``obj_dev_pct=`` labels carry the
    warm-beats-cold evidence (the tested quality contract -- warm objective
    within 1% of cold -- lives in tests/test_engine.py).
+6. **Warm re-entry schedule**: the adaptive infeasibility-scaled re-entry
+   (default) against the legacy fixed jump-to-final-phase shortcut
+   (``AuctionConfig(adaptive_reentry=False)``) -- the
+   ``engine/epoch_warm_fixed`` row pins that adaptive is no worse on the
+   steady-state shape.
+7. **Sharded epoch bench**: the same cold/warm story through a mesh spec
+   (``engine/epoch_{cold,warm}_sharded`` rows) -- one ``shard_map``
+   executable carrying per-shard prices (``ShardedABAState``) across
+   epochs; the shape id records the device count.
 
 ``--smoke`` runs tiny shapes only (the CI smoke step) and, like every run,
 writes the machine-readable trajectory to ``BENCH_kernel.json``
@@ -154,6 +163,64 @@ def run(full: bool = False, smoke: bool = False,
         f"compiles={engine.compile_count}")
     rec.add(f"engine/epoch_cold/{shape_e}", shape_e, t_cold, obj_cold)
     rec.add(f"engine/epoch_warm/{shape_e}", shape_e, t_warm, obj_warm)
+
+    # --- warm re-entry schedule: adaptive (default) vs legacy fixed -------
+    # Same warm epoch with adaptive_reentry=False (always jump straight to
+    # the final small-eps phase).  The adaptive default measures dual
+    # infeasibility per solve and must be no worse on this steady-state
+    # shape (it pays one probe bidding round, skips the same phases).
+    engine_f = AnticlusterEngine(spec.replace(
+        auction_config=AuctionConfig(adaptive_reentry=False)))
+    _resf, statef = engine_f.partition(x)
+    carry_f = {"state": statef}
+
+    def warm_epoch_fixed():
+        r, carry_f["state"] = engine_f.repartition(x, carry_f["state"])
+        carry_f["res"] = r
+        return r.labels
+
+    _, t_warm_f = timed(warm_epoch_fixed, repeats=3)
+    obj_warm_f = float(objective_centroid(x, carry_f["res"].labels, k_e))
+    row(f"engine/epoch_warm_fixed/{shape_e}", t_warm_f,
+        f"adaptive_us={t_warm * 1e6:.1f};"
+        f"adaptive_vs_fixed={t_warm_f / t_warm:.2f}x")
+    rec.add(f"engine/epoch_warm_fixed/{shape_e}", shape_e, t_warm_f,
+            obj_warm_f)
+
+    # --- sharded epoch bench: mesh engine cold vs warm --------------------
+    # The distributed-session story: one shard_map executable, per-shard
+    # warm prices (ShardedABAState).  Runs over every available device (the
+    # CI smoke runs single-device; the mesh smoke job forces two).
+    from jax.sharding import Mesh
+
+    n_dev = jax.device_count()
+    if k_e % n_dev or n_e % n_dev:
+        n_dev = 1  # unplaceable device count: measure the 1-device mesh
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]).reshape(n_dev), ("data",))
+    spec_s = AnticlusterSpec(k=k_e, mesh=mesh, data_axes=("data",),
+                             stats=False)
+    cold_s, t_cold_s = timed(lambda: anticluster(x, spec_s), repeats=3)
+    obj_cold_s = float(objective_centroid(x, cold_s.labels, k_e))
+    engine_s = AnticlusterEngine(spec_s)
+    _res_s, state_s = engine_s.partition(x)
+    carry_s = {"state": state_s}
+
+    def warm_epoch_sharded():
+        r, carry_s["state"] = engine_s.repartition(x, carry_s["state"])
+        carry_s["res"] = r
+        return r.labels
+
+    _, t_warm_s = timed(warm_epoch_sharded, repeats=3)
+    obj_warm_s = float(objective_centroid(x, carry_s["res"].labels, k_e))
+    shape_s = f"{n_e}x{k_e}x{d_e}@{n_dev}dev"
+    row(f"engine/epoch_warm_sharded/{shape_s}", t_warm_s,
+        f"cold_us={t_cold_s * 1e6:.1f};speedup={t_cold_s / t_warm_s:.2f}x;"
+        f"obj_dev_pct={(obj_warm_s - obj_cold_s) / abs(obj_cold_s) * 100:.4f};"
+        f"compiles={engine_s.compile_count}")
+    rec.add(f"engine/epoch_cold_sharded/{shape_s}", shape_s, t_cold_s,
+            obj_cold_s)
+    rec.add(f"engine/epoch_warm_sharded/{shape_s}", shape_s, t_warm_s,
+            obj_warm_s)
 
     rec.write(json_path)
 

@@ -59,7 +59,7 @@ def run_aba(shape, over):
            "devices": 256, "overrides": {k: str(v) for k, v in over.items()}}
     try:
         def fn(x):
-            return sharded_core(x, spec["k"], mesh, data_axes=("pod", "data"),
+            return sharded_core(x, spec["k"], mesh, data_axes="auto",
                                max_k=spec.get("max_k", 512),
                                auction_config=acfg)
 

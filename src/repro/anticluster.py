@@ -64,10 +64,11 @@ from repro.core.assignment import (AuctionConfig, available_solvers,
 from repro.core.hierarchical import (default_plan, hierarchical_core,
                                      plan_price_shapes)
 from repro.core.kplus import kplus_augment
+from repro.sharding.specs import resolve_data_axes, shard_leading
 
 __all__ = [
     "AnticlusterSpec", "AnticlusterResult", "anticluster",
-    "AnticlusterEngine", "ABAState",
+    "AnticlusterEngine", "ABAState", "ShardedABAState",
     "register_solver", "get_solver", "available_solvers",
 ]
 
@@ -114,10 +115,18 @@ class AnticlusterSpec:
         ``"auto"`` quietly stays dense.  With ``chunk_size >= n`` labels are
         bit-for-bit identical to the dense path.
       max_k: largest admissible LAP size for the auto plan.
-      mesh: optional ``jax.sharding.Mesh`` -- routes through ``shard_map``
-        (the data sharding becomes the first hierarchy level); k must be
-        divisible by the shard count of ``data_axes``.
-      data_axes: mesh axes that shard the data.
+      mesh: optional ``jax.sharding.Mesh`` -- an orthogonal *placement* axis
+        of the same API, not a separate mode: execution routes through
+        ``shard_map`` (the data sharding becomes the first hierarchy level),
+        composing with streaming (each shard runs ``aba_stream`` on its
+        local rows), categories / valid_mask (each shard stratifies / masks
+        its local rows; the mask needs a flat per-shard plan), and the
+        engine's warm starts (:class:`ShardedABAState`).  ``k`` and ``n``
+        must be divisible by the shard count of ``data_axes``.
+      data_axes: mesh axes that shard the data.  ``"auto"`` (default) takes
+        whichever of ('pod', 'data') exist on the mesh; an explicit tuple is
+        validated strictly -- naming an axis the mesh does not have raises
+        with the offending names instead of silently dropping them.
       valid_mask: optional bool mask marking padding rows (shape of labels);
         masked rows get arbitrary labels in [0, k).
       kplus_moments: >= 2 augments features with standardized centered
@@ -140,7 +149,7 @@ class AnticlusterSpec:
     chunk_size: Any = None
     max_k: int = 512
     mesh: Any = None
-    data_axes: tuple[str, ...] = ("pod", "data")
+    data_axes: Any = "auto"
     valid_mask: Any = None
     kplus_moments: int = 1
     dtype: Any = jnp.float32
@@ -174,8 +183,7 @@ class AnticlusterSpec:
             return self.plan
         k = self.k
         if self.mesh is not None:
-            axes = [a for a in self.data_axes if a in self.mesh.axis_names]
-            n_shards = math.prod(self.mesh.shape[a] for a in axes)
+            n_shards = _mesh_shards(self)
             if k % n_shards:
                 raise ValueError(
                     f"k={k} must be divisible by shard count {n_shards}")
@@ -273,11 +281,50 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedABAState:
+    """The carried state of a *distributed* anticlustering session.
+
+    The mesh twin of :class:`ABAState` -- same role, per-shard layout.  A
+    pure-array pytree produced/consumed by an :class:`AnticlusterEngine`
+    whose spec carries a ``mesh``; every leaf shards its **leading axis**
+    across the spec's data axes (``jax.sharding.NamedSharding``, see
+    ``AnticlusterEngine.state_shardings``), so ``repartition`` threads it
+    straight through one ``shard_map`` executable with zero resharding:
+
+    * ``prices`` -- per-shard, per-level auction dual price stacks: level l
+      of the per-shard plan is ``(n_shards, prod(plan[:l-1]), plan[l-1])``
+      float32.  A zeroed tuple is exactly the cold start (bit-identical to
+      the one-shot ``anticluster(x, spec)`` mesh path).
+    * ``moment_sum`` / ``moment_count`` -- (n_shards, d) per-shard feature
+      sums over valid rows and (n_shards,) valid-row counts (the shard-local
+      centrality moments; summing over the shard axis gives the global
+      moments an :class:`ABAState` would carry).
+    * ``prev_labels`` -- the previous global assignment ((n,) int32,
+      row-sharded; ``-1`` before the first partition).
+    """
+
+    prices: tuple[jnp.ndarray, ...]
+    moment_sum: jnp.ndarray
+    moment_count: jnp.ndarray
+    prev_labels: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    ShardedABAState,
+    data_fields=["prices", "moment_sum", "moment_count", "prev_labels"],
+    meta_fields=[])
+
+
 def _mesh_shards(spec: "AnticlusterSpec") -> int:
-    """Total data-parallel shard count for the spec's mesh (1 if no mesh)."""
+    """Total data-parallel shard count for the spec's mesh (1 if no mesh).
+
+    Validates ``spec.data_axes`` against the mesh: explicit axes absent from
+    the mesh raise (with the offending names) instead of being dropped.
+    """
     if spec.mesh is None:
         return 1
-    axes = [a for a in spec.data_axes if a in spec.mesh.axis_names]
+    axes = resolve_data_axes(spec.mesh, spec.data_axes)
     return math.prod(spec.mesh.shape[a] for a in axes)
 
 
@@ -315,15 +362,25 @@ def _route(spec: AnticlusterSpec, shape: tuple[int, ...],
             solver = "auction_fused"
 
     if spec.mesh is not None:
-        if len(shape) != 2 or has_categories or has_valid_mask:
+        if len(shape) != 2:
             raise NotImplementedError(
-                "mesh execution takes flat (n, d) data without categories "
-                "or valid_mask (shards are the first hierarchy level)")
+                "mesh execution takes flat (n, d) data (shards are the "
+                "first hierarchy level); stack the groups yourself or drop "
+                "the mesh")
         if spec.plan != "auto":
             raise NotImplementedError(
                 'mesh execution resolves its per-shard plan from max_k; '
                 'use plan="auto"')
         n_shards = _mesh_shards(spec)
+        if n % max(n_shards, 1):
+            raise ValueError(
+                f"n={n} rows must be divisible by the mesh shard count "
+                f"{n_shards} (pad the dataset and mark the padding with "
+                "valid_mask)")
+        if has_valid_mask and len(plan) > 1:
+            raise NotImplementedError(
+                f"valid_mask under a mesh needs a flat per-shard plan (got "
+                f"{plan}); raise max_k or drop the padding rows")
         return "mesh", plan, solver, chunk_for(n // max(n_shards, 1), plan[0])
     if len(shape) == 3:
         if len(plan) > 1:
@@ -347,13 +404,23 @@ def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
     """Dispatch one solve to the right core (shared engine/one-shot path).
 
     ``prices`` is the per-level tuple from :class:`ABAState` (flat /
-    streamed / stacked runs use a 1-tuple); ``None`` is the cold path and is
+    streamed / stacked runs use a 1-tuple) or, in mesh mode, the per-shard
+    stacks from :class:`ShardedABAState`; ``None`` is the cold path and is
     bit-identical.  With ``return_state`` the return is ``(labels, state)``
     where ``state["prices"]`` is the per-level tuple and ``state["mu"]`` the
-    level-1 centrality centroid ((d,); (G, d) for stacked input).
+    level-1 centrality centroid ((d,); (G, d) for stacked input) -- except
+    in mesh mode, where the state carries the per-shard moments directly
+    (``"moment_sum"`` (S, d) / ``"moment_count"`` (S,)).
     """
     kw = dict(variant=spec.variant, solver=solver,
               auction_config=spec.auction_config)
+    if mode == "mesh":
+        from repro.core.sharded import sharded_core
+        return sharded_core(
+            x, spec.k, spec.mesh, data_axes=spec.data_axes,
+            max_k=spec.max_k, batched=spec.batched, chunk_size=chunk,
+            categories=cats, n_categories=n_categories, valid_mask=vm,
+            prices=prices, return_state=return_state, **kw)
     p0 = None if prices is None else prices[0]
     if mode == "stacked":
         out = aba_core(x, spec.k, vm, categories=cats,
@@ -477,18 +544,11 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
     mode, plan, solver, chunk = _route(spec, tuple(x.shape),
                                        cats is not None, vm is not None)
 
+    labels = _call_core(x, spec, mode, plan, solver, chunk,
+                        cats, n_categories, vm)
     if mode == "mesh":
-        from repro.core.sharded import sharded_core
         n_shards = _mesh_shards(spec)
-        labels = sharded_core(x, spec.k, spec.mesh,
-                              data_axes=spec.data_axes, max_k=spec.max_k,
-                              batched=spec.batched, chunk_size=chunk,
-                              variant=spec.variant, solver=solver,
-                              auction_config=spec.auction_config)
         plan = ((n_shards,) + plan) if n_shards > 1 else plan
-    else:
-        labels = _call_core(x, spec, mode, plan, solver, chunk,
-                            cats, n_categories, vm)
 
     # Finish the label computation before dispatching the statistics ops:
     # host-callback solvers (e.g. "scipy") deadlock on CPU if new work is
@@ -524,9 +584,19 @@ class AnticlusterEngine:
     guarantee), and the objective stays within the auction's usual tolerance
     of the cold solve.
 
-    Not supported here (use the one-shot :func:`anticluster`): ``spec.mesh``
-    (shard_map execution), ``spec.kplus_moments > 1`` (host-side feature
-    augmentation), ``spec.batched=False`` (legacy benchmarking path).
+    A spec with a ``mesh`` makes the session *distributed*: the engine
+    compiles ONE ``shard_map``-based executable (per input signature) whose
+    state is a :class:`ShardedABAState` -- per-shard, per-level price stacks
+    laid out with ``jax.sharding.NamedSharding`` over the spec's data axes
+    (see :meth:`state_shardings`) -- so warm-started repartitioning runs
+    collective-free across the mesh with zero retraces and zero resharding,
+    and a zeroed sharded state reproduces the one-shot mesh path bit for
+    bit.  Everything the shard-local core supports composes: streaming
+    (``chunk_size``), categories, valid_mask (flat per-shard plans).
+
+    Not supported here (use the one-shot :func:`anticluster`):
+    ``spec.kplus_moments > 1`` (host-side feature augmentation),
+    ``spec.batched=False`` (legacy benchmarking path).
     """
 
     _donation_advisory_silenced = False
@@ -546,9 +616,7 @@ class AnticlusterEngine:
         elif overrides:
             spec = spec.replace(**overrides)
         if spec.mesh is not None:
-            raise NotImplementedError(
-                "AnticlusterEngine is single-session/single-device; use "
-                "anticluster(x, spec) for shard_map execution")
+            _mesh_shards(spec)  # fail fast on bad data_axes / mesh
         if spec.kplus_moments > 1:
             raise NotImplementedError(
                 "kplus_moments augmentation is host-side; use the one-shot "
@@ -590,22 +658,54 @@ class AnticlusterEngine:
             self._routes[shape] = routed
         return routed
 
-    def price_shapes(self, shape) -> tuple[tuple[int, int], ...]:
-        """Per-level price shapes of the state carried for input ``shape``."""
+    def price_shapes(self, shape) -> tuple[tuple[int, ...], ...]:
+        """Per-level price shapes of the state carried for input ``shape``.
+
+        Mesh specs carry per-shard stacks: each level's shape gains a
+        leading ``n_shards`` axis (see :class:`ShardedABAState`).
+        """
         mode, plan, _solver, _chunk = self._routed(tuple(shape))
+        if mode == "mesh":
+            from repro.core.sharded import sharded_price_shapes
+            return sharded_price_shapes(plan, _mesh_shards(self.spec))
         if mode == "stacked":
             return ((shape[0], self.spec.k),)
         if mode == "hier":
             return plan_price_shapes(plan)
         return ((1, self.spec.k),)
 
-    def init_state(self, x_or_shape) -> ABAState:
-        """A zeroed (cold-start) :class:`ABAState` for ``x`` / its shape."""
+    def state_shardings(self, x_or_shape):
+        """NamedShardings matching the session state for input ``shape``.
+
+        ``None`` for meshless specs (single-device state).  For mesh specs,
+        a :class:`ShardedABAState`-shaped tree of
+        ``jax.sharding.NamedSharding`` leaves sharding every leading axis
+        over the spec's data axes -- the layout ``init_state`` places its
+        zeros with, ``repartition`` keeps, and a checkpoint restore should
+        ``device_put`` with (``repro.train.checkpoint.restore_engine_state``
+        does).
+        """
         shape = (tuple(x_or_shape) if isinstance(x_or_shape, (tuple, list))
                  else tuple(jnp.shape(x_or_shape)))
+        if self._routed(shape)[0] != "mesh":
+            return None
+        axes = resolve_data_axes(self.spec.mesh, self.spec.data_axes)
+        # eval_shape: leaf ranks without materializing a throwaway state
+        like = jax.eval_shape(lambda: self._cold_state(shape))
+        return shard_leading(self.spec.mesh, axes, like)
+
+    def _cold_state(self, shape):
+        """Host-side zeroed state pytree for ``shape`` (no placement)."""
         mode, _plan, _solver, _chunk = self._routed(shape)
         prices = tuple(jnp.zeros(s, jnp.float32)
                        for s in self.price_shapes(shape))
+        if mode == "mesh":
+            n, d = shape
+            n_shards = _mesh_shards(self.spec)
+            return ShardedABAState(
+                prices, jnp.zeros((n_shards, d), jnp.float32),
+                jnp.zeros((n_shards,), jnp.float32),
+                jnp.full((n,), -1, jnp.int32))
         if mode == "stacked":
             G, M, D = shape
             return ABAState(prices, jnp.zeros((G, D), jnp.float32),
@@ -616,22 +716,44 @@ class AnticlusterEngine:
                         jnp.zeros((), jnp.float32),
                         jnp.full((n,), -1, jnp.int32))
 
+    def init_state(self, x_or_shape) -> "ABAState | ShardedABAState":
+        """A zeroed (cold-start) state for ``x`` / its shape.
+
+        :class:`ABAState` for meshless specs; :class:`ShardedABAState`
+        (placed with :meth:`state_shardings`) for mesh specs.
+        """
+        shape = (tuple(x_or_shape) if isinstance(x_or_shape, (tuple, list))
+                 else tuple(jnp.shape(x_or_shape)))
+        state = self._cold_state(shape)
+        shardings = self.state_shardings(shape)
+        return state if shardings is None else jax.device_put(state,
+                                                              shardings)
+
     def partition(self, x) -> tuple[AnticlusterResult, ABAState]:
         """Cold solve: ``repartition`` from a zeroed state (bit-identical to
         ``anticluster(x, spec)``); compiles on first use per shape."""
         return self.repartition(x, self.init_state(jnp.shape(x)))
 
-    def repartition(self, x,
-                    state: ABAState) -> tuple[AnticlusterResult, ABAState]:
+    def repartition(self, x, state) -> tuple[AnticlusterResult, Any]:
         """Warm solve: same-shape re-partition carrying ``state``'s prices.
 
         The state is *consumed* (its buffers are donated to the compiled
         call); use the returned state for the next epoch.  A zeroed state
-        (``init_state``) reproduces ``partition`` bit-for-bit.
+        (``init_state``) reproduces ``partition`` bit-for-bit.  Mesh specs
+        take and return a :class:`ShardedABAState` (per-shard layout kept
+        end to end); meshless specs an :class:`ABAState`.
         """
         spec = self.spec
         x = jnp.asarray(x).astype(spec.dtype)
         shape = tuple(x.shape)
+        mode, plan, solver, _chunk = self._routed(shape)
+        state_cls = ShardedABAState if mode == "mesh" else ABAState
+        if not isinstance(state, state_cls):
+            raise TypeError(
+                f"a {'mesh' if mode == 'mesh' else 'single-device'} engine "
+                f"carries {state_cls.__name__}, got "
+                f"{type(state).__name__} (build states with "
+                "engine.init_state / previous repartition calls)")
         expected = self.price_shapes(shape)
         got = tuple(tuple(p.shape) for p in state.prices)
         if got != expected:
@@ -648,18 +770,26 @@ class AnticlusterEngine:
         # Finish labels before dispatching the (host-level) statistics ops:
         # host-callback solvers deadlock otherwise (see anticluster()).
         labels = jax.block_until_ready(labels)
-        mode, plan, solver, _chunk = self._routed(shape)
+        if mode == "mesh":
+            n_shards = _mesh_shards(spec)
+            plan = ((n_shards,) + plan) if n_shards > 1 else plan
         sizes, sd, rng = _result_stats(x, labels, spec.k, self._vm,
                                        diversity=spec.stats)
         result = AnticlusterResult(
             labels=labels, cluster_sizes=sizes, diversity_sd=sd,
             diversity_range=rng, k=spec.k, plan=plan, solver=solver,
             variant=spec.variant)
-        return result, ABAState(prices=prices, moment_sum=msum,
-                                moment_count=mcnt, prev_labels=labels)
+        return result, state_cls(prices=prices, moment_sum=msum,
+                                 moment_count=mcnt, prev_labels=labels)
 
     def _build(self, shape: tuple[int, ...]):
-        """One shape-keyed executable: solve + state refresh, donated state."""
+        """One shape-keyed executable: solve + state refresh, donated state.
+
+        Mesh specs compile the whole thing -- ``shard_map`` execution plus
+        the per-shard price refresh -- into this one jitted callable too, so
+        distributed repartitioning retraces exactly as often as the local
+        path: once per input signature.
+        """
         spec = self.spec
         mode, plan, solver, chunk = self._routed(shape)
         cats, ncats, vm = self._cats, self._n_categories, self._vm
@@ -673,6 +803,10 @@ class AnticlusterEngine:
             # to a uniform shift) so carried state stays bounded over epochs
             new_prices = tuple(p - jnp.max(p, axis=-1, keepdims=True)
                                for p in st["prices"])
+            if mode == "mesh":
+                # per-shard moments come straight from the sharded state
+                return (labels, new_prices, st["moment_sum"],
+                        st["moment_count"])
             mu = st["mu"]
             if mode == "stacked":
                 cnt = (jnp.full((shape[0],), float(shape[1]), jnp.float32)

@@ -58,6 +58,16 @@ import numpy as np
 
 _NEG = -1e30  # sentinel "minus infinity" that survives f32 arithmetic
 
+# Warm re-entry slack: the probe's max contested value gap overestimates the
+# eps scale a warm solve must re-enter at, because only the few contested
+# objects need price movement and the final phase's while-loop absorbs that
+# in a handful of rounds.  Measured on the epoch bench (2048x16x8 CPU smoke):
+# steady-state warm batches probe at 1.5-25x eps_lo yet the final phase alone
+# converges faster than any added phase, so only gaps beyond this slack times
+# the phase eps re-enter mid-schedule (prices carried across genuinely
+# different problems probe at O(span), far past it).
+_REENTRY_SLACK = 32.0
+
 
 class AuctionConfig(NamedTuple):
     """Epsilon-scaling schedule for the auction solver.
@@ -71,6 +81,14 @@ class AuctionConfig(NamedTuple):
     fixed-length scan (the round update is a no-op at the converged fixed
     point).  Used by the dry-run so XLA knows every trip count, and on TPU it
     avoids host round-trips for the loop predicate.
+
+    ``adaptive_reentry`` controls where a *warm-started* solve re-enters the
+    schedule: ``True`` (default) measures the carried prices' dual
+    infeasibility and runs every phase whose eps is at or below it (near-
+    equilibrium prices still take only the final phase; drifted prices get
+    the mid-schedule phases they actually need); ``False`` keeps the fixed
+    legacy behaviour of always jumping straight to the final small-eps phase.
+    Cold (all-zero-price) instances always run the full ramp either way.
     """
 
     n_phases: int = 4
@@ -78,6 +96,7 @@ class AuctionConfig(NamedTuple):
     eps_end_mul: float = 4.0
     max_rounds: int = 0  # 0 -> auto (50 * n + 1000)
     fixed_rounds: int = 0
+    adaptive_reentry: bool = True
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +115,7 @@ def _top2_batched(values: jnp.ndarray):
 def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
                    max_rounds: int, fixed_rounds: int = 0,
                    skip: jnp.ndarray | None = None,
+                   seed_top2=None,
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One epsilon phase of batched Jacobi forward auction (maximization).
 
@@ -111,8 +131,15 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
     ``skip`` ((B,) bool) marks instances that sit this phase out entirely:
     their rows start pre-assigned (identity), so by the masking above they
     never bid and their prices pass through untouched -- the warm-start path
-    uses this to run only the final small-eps phase per warm instance while
-    cold instances in the same stack keep the full ramp.
+    uses this to run only the phases at or below its measured re-entry eps
+    per warm instance while cold instances in the same stack keep the full
+    ramp.
+
+    ``seed_top2`` optionally supplies the first round's ``(v1, j1, v2)``
+    reduction, precomputed at the *incoming* prices -- the warm path's
+    infeasibility probe is exactly that reduction, so threading it here
+    makes the probe free (it becomes round one).  The values are what the
+    round would compute itself, so results are unchanged.
     """
     B, n = prices.shape
     rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
@@ -123,10 +150,10 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
         assign, _owner, _prices, it = state
         return jnp.logical_and(jnp.any(assign < 0), it < max_rounds)
 
-    def body(state):
+    def body_with(state, top2):
         assign, owner, prices, it = state
         unassigned = assign < 0
-        v1, j1, v2 = top2_fn(prices)
+        v1, j1, v2 = top2
         # Bid: raise the price of the favourite object past the point of
         # indifference with the runner-up, plus eps.  Using the identity
         # cost[b, i, j1] = v1 + prices[b, j1] keeps the phase matrix-free.
@@ -156,21 +183,29 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
         prices = jnp.where(got_bid, best, prices)
         return assign, owner, prices, it + 1
 
+    def body(state):
+        return body_with(state, top2_fn(state[2]))
+
     assign0 = jnp.full((B, n), -1, jnp.int32)
     if skip is not None:
         # pre-assigned identity: no bids, a fixed point of the round update
         assign0 = jnp.where(skip[:, None], cols, assign0)
     owner0 = jnp.full((B, n), -1, jnp.int32)
+    state0 = (assign0, owner0, prices, jnp.int32(0))
+    rounds = fixed_rounds
+    if seed_top2 is not None:
+        # round one, with the caller's precomputed reduction (same values
+        # the round would compute; identical results, one reduction saved)
+        state0 = body_with(state0, seed_top2)
+        rounds = max(fixed_rounds - 1, 0)
     if fixed_rounds:
         # converged state is a fixed point of body (no bids -> no updates)
         def scan_body(state, _):
             return body(state), None
         (assign, _owner, prices, _it), _ = jax.lax.scan(
-            scan_body, (assign0, owner0, prices, jnp.int32(0)),
-            None, length=fixed_rounds)
+            scan_body, state0, None, length=rounds)
     else:
-        assign, _owner, prices, _it = jax.lax.while_loop(
-            cond, body, (assign0, owner0, prices, jnp.int32(0)))
+        assign, _owner, prices, _it = jax.lax.while_loop(cond, body, state0)
     return assign, prices
 
 
@@ -201,15 +236,20 @@ def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
     path skips phases **per instance**: an instance whose incoming prices
     are all zero (the engine's cold-start sentinel) runs the full ramp,
     bit-identical to ``prices0=None``; an instance with carried (nonzero)
-    duals sits out every phase but the last (its rows start pre-assigned,
-    placing no bids -- the same per-instance convergence masking that lets
-    converged instances free-wheel) and solves only the final small-eps
-    phase, from which near-equilibrium prices converge in a handful of
-    rounds while keeping the *same* ``n * eps_lo`` optimality bound as the
-    full schedule's last phase.  (Duals far from equilibrium -- e.g.
-    carried across very different data -- still finish under the round cap,
-    just without the shortcut's speedup.)  The final prices are the dual
-    state a repeated caller threads into its next same-shape solve.
+    duals *re-enters the schedule adaptively* -- one probe bidding round at
+    the carried prices measures its dual infeasibility (the largest
+    value gap a row stands to lose where several rows contest the same
+    object; zero at a clean equilibrium), and the instance sits out every
+    phase whose eps exceeds that measured infeasibility (rows start
+    pre-assigned, placing no bids -- the same per-instance convergence
+    masking that lets converged instances free-wheel).  Near-equilibrium
+    prices therefore still run only the final small-eps phase (the fixed
+    legacy shortcut, ``config.adaptive_reentry=False`` forces it), while
+    prices carried across drifted data re-enter mid-schedule and converge
+    in far fewer rounds than the final phase alone would need from that
+    distance.  The last phase always runs, so the ``n * eps_lo`` optimality
+    bound of the full schedule is kept either way.  The final prices are the
+    dual state a repeated caller threads into its next same-shape solve.
     """
     B = eps_sched.shape[1]
     n_phases = eps_sched.shape[0]
@@ -230,26 +270,53 @@ def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
     prices0 = prices0.astype(jnp.float32)
     is_warm = jnp.any(prices0 != 0.0, axis=1)          # (B,) per instance
     is_last = jnp.arange(n_phases) == n_phases - 1
+    if config.adaptive_reentry:
+        # Probe reduction at the carried prices: rows whose favourite object
+        # is contested (demanded by >1 rows) must either outbid or fall back
+        # to their runner-up, so max contested (v1 - v2) tracks the price
+        # movement still needed -- the eps scale worth re-entering at.  The
+        # reduction is fed back in as the first executed round's top-2
+        # (seed_top2), so the probe costs nothing extra.
+        probe = top2_fn(prices0)
+        v1, j1, v2 = probe
+        barange = jnp.arange(B)[:, None]
+        demand = jnp.zeros((B, n), jnp.float32).at[barange, j1].add(1.0)
+        contested = jnp.take_along_axis(demand, j1, axis=1) > 1.0
+        infeas = jnp.max(jnp.where(contested, v1 - v2, 0.0), axis=1)
+        reentry = jnp.clip(infeas / _REENTRY_SLACK, eps_sched[-1],
+                           eps_sched[0])
+    else:
+        # legacy fixed shortcut: warm instances skip all but the last phase
+        probe = None
+        reentry = jnp.full((B,), -jnp.inf)
 
     def phase_p(prices, inp):
         eps, last = inp
+        skip = jnp.logical_and(
+            is_warm,
+            jnp.logical_and(jnp.logical_not(last), eps > reentry))
         assign, prices = _auction_phase(
             top2_fn, prices, eps, max_rounds, config.fixed_rounds,
-            skip=jnp.logical_and(is_warm, jnp.logical_not(last)))
+            skip=skip)
         return prices, assign
 
-    def per_instance(p0):
-        prices, assigns = jax.lax.scan(phase_p, p0, (eps_sched, is_last))
-        return assigns[-1], prices
-
-    def all_warm(p0):
-        # steady-state fast path: one final-eps phase, no skipped-phase
-        # while_loop overhead (the common engine case: every instance warm)
-        return _auction_phase(top2_fn, p0, eps_sched[-1], max_rounds,
-                              config.fixed_rounds)
-
-    assign, prices = jax.lax.cond(jnp.all(is_warm), all_warm, per_instance,
-                                  prices0)
+    # Phase 1 unrolled so it can consume the probe reduction (every instance
+    # still holds the incoming prices there); the remaining phases scan.  A
+    # skipped phase's while-loop exits on its first predicate check (all
+    # rows pre-assigned), so the steady-state engine case -- every instance
+    # warm at equilibrium, only the final phase live -- costs the same as
+    # the old jump-straight-to-the-last-phase shortcut (measured slightly
+    # less: a branchless scan of empty phases beats a lax.cond dispatch).
+    assign, prices = _auction_phase(
+        top2_fn, prices0, eps_sched[0], max_rounds, config.fixed_rounds,
+        skip=jnp.logical_and(
+            is_warm, jnp.logical_and(jnp.logical_not(is_last[0]),
+                                     eps_sched[0] > reentry)),
+        seed_top2=probe)
+    if n_phases > 1:
+        prices, assigns = jax.lax.scan(
+            phase_p, prices, (eps_sched[1:], is_last[1:]))
+        assign = assigns[-1]
     return _repair_permutation(assign), prices
 
 

@@ -19,7 +19,8 @@ from repro.anticluster import AnticlusterEngine
 
 
 def fold_engine(n_folds: int, *, categories: np.ndarray | None = None,
-                max_k: int = 512, chunk_size="auto") -> AnticlusterEngine:
+                max_k: int = 512, chunk_size="auto", mesh=None,
+                data_axes="auto") -> AnticlusterEngine:
     """An :class:`AnticlusterEngine` configured for ``n_folds`` CV folds.
 
     Reuse it across repeated ``aba_folds`` calls on same-shaped features to
@@ -27,9 +28,15 @@ def fold_engine(n_folds: int, *, categories: np.ndarray | None = None,
     ``partition`` so fold labels stay reproducible run to run; drive
     ``engine.repartition`` directly if you want warm-started prices between
     successive builds and accept eps-optimal label drift).
+
+    ``mesh`` builds the folds distributed (each data-parallel shard solves
+    its local rows; ``categories`` then stratify per shard); ``n_folds``
+    must be divisible by the shard count or the engine falls back to the
+    single-device flat solve with a RuntimeWarning.
     """
     from repro.data.minibatch import _auto_or_flat_spec
-    spec = _auto_or_flat_spec(n_folds, max_k, chunk_size).replace(
+    spec = _auto_or_flat_spec(n_folds, max_k, chunk_size, mesh=mesh,
+                              data_axes=data_axes).replace(
         categories=None if categories is None else jnp.asarray(categories))
     return AnticlusterEngine(spec)
 
@@ -61,7 +68,10 @@ def aba_folds(features: np.ndarray, n_folds: int, *,
             f"engine was built for k={engine.spec.k} folds but "
             f"n_folds={n_folds} was requested; build it with "
             f"fold_engine({n_folds}, ...)")
-    elif (engine.spec.categories is None) != (categories is None):
+    elif (engine.spec.categories is None) != (categories is None) or (
+            categories is not None
+            and not np.array_equal(np.asarray(engine.spec.categories),
+                                   np.asarray(categories))):
         raise ValueError(
             "engine stratification does not match this call: pass the same "
             "categories to fold_engine(...) and aba_folds(...)")

@@ -33,8 +33,8 @@ from repro.anticluster import AnticlusterEngine, AnticlusterSpec
 from repro.core.objective import diversity_per_cluster
 
 
-def _auto_or_flat_spec(k: int, max_k: int,
-                       chunk_size="auto") -> AnticlusterSpec:
+def _auto_or_flat_spec(k: int, max_k: int, chunk_size="auto", mesh=None,
+                       data_axes="auto") -> AnticlusterSpec:
     """Auto-plan spec, falling back to the flat path when k is unfactorable.
 
     ``default_plan`` enforces its max_k contract by raising (e.g. prime
@@ -43,18 +43,28 @@ def _auto_or_flat_spec(k: int, max_k: int,
     ``chunk_size`` defaults to "auto": epoch-scale datasets stream the
     full-data level in fixed-size chunks (``repro.core.aba.aba_stream``)
     instead of materializing the permuted copy; small datasets stay dense.
+    ``mesh`` distributes the solve (shard-local streaming composes); a k
+    that cannot be placed on the mesh (not divisible by the shard count, or
+    an unfactorable per-shard k) falls back to the local flat solve, again
+    loudly.
     """
+    if mesh is not None:
+        from repro.sharding.specs import resolve_data_axes
+        resolve_data_axes(mesh, data_axes)  # bad axes raise; no fallback
     spec = AnticlusterSpec(k=k, plan="auto", max_k=max_k,
-                           chunk_size=chunk_size)
+                           chunk_size=chunk_size, mesh=mesh,
+                           data_axes=data_axes)
     try:
         spec.resolve_plan()
         return spec
     except ValueError:
+        where = ("placement on the mesh" if mesh is not None
+                 else f"hierarchical plan with factors <= {max_k}")
         warnings.warn(
-            f"k={k} has no hierarchical plan with factors <= {max_k}; "
-            "falling back to the flat single-level solve (slower at this k)",
+            f"k={k} has no {where}; falling back to the flat single-level "
+            "single-device solve (slower at this k)",
             RuntimeWarning, stacklevel=3)
-        return spec.replace(plan=None)
+        return spec.replace(plan=None, mesh=None)
 
 
 class ABABatchSequencer:
@@ -77,17 +87,26 @@ class ABABatchSequencer:
         counter-based rng (batch membership stays fixed and deterministic).
       chunk_size: streaming execution for epoch-scale feature sets (see
         ``AnticlusterSpec.chunk_size``); "auto" engages only at scale.
+      mesh: optional ``jax.sharding.Mesh`` -- the engine compiles one
+        ``shard_map`` executable and carries per-shard warm prices
+        (:class:`repro.anticluster.ShardedABAState`) across epochs, so each
+        data-parallel shard re-partitions its local rows collective-free.
+        K must be divisible by the shard count (else a loud flat fallback).
+      data_axes: mesh axes sharding the rows ("auto": whichever of
+        ('pod', 'data') the mesh has; explicit absent axes raise).
     """
 
     def __init__(self, features: np.ndarray, batch_size: int, *,
-                 max_k: int = 512, seed: int = 0, chunk_size="auto"):
+                 max_k: int = 512, seed: int = 0, chunk_size="auto",
+                 mesh=None, data_axes="auto"):
         n = features.shape[0]
         self.batch_size = batch_size
         self.k = max(n // batch_size, 1)
         self.n_used = self.k * batch_size
         self.seed = seed
         self.engine = AnticlusterEngine(
-            _auto_or_flat_spec(self.k, max_k, chunk_size))
+            _auto_or_flat_spec(self.k, max_k, chunk_size, mesh=mesh,
+                               data_axes=data_axes))
         self.result, self.state = self.engine.partition(
             jnp.asarray(features[:self.n_used]))
         self._features = features

@@ -149,7 +149,7 @@ def lower_aba_cell(shape_name: str, *, multi_pod: bool):
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     def fn(x):
-        return sharded_core(x, spec["k"], mesh, data_axes=("pod", "data"),
+        return sharded_core(x, spec["k"], mesh, data_axes="auto",
                            auction_config=acfg)
 
     x_sh = NamedSharding(mesh, P(dp_axes, None))

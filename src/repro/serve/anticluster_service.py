@@ -16,6 +16,15 @@ to sequential warm calls on the same lane).  Stacked lanes pad the group
 axis to power-of-two buckets (repeating the last request) so a fluctuating
 burst size maps onto a handful of compiled executables instead of one per
 burst width.
+
+A spec with a ``mesh`` serves **sharded warm lanes**: each lane's engine
+compiles one ``shard_map`` executable and carries a
+:class:`repro.anticluster.ShardedABAState` (per-shard auction prices) across
+requests, so steady-state distributed serving warm-starts shard-locally
+with zero retraces.  Mesh lanes solve requests one at a time (the group
+axis and the shard axis are different placement dims -- stacking is the
+single-device batching story), so ``mesh`` composes with everything except
+the stacked bucket path.
 """
 
 from __future__ import annotations
@@ -42,8 +51,10 @@ class AnticlusterService:
     Args:
       spec: the :class:`AnticlusterSpec` every request is solved under
         (keyword ``overrides`` compose like ``anticluster``'s).  Specs with
-        ``categories`` / ``valid_mask`` / ``mesh`` are per-dataset rather
-        than per-request concepts and are rejected here.
+        ``categories`` / ``valid_mask`` are per-dataset rather than
+        per-request concepts and are rejected here; a ``mesh`` spec serves
+        each request distributed on warm sharded lanes (requests then solve
+        sequentially per lane -- no stacking across the group axis).
       max_group: cap on the stacked group axis; bursts larger than this are
         split into successive stacked calls.
     """
@@ -54,20 +65,21 @@ class AnticlusterService:
             spec = AnticlusterSpec(**overrides)
         elif overrides:
             spec = spec.replace(**overrides)
-        if spec.mesh is not None or spec.categories is not None \
-                or spec.valid_mask is not None:
+        if spec.categories is not None or spec.valid_mask is not None:
             raise NotImplementedError(
                 "AnticlusterService serves anonymous flat (n, d) requests; "
-                "categories/valid_mask/mesh are per-dataset concepts -- use "
+                "categories/valid_mask are per-dataset concepts -- use "
                 "AnticlusterEngine directly")
         if max_group < 1:
             raise ValueError(f"max_group={max_group} must be >= 1")
         self.spec = spec
         self.max_group = max_group
         self._lanes: dict = {}
-        # stacked (G, M, D) execution needs a flat per-request plan; the
-        # factorization search is static per spec, so resolve it once here
-        self._flat_plan = len(spec.resolve_plan()) == 1
+        # stacked (G, M, D) execution needs a flat per-request plan (and no
+        # mesh: the shard axis is placement, the group axis is batching);
+        # the factorization search is static per spec, so resolve once here
+        self._flat_plan = (len(spec.resolve_plan()) == 1
+                           and spec.mesh is None)
 
     @property
     def lane_count(self) -> int:
@@ -107,8 +119,8 @@ class AnticlusterService:
                 for lo in range(0, len(idxs), self.max_group):
                     part = idxs[lo:lo + self.max_group]
                     if len(part) == 1:
-                        solo = part  # a burst remainder of 1: the solo
-                        continue     # lane already serves this signature
+                        solo.extend(part)  # burst remainders of 1 go to the
+                        continue           # solo lane for this signature
                     self._serve_stacked(xs, part, shape, results)
             lane = self._lane(("solo", shape)) if solo else None
             for i in solo:

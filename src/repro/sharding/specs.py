@@ -50,3 +50,54 @@ def tree_pspecs(tag_tree, axis_names):
         lambda tags: to_pspec(tags, axis_names), tag_tree,
         is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(t, (str, type(None))) for t in x))
+
+
+# --- data-parallel placement of anticlustering sessions ---------------------
+
+DATA_AXIS_CANDIDATES = ("pod", "data")
+
+
+def resolve_data_axes(mesh: Mesh, data_axes="auto") -> tuple[str, ...]:
+    """The concrete mesh axes that shard the data rows.
+
+    ``"auto"`` (the :class:`repro.anticluster.AnticlusterSpec` default) takes
+    whichever of the canonical data-parallel axes
+    (:data:`DATA_AXIS_CANDIDATES`) exist on ``mesh`` -- the single-pod mesh
+    simply has no ``'pod'`` axis.  An **explicit** tuple is validated
+    strictly: naming an axis the mesh does not have raises with the offending
+    names instead of silently dropping them (a typo'd axis would otherwise
+    quietly change the shard count and therefore every label).
+    """
+    if data_axes is None or data_axes == "auto":
+        axes = tuple(a for a in DATA_AXIS_CANDIDATES if a in mesh.axis_names)
+        if not axes:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.axis_names)} contain none of the "
+                f"default data axes {DATA_AXIS_CANDIDATES}; pass data_axes "
+                "naming the axis that shards the rows")
+        return axes
+    axes = (data_axes,) if isinstance(data_axes, str) else tuple(data_axes)
+    missing = tuple(a for a in axes if a not in mesh.axis_names)
+    if missing:
+        raise ValueError(
+            f"data_axes {missing} not present on the mesh (axes: "
+            f"{tuple(mesh.axis_names)}); silently dropping them would "
+            "change the shard count -- name only existing axes or use "
+            'data_axes="auto"')
+    if not axes:
+        raise ValueError("data_axes must name at least one mesh axis")
+    return axes
+
+
+def shard_leading(mesh: Mesh, axes: tuple[str, ...], tree):
+    """NamedShardings that shard every leaf's leading dim over ``axes``.
+
+    The layout of a :class:`repro.anticluster.ShardedABAState`: per-shard
+    price stacks ``(S, G_l, k_l)``, moment rows ``(S, d)`` / counts ``(S,)``
+    and the row-sharded ``(n,)`` label vector all shard dimension 0 across
+    the data-parallel axes and replicate the rest.
+    """
+    def leaf_sharding(leaf):
+        ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+        return NamedSharding(mesh, P(axes, *(None,) * (ndim - 1)))
+    return jax.tree.map(leaf_sharding, tree)

@@ -22,7 +22,9 @@ import numpy as np
 
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+    # DictKey has .key, SequenceKey .idx, dataclass GetAttrKey .name
+    return {"/".join(str(getattr(k, "key",
+                                 getattr(k, "idx", getattr(k, "name", k))))
                      for k in path): leaf for path, leaf in flat}
 
 
@@ -94,3 +96,42 @@ def restore(ckpt_dir: str, like_tree, *, step: int | None = None,
         arrays.append(jax.device_put(a, sh) if sh is not None else
                       jax.numpy.asarray(a))
     return jax.tree_util.tree_unflatten(treedef, arrays), step
+
+
+# --- anticlustering engine sessions ----------------------------------------
+#
+# The engine's carried state (repro.anticluster.ABAState / ShardedABAState)
+# is a plain pytree of arrays, so the generic save/restore machinery above
+# already handles it; these wrappers add the session ergonomics -- the
+# like-tree comes from the engine itself (``init_state``) and a sharded
+# session restores straight onto its mesh layout (``state_shardings``), so a
+# training job resuming after preemption warm-starts its per-epoch
+# anticlustering exactly where it left off instead of cold-solving epoch 0.
+
+def save_engine_state(ckpt_dir: str, step: int, state, *,
+                      keep: int = 3) -> str:
+    """Checkpoint an engine session state (``ABAState``/``ShardedABAState``).
+
+    Sharded states are gathered to host arrays by the generic writer (the
+    single-process layout; a multi-host pod would write addressable shards,
+    see module docstring).  Restore with :func:`restore_engine_state`.
+    """
+    return save(ckpt_dir, step, jax.device_get(state), keep=keep)
+
+
+def restore_engine_state(ckpt_dir: str, engine, x_or_shape, *,
+                         step: int | None = None):
+    """Restore a session state for ``engine`` and input shape ``x_or_shape``.
+
+    ``engine`` is a ``repro.anticluster.AnticlusterEngine`` (duck-typed:
+    anything with ``init_state``/``state_shardings``); the restored arrays
+    are validated against its zeroed state and, for mesh specs, placed with
+    the engine's ``NamedSharding`` layout -- restoring onto a *different*
+    mesh than the one that saved is exactly the elastic-resharding story of
+    :func:`restore`, and works as long as the shard count (and therefore
+    the state shapes) matches.  Returns ``(state, step)`` or ``(None, -1)``
+    when no checkpoint exists.
+    """
+    like = engine.init_state(x_or_shape)
+    return restore(ckpt_dir, like,
+                   step=step, shardings=engine.state_shardings(x_or_shape))

@@ -433,7 +433,7 @@ def test_scipy_solver_stats_no_deadlock():
 def test_public_api_snapshot():
     assert repro.anticluster.__all__ == [
         "AnticlusterSpec", "AnticlusterResult", "anticluster",
-        "AnticlusterEngine", "ABAState",
+        "AnticlusterEngine", "ABAState", "ShardedABAState",
         "register_solver", "get_solver", "available_solvers",
     ]
     assert repro.core.__all__ == [

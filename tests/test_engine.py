@@ -141,7 +141,9 @@ def test_state_shape_mismatch_raises():
                                  state.prev_labels))
 
 
-def test_engine_rejects_mesh_and_kplus():
+def test_engine_rejects_kplus_and_unbatched():
+    # (mesh specs are first-class engine sessions since the distributed
+    # redesign -- see tests/test_engine_sharded.py)
     with pytest.raises(NotImplementedError, match="anticluster"):
         AnticlusterEngine(k=4, kplus_moments=2)
     with pytest.raises(NotImplementedError, match="batched"):
@@ -236,6 +238,35 @@ def test_mixed_cold_warm_stack_is_per_instance():
     # cold instances are bit-identical to the all-cold solve
     np.testing.assert_array_equal(np.asarray(a_mix[0]), np.asarray(a_cold[0]))
     np.testing.assert_array_equal(np.asarray(a_mix[2]), np.asarray(a_cold[2]))
+
+
+def test_adaptive_reentry_runs_midschedule_phases_when_drifted():
+    """The warm path re-enters the eps schedule by measured infeasibility:
+    near-equilibrium prices keep the single-final-phase fast path, prices
+    carried across heavily drifted costs take mid-schedule phases -- and in
+    both regimes the result stays a permutation with a near-cold objective.
+    The legacy fixed shortcut stays available via adaptive_reentry=False."""
+    from repro.core.assignment import assignment_value
+    rng = np.random.default_rng(52)
+    cost = jnp.asarray(rng.normal(size=(2, 24, 24)).astype(np.float32))
+    _a, p = auction_solve(cost, return_prices=True)
+    p = p - p.max(axis=-1, keepdims=True)
+    drifted = cost + jnp.asarray(
+        rng.normal(size=cost.shape).astype(np.float32)) * 2.0  # heavy drift
+    for cfg in (AuctionConfig(), AuctionConfig(adaptive_reentry=False)):
+        a_warm = auction_solve(drifted, cfg, prices=p)
+        a_cold = auction_solve(drifted, cfg)
+        for b in range(2):
+            assert sorted(np.asarray(a_warm[b])) == list(range(24))
+            v_warm = assignment_value(np.asarray(drifted[b]),
+                                      np.asarray(a_warm[b]))
+            v_cold = assignment_value(np.asarray(drifted[b]),
+                                      np.asarray(a_cold[b]))
+            assert v_warm >= v_cold - abs(v_cold) * 0.05
+    # adaptive on near-equilibrium prices: unchanged steady-state behaviour
+    a_eq = auction_solve(cost, prices=p)
+    for b in range(2):
+        assert sorted(np.asarray(a_eq[b])) == list(range(24))
 
 
 def test_legacy_priceless_solver_shim_warns_and_works():
@@ -372,3 +403,29 @@ def test_service_rejects_per_dataset_specs():
     from repro.serve import AnticlusterService
     with pytest.raises(NotImplementedError, match="per-dataset"):
         AnticlusterService(k=4, categories=np.zeros(10, np.int32))
+
+
+def test_service_max_group_one_serves_every_request():
+    """max_group=1 degenerates every stack part to a singleton; each must
+    land on the solo lane (a bug once dropped all but the last)."""
+    from repro.serve import AnticlusterService
+    rng = np.random.default_rng(53)
+    svc = AnticlusterService(k=4, plan=None, max_group=1)
+    reqs = [rng.normal(size=(40, 3)).astype(np.float32) for _ in range(3)]
+    outs = svc.partition_many(reqs)
+    assert all(r is not None and r.balanced for r in outs)
+    one = anticluster(jnp.asarray(reqs[0]), k=4, plan=None)
+    np.testing.assert_array_equal(np.asarray(outs[0].labels),
+                                  np.asarray(one.labels))
+
+
+def test_folds_engine_category_values_must_match():
+    from repro.data.folds import aba_folds, fold_engine
+    feats = _data(100, 3, 54)
+    cats_a = np.zeros(100, np.int32)
+    cats_b = np.ones(100, np.int32)
+    eng = fold_engine(5, categories=cats_a)
+    with pytest.raises(ValueError, match="stratification"):
+        aba_folds(feats, 5, categories=cats_b, engine=eng)
+    labels = aba_folds(feats, 5, categories=cats_a, engine=eng)
+    assert balance_ok(labels, 5, 100)

@@ -1,0 +1,398 @@
+"""Distributed engine sessions: the mesh as an orthogonal placement axis.
+
+One-device tests run in tier-1 (a 1-device mesh exercises the whole
+``shard_map`` machinery without multi-device semantics); the tests marked
+``_multi`` need two devices and are exercised by the CI mesh smoke job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=2``) -- under tier-1's
+single device they skip.
+"""
+
+import pickle
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.anticluster import (ABAState, AnticlusterEngine, AnticlusterSpec,
+                               ShardedABAState, anticluster)
+from repro.core.objective import balance_ok, objective_centroid
+
+_multi = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def _mesh2():
+    return Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# Cold parity + the zeroed-sharded-state sentinel (1-device mesh)
+# ---------------------------------------------------------------------------
+
+def test_mesh_engine_cold_parity_and_sentinel():
+    x = jnp.asarray(_data(128, 5, 50))
+    spec = AnticlusterSpec(k=8, mesh=_mesh1(), data_axes=("data",))
+    one = anticluster(x, spec)
+    eng = AnticlusterEngine(spec)
+    res, state = eng.partition(x)
+    assert isinstance(state, ShardedABAState)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(one.labels))
+    assert res.plan == one.plan
+    # zeroed ShardedABAState IS the cold start, bit for bit
+    res0, _ = eng.repartition(x, eng.init_state(x))
+    np.testing.assert_array_equal(np.asarray(res0.labels),
+                                  np.asarray(one.labels))
+    assert eng.compile_count == 1
+    np.testing.assert_array_equal(np.asarray(state.prev_labels),
+                                  np.asarray(res.labels))
+
+
+def test_mesh_engine_warm_quality_and_compile_count():
+    rng = np.random.default_rng(51)
+    x = _data(192, 6, 51)
+    spec = AnticlusterSpec(k=12, mesh=_mesh1(), data_axes=("data",))
+    eng = AnticlusterEngine(spec)
+    _res, state = eng.partition(jnp.asarray(x))
+    for _ in range(3):
+        x = x + rng.normal(size=x.shape).astype(np.float32) * 0.05
+        xj = jnp.asarray(x)
+        res, state = eng.repartition(xj, state)
+        assert res.balanced and balance_ok(np.asarray(res.labels), 12, 192)
+        o_warm = float(objective_centroid(xj, res.labels, 12))
+        o_ref = float(objective_centroid(xj, anticluster(xj, spec).labels, 12))
+        assert abs(o_warm - o_ref) / abs(o_ref) < 0.01
+    assert eng.compile_count == 1
+    assert any(bool(np.any(np.asarray(p) != 0)) for p in state.prices)
+
+
+# ---------------------------------------------------------------------------
+# Mesh x categories / valid_mask / streaming (the lifted restrictions)
+# ---------------------------------------------------------------------------
+
+def test_mesh_categories_parity_single_shard():
+    rng = np.random.default_rng(52)
+    x = jnp.asarray(_data(120, 4, 52))
+    cats = rng.integers(0, 3, size=120).astype(np.int32)
+    spec = AnticlusterSpec(k=6, mesh=_mesh1(), data_axes=("data",),
+                           categories=cats)
+    res = anticluster(x, spec)
+    # one shard: the mesh path must equal the local auto-plan path exactly
+    ref = anticluster(x, AnticlusterSpec(k=6, categories=cats))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(ref.labels))
+    # and the engine agrees bit for bit, warm lane included
+    eng = AnticlusterEngine(spec)
+    r1, st = eng.partition(x)
+    np.testing.assert_array_equal(np.asarray(r1.labels),
+                                  np.asarray(res.labels))
+    r2, _ = eng.repartition(x, st)
+    assert r2.balanced
+
+
+def test_mesh_valid_mask_flat_plan():
+    x = jnp.asarray(_data(128, 4, 53))
+    vm = np.ones(128, bool)
+    vm[120:] = False
+    spec = AnticlusterSpec(k=8, mesh=_mesh1(), data_axes=("data",),
+                           valid_mask=vm)
+    res = anticluster(x, spec)
+    ref = anticluster(x, AnticlusterSpec(k=8, plan=None, valid_mask=vm))
+    np.testing.assert_array_equal(
+        np.where(vm, np.asarray(res.labels), 0),
+        np.where(vm, np.asarray(ref.labels), 0))
+    assert res.n_valid == 120
+    eng = AnticlusterEngine(spec)
+    r1, st = eng.partition(x)
+    np.testing.assert_array_equal(np.asarray(r1.labels)[vm],
+                                  np.asarray(res.labels)[vm])
+    np.testing.assert_array_equal(np.asarray(st.moment_count), [120.0])
+
+
+def test_mesh_stream_chunk_ge_n_bit_parity():
+    x = jnp.asarray(_data(160, 5, 54))
+    dense = AnticlusterSpec(k=8, mesh=_mesh1(), data_axes=("data",))
+    stream = dense.replace(chunk_size=200)
+    np.testing.assert_array_equal(
+        np.asarray(anticluster(x, stream).labels),
+        np.asarray(anticluster(x, dense).labels))
+    eng = AnticlusterEngine(stream)
+    res, st = eng.partition(x)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(anticluster(x, dense).labels))
+    res2, _ = eng.repartition(x, st)
+    assert res2.balanced and eng.compile_count == 1
+
+
+# ---------------------------------------------------------------------------
+# Validation: strict data_axes, divisibility, state types
+# ---------------------------------------------------------------------------
+
+def test_sharded_core_chunked_with_categories_stays_stratified():
+    """Direct sharded_core calls (the raw jit-able entry point) must not
+    let chunk_size silently bypass categories/valid_mask: the shard falls
+    back to the dense masked core, same rule as hierarchical_core."""
+    from repro.core.sharded import sharded_core
+    rng = np.random.default_rng(67)
+    x = jnp.asarray(_data(96, 3, 67))
+    cats = jnp.asarray(rng.integers(0, 2, size=96).astype(np.int32))
+    mesh = _mesh1()
+    lab_c = sharded_core(x, 4, mesh, data_axes=("data",), categories=cats,
+                         n_categories=2, chunk_size=32)
+    lab_d = sharded_core(x, 4, mesh, data_axes=("data",), categories=cats,
+                         n_categories=2)
+    np.testing.assert_array_equal(np.asarray(lab_c), np.asarray(lab_d))
+    vm = jnp.asarray(np.arange(96) < 90)
+    lab_vc = sharded_core(x, 4, mesh, data_axes=("data",), valid_mask=vm,
+                          chunk_size=32)
+    lab_vd = sharded_core(x, 4, mesh, data_axes=("data",), valid_mask=vm)
+    np.testing.assert_array_equal(np.asarray(lab_vc)[np.asarray(vm)],
+                                  np.asarray(lab_vd)[np.asarray(vm)])
+
+
+def test_data_axes_absent_axis_raises_with_names():
+    x = jnp.asarray(_data(64, 3, 55))
+    spec = AnticlusterSpec(k=4, mesh=_mesh1(), data_axes=("dta", "data"))
+    with pytest.raises(ValueError, match=r"dta"):
+        anticluster(x, spec)
+    with pytest.raises(ValueError, match=r"dta"):
+        AnticlusterEngine(spec)
+    from repro.core.sharded import sharded_core
+    with pytest.raises(ValueError, match=r"not present on the mesh"):
+        sharded_core(x, 4, _mesh1(), data_axes=("dta",))
+
+
+def test_data_axes_auto_needs_a_data_axis():
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
+    with pytest.raises(ValueError, match="none of the default data axes"):
+        anticluster(jnp.asarray(_data(64, 3, 56)),
+                    AnticlusterSpec(k=4, mesh=mesh))
+
+
+def test_mesh_rejects_indivisible_rows_and_mismatched_state():
+    spec = AnticlusterSpec(k=4, mesh=_mesh1(), data_axes=("data",))
+    eng = AnticlusterEngine(spec)
+    x = jnp.asarray(_data(64, 3, 57))
+    _, state = eng.partition(x)
+    # a single-device ABAState cannot feed a mesh engine
+    flat_eng = AnticlusterEngine(AnticlusterSpec(k=4, plan=None))
+    _, flat_state = flat_eng.partition(x)
+    with pytest.raises(TypeError, match="ShardedABAState"):
+        eng.repartition(x, flat_state)
+    with pytest.raises(TypeError, match="ABAState"):
+        flat_eng.repartition(x, state)
+
+
+# ---------------------------------------------------------------------------
+# ShardedABAState pytree + checkpoint round-trips
+# ---------------------------------------------------------------------------
+
+def test_sharded_state_is_a_registered_pytree():
+    spec = AnticlusterSpec(k=8, mesh=_mesh1(), data_axes=("data",))
+    eng = AnticlusterEngine(spec)
+    x = jnp.asarray(_data(96, 4, 58))
+    _, state = eng.partition(x)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, ShardedABAState)
+    jitted = jax.jit(lambda s: s)(state)
+    np.testing.assert_array_equal(np.asarray(jitted.prev_labels),
+                                  np.asarray(state.prev_labels))
+    back = pickle.loads(pickle.dumps(jax.device_get(state)))
+    res, _ = eng.repartition(x, jax.device_put(
+        back, eng.state_shardings(x)))
+    assert res.balanced
+
+
+def test_engine_state_checkpoint_roundtrip(tmp_path):
+    from repro.train.checkpoint import restore_engine_state, save_engine_state
+    x = jnp.asarray(_data(120, 4, 59))
+    # single-device session (ABAState)
+    eng = AnticlusterEngine(AnticlusterSpec(k=6, plan=(2, 3)))
+    _, state = eng.partition(x)
+    save_engine_state(str(tmp_path / "flat"), 7, state)
+    restored, step = restore_engine_state(str(tmp_path / "flat"), eng, x)
+    assert step == 7 and isinstance(restored, ABAState)
+    r_mem, _ = eng.repartition(x, state)
+    r_ckpt, _ = eng.repartition(x, restored)
+    np.testing.assert_array_equal(np.asarray(r_mem.labels),
+                                  np.asarray(r_ckpt.labels))
+    # sharded session (ShardedABAState placed back onto the mesh)
+    meng = AnticlusterEngine(
+        AnticlusterSpec(k=6, mesh=_mesh1(), data_axes=("data",)))
+    _, mstate = meng.partition(x)
+    save_engine_state(str(tmp_path / "mesh"), 3, mstate)
+    mrestored, step = restore_engine_state(str(tmp_path / "mesh"), meng, x)
+    assert step == 3 and isinstance(mrestored, ShardedABAState)
+    for a, b in zip(jax.tree_util.tree_leaves(mstate),
+                    jax.tree_util.tree_leaves(mrestored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m_mem, _ = meng.repartition(x, mstate)
+    m_ckpt, _ = meng.repartition(x, mrestored)
+    np.testing.assert_array_equal(np.asarray(m_mem.labels),
+                                  np.asarray(m_ckpt.labels))
+
+
+def test_restore_engine_state_empty_dir(tmp_path):
+    from repro.train.checkpoint import restore_engine_state
+    eng = AnticlusterEngine(AnticlusterSpec(k=4, plan=None))
+    state, step = restore_engine_state(str(tmp_path / "nope"), eng, (64, 3))
+    assert state is None and step == -1
+
+
+# ---------------------------------------------------------------------------
+# Consumers: sharded warm lanes
+# ---------------------------------------------------------------------------
+
+def test_service_sharded_warm_lane():
+    from repro.serve import AnticlusterService
+    rng = np.random.default_rng(60)
+    spec = AnticlusterSpec(k=4, mesh=_mesh1(), data_axes=("data",))
+    svc = AnticlusterService(spec)
+    reqs = [rng.normal(size=(64, 3)).astype(np.float32) for _ in range(3)]
+    outs = svc.partition_many(reqs)
+    # first request is the lane's cold solve: one-shot parity bit for bit;
+    # later same-shape requests warm-start from the carried shard prices
+    one = anticluster(jnp.asarray(reqs[0]), spec)
+    np.testing.assert_array_equal(np.asarray(outs[0].labels),
+                                  np.asarray(one.labels))
+    for r, xi in zip(outs, reqs):
+        assert r.balanced
+        xj = jnp.asarray(xi)
+        o_warm = float(objective_centroid(xj, r.labels, 4))
+        o_ref = float(objective_centroid(
+            xj, anticluster(xj, spec).labels, 4))
+        assert abs(o_warm - o_ref) / abs(o_ref) < 0.01
+    # mesh lanes never stack: one solo lane per signature, warm after that
+    assert svc.lane_count == 1
+    assert isinstance(svc._lanes[("solo", (64, 3))].state, ShardedABAState)
+    outs2 = svc.partition_many(reqs)
+    assert svc.lane_count == 1 and all(r.balanced for r in outs2)
+
+
+def test_sequencer_mesh_epochs_compile_once():
+    from repro.data.minibatch import ABABatchSequencer
+    rng = np.random.default_rng(61)
+    feats = rng.normal(size=(256, 5)).astype(np.float32)
+    seq = ABABatchSequencer(feats, 32, chunk_size=None, mesh=_mesh1(),
+                            data_axes=("data",))
+    assert seq.engine.spec.mesh is not None
+    assert seq.engine.compile_count == 1
+    for epoch in range(1, 3):
+        feats = feats + rng.normal(size=feats.shape).astype(np.float32) * .05
+        batches = list(seq.epoch(epoch, features=feats))
+        flat = np.sort(np.concatenate(batches))
+        np.testing.assert_array_equal(flat, np.arange(256))
+    assert seq.engine.compile_count == 1
+
+
+def test_folds_mesh_engine():
+    from repro.data.folds import aba_folds, fold_engine
+    feats = _data(128, 4, 62)
+    eng = fold_engine(4, mesh=_mesh1(), data_axes=("data",))
+    labels = aba_folds(feats, 4, engine=eng)
+    assert balance_ok(labels, 4, 128)
+    assert eng.compile_count == 1
+
+
+def test_sequencer_mesh_unplaceable_k_falls_back():
+    from repro.data.minibatch import ABABatchSequencer
+    feats = _data(56, 4, 63)
+    with pytest.warns(RuntimeWarning, match="single-device"):
+        seq = ABABatchSequencer(feats, 8, max_k=4, mesh=_mesh1(),
+                                data_axes=("data",))  # k=7 prime > max_k
+    assert seq.engine.spec.mesh is None
+
+
+# ---------------------------------------------------------------------------
+# Two-device semantics (CI mesh smoke job; skipped under tier-1's 1 device)
+# ---------------------------------------------------------------------------
+
+@_multi
+def test_two_device_engine_matches_oneshot_and_never_retraces():
+    rng = np.random.default_rng(64)
+    x = jnp.asarray(_data(256, 6, 64))
+    spec = AnticlusterSpec(k=16, mesh=_mesh2(), data_axes=("data",))
+    one = anticluster(x, spec)
+    assert one.plan[0] == 2  # the sharding is the first hierarchy level
+    eng = AnticlusterEngine(spec)
+    res, state = eng.partition(x)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(one.labels))
+    # zeroed ShardedABAState reproduces the cold result bit for bit
+    res0, _ = eng.repartition(x, eng.init_state(x))
+    np.testing.assert_array_equal(np.asarray(res0.labels),
+                                  np.asarray(one.labels))
+    # state leaves live sharded across the mesh
+    assert state.prices[0].shape[0] == 2
+    assert len(state.prices[0].sharding.device_set) == 2
+    xs = np.asarray(x)
+    for _ in range(3):
+        xs = xs + rng.normal(size=xs.shape).astype(np.float32) * 0.05
+        res, state = eng.repartition(jnp.asarray(xs), state)
+        assert res.balanced
+    assert eng.compile_count == 1  # zero retraces after the first call
+    # per-shard locality: shard s owns labels [s*8, (s+1)*8)
+    lab = np.asarray(res.labels)
+    for s in range(2):
+        seg = lab[s * 128:(s + 1) * 128]
+        assert seg.min() >= s * 8 and seg.max() < (s + 1) * 8
+
+
+@_multi
+def test_two_device_stream_and_categories():
+    rng = np.random.default_rng(65)
+    x = jnp.asarray(_data(256, 5, 65))
+    dense = AnticlusterSpec(k=8, mesh=_mesh2(), data_axes=("data",))
+    stream = dense.replace(chunk_size=512)  # >= per-shard rows: bit parity
+    np.testing.assert_array_equal(
+        np.asarray(anticluster(x, stream).labels),
+        np.asarray(anticluster(x, dense).labels))
+    cats = rng.integers(0, 4, size=256).astype(np.int32)
+    res = anticluster(x, dense.replace(categories=cats))
+    assert res.balanced
+    # per-shard stratification: within each shard every anticluster's
+    # category count obeys constraint (5) for that shard's rows
+    lab = np.asarray(res.labels)
+    for s in range(2):
+        rows = slice(s * 128, (s + 1) * 128)
+        local_cats, local_lab = cats[rows], lab[rows]
+        for g in range(4):
+            n_g = int((local_cats == g).sum())
+            per = np.bincount(local_lab[local_cats == g] - s * 4,
+                              minlength=4)
+            assert per.max() <= -(-n_g // 4) and per.min() >= n_g // 4
+
+
+@_multi
+def test_two_device_presharded_input_and_checkpoint(tmp_path):
+    from repro.train.checkpoint import restore_engine_state, save_engine_state
+    mesh = _mesh2()
+    x = jnp.asarray(_data(192, 4, 66))
+    spec = AnticlusterSpec(k=8, mesh=mesh, data_axes=("data",))
+    eng = AnticlusterEngine(spec)
+    xsh = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+    res, state = eng.partition(xsh)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(anticluster(x, spec).labels))
+    save_engine_state(str(tmp_path / "m2"), 1, state)
+    restored, _ = restore_engine_state(str(tmp_path / "m2"), eng, x)
+    assert len(restored.prices[0].sharding.device_set) == 2
+    r_mem, _ = eng.repartition(xsh, state)
+    r_ckpt, _ = eng.repartition(xsh, restored)
+    np.testing.assert_array_equal(np.asarray(r_mem.labels),
+                                  np.asarray(r_ckpt.labels))
