@@ -172,8 +172,33 @@ class AnticlusterSpec:
             raise ValueError(f'chunk_size must be None, "auto", or a '
                              f"positive int; got {self.chunk_size!r}")
 
+    def evolve(self, **changes) -> "AnticlusterSpec":
+        """A new spec with ``changes`` applied -- the supported public
+        alternative to raw ``dataclasses.replace``.
+
+        Validates the *field names* up front (an unknown name raises
+        ``TypeError`` listing the valid fields, instead of
+        ``dataclasses.replace``'s bare complaint) and re-runs the frozen
+        spec's ``__post_init__`` checks (k/plan consistency, chunk_size
+        domain) on the evolved value.  Every keyword-``overrides`` surface
+        in the repo (``anticluster(x, spec, **ov)``,
+        ``AnticlusterEngine(spec, **ov)``, the serving tier, the
+        folds/minibatch spec derivation) routes through here, so "spec +
+        overrides" means exactly one thing everywhere.
+        """
+        if not changes:
+            return self
+        valid = {f.name for f in dataclasses.fields(self)}
+        unknown = sorted(set(changes) - valid)
+        if unknown:
+            raise TypeError(
+                f"unknown AnticlusterSpec field(s) {unknown}; valid fields "
+                f"are {sorted(valid)}")
+        return dataclasses.replace(self, **changes)
+
     def replace(self, **overrides) -> "AnticlusterSpec":
-        return dataclasses.replace(self, **overrides)
+        """Back-compat alias of :meth:`evolve` (same validation)."""
+        return self.evolve(**overrides)
 
     def resolve_plan(self) -> tuple[int, ...]:
         """The concrete per-device hierarchy plan this spec dispatches to."""
@@ -314,6 +339,18 @@ jax.tree_util.register_dataclass(
     ShardedABAState,
     data_fields=["prices", "moment_sum", "moment_count", "prev_labels"],
     meta_fields=[])
+
+
+def _resolve_spec(spec: "AnticlusterSpec | None",
+                  overrides: dict) -> "AnticlusterSpec":
+    """The one "spec or keyword overrides" rule every front door shares.
+
+    ``None`` builds a fresh spec from the overrides; an existing spec is
+    evolved through the validated :meth:`AnticlusterSpec.evolve`.
+    """
+    if spec is None:
+        return AnticlusterSpec(**overrides)
+    return spec.evolve(**overrides)
 
 
 def _mesh_shards(spec: "AnticlusterSpec") -> int:
@@ -516,10 +553,7 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
       :class:`AnticlusterResult` with labels, the resolved plan, per-cluster
       sizes and diversity statistics.
     """
-    if spec is None:
-        spec = AnticlusterSpec(**overrides)
-    elif overrides:
-        spec = spec.replace(**overrides)
+    spec = _resolve_spec(spec, overrides)
 
     x = jnp.asarray(x)
     if x.ndim not in (2, 3):
@@ -611,10 +645,7 @@ class AnticlusterEngine:
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
             AnticlusterEngine._donation_advisory_silenced = True
-        if spec is None:
-            spec = AnticlusterSpec(**overrides)
-        elif overrides:
-            spec = spec.replace(**overrides)
+        spec = _resolve_spec(spec, overrides)
         if spec.mesh is not None:
             _mesh_shards(spec)  # fail fast on bad data_axes / mesh
         if spec.kplus_moments > 1:
@@ -648,14 +679,19 @@ class AnticlusterEngine:
         """
         return self._trace_count
 
-    def _routed(self, shape: tuple[int, ...]):
+    def _routed(self, shape: tuple[int, ...], has_vm: bool | None = None):
         # memoized: repartition is the per-epoch hot path and the route
-        # (incl. resolve_plan's factorization search) is static per shape
-        routed = self._routes.get(shape)
+        # (incl. resolve_plan's factorization search) is static per shape.
+        # ``has_vm`` defaults to the spec's static mask; a per-call mask
+        # (see ``repartition``) routes with has_vm=True for the same shape.
+        if has_vm is None:
+            has_vm = self._vm is not None
+        key = (shape, has_vm)
+        routed = self._routes.get(key)
         if routed is None:
             routed = _route(self.spec, shape, self._cats is not None,
-                            self._vm is not None)
-            self._routes[shape] = routed
+                            has_vm)
+            self._routes[key] = routed
         return routed
 
     def price_shapes(self, shape) -> tuple[tuple[int, ...], ...]:
@@ -729,12 +765,15 @@ class AnticlusterEngine:
         return state if shardings is None else jax.device_put(state,
                                                               shardings)
 
-    def partition(self, x) -> tuple[AnticlusterResult, ABAState]:
+    def partition(self, x, *,
+                  valid_mask=None) -> tuple[AnticlusterResult, ABAState]:
         """Cold solve: ``repartition`` from a zeroed state (bit-identical to
         ``anticluster(x, spec)``); compiles on first use per shape."""
-        return self.repartition(x, self.init_state(jnp.shape(x)))
+        return self.repartition(x, self.init_state(jnp.shape(x)),
+                                valid_mask=valid_mask)
 
-    def repartition(self, x, state) -> tuple[AnticlusterResult, Any]:
+    def repartition(self, x, state, *,
+                    valid_mask=None) -> tuple[AnticlusterResult, Any]:
         """Warm solve: same-shape re-partition carrying ``state``'s prices.
 
         The state is *consumed* (its buffers are donated to the compiled
@@ -742,11 +781,33 @@ class AnticlusterEngine:
         (``init_state``) reproduces ``partition`` bit-for-bit.  Mesh specs
         take and return a :class:`ShardedABAState` (per-shard layout kept
         end to end); meshless specs an :class:`ABAState`.
+
+        ``valid_mask`` marks padding rows *per call* (bool, the labels'
+        shape): unlike ``spec.valid_mask`` (one static mask baked into the
+        session) it is a runtime argument of the same compiled executable,
+        so one engine can serve differently-padded same-shape inputs with
+        zero retraces -- the serving tier's row-bucket admission
+        (`repro.serve`) leans on this.  Masked rows never influence real
+        rows and draw arbitrary labels in [0, k); mutually exclusive with
+        ``spec.valid_mask``.
         """
         spec = self.spec
         x = jnp.asarray(x).astype(spec.dtype)
         shape = tuple(x.shape)
-        mode, plan, solver, _chunk = self._routed(shape)
+        vm = self._vm
+        per_call_mask = valid_mask is not None
+        if per_call_mask:
+            if self._vm is not None:
+                raise ValueError(
+                    "spec.valid_mask and a per-call valid_mask are mutually "
+                    "exclusive; build the engine without spec.valid_mask to "
+                    "pass masks per call")
+            vm = jnp.asarray(valid_mask, jnp.bool_)
+            if tuple(vm.shape) != shape[:-1]:
+                raise ValueError(
+                    f"valid_mask shape {tuple(vm.shape)} does not match the "
+                    f"label shape {shape[:-1]} of input {shape}")
+        mode, plan, solver, _chunk = self._routed(shape, vm is not None)
         state_cls = ShardedABAState if mode == "mesh" else ABAState
         if not isinstance(state, state_cls):
             raise TypeError(
@@ -761,19 +822,22 @@ class AnticlusterEngine:
                 f"state prices {got} do not match the {expected} this "
                 f"engine carries for input shape {shape} (state from a "
                 "different shape/plan?)")
-        key = (shape, jnp.dtype(spec.dtype).name)
+        key = (shape, jnp.dtype(spec.dtype).name, per_call_mask)
         fn = self._fns.get(key)
         if fn is None:
-            fn = self._build(shape)
+            fn = self._build(shape, per_call_mask=per_call_mask)
             self._fns[key] = fn
-        labels, prices, msum, mcnt = fn(x, tuple(state.prices))
+        if per_call_mask:
+            labels, prices, msum, mcnt = fn(x, tuple(state.prices), vm)
+        else:
+            labels, prices, msum, mcnt = fn(x, tuple(state.prices))
         # Finish labels before dispatching the (host-level) statistics ops:
         # host-callback solvers deadlock otherwise (see anticluster()).
         labels = jax.block_until_ready(labels)
         if mode == "mesh":
             n_shards = _mesh_shards(spec)
             plan = ((n_shards,) + plan) if n_shards > 1 else plan
-        sizes, sd, rng = _result_stats(x, labels, spec.k, self._vm,
+        sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
                                        diversity=spec.stats)
         result = AnticlusterResult(
             labels=labels, cluster_sizes=sizes, diversity_sd=sd,
@@ -782,19 +846,22 @@ class AnticlusterEngine:
         return result, state_cls(prices=prices, moment_sum=msum,
                                  moment_count=mcnt, prev_labels=labels)
 
-    def _build(self, shape: tuple[int, ...]):
+    def _build(self, shape: tuple[int, ...], per_call_mask: bool = False):
         """One shape-keyed executable: solve + state refresh, donated state.
 
         Mesh specs compile the whole thing -- ``shard_map`` execution plus
         the per-shard price refresh -- into this one jitted callable too, so
         distributed repartitioning retraces exactly as often as the local
-        path: once per input signature.
+        path: once per input signature.  With ``per_call_mask`` the valid
+        mask is a runtime argument of the executable (one trace covers every
+        padding pattern of the shape) instead of a baked-in constant.
         """
         spec = self.spec
-        mode, plan, solver, chunk = self._routed(shape)
-        cats, ncats, vm = self._cats, self._n_categories, self._vm
+        mode, plan, solver, chunk = self._routed(
+            shape, True if per_call_mask else None)
+        cats, ncats = self._cats, self._n_categories
 
-        def fn(x, prices):
+        def body(x, prices, vm):
             self._trace_count += 1  # python side effect: runs once per trace
             labels, st = _call_core(x, spec, mode, plan, solver, chunk,
                                     cats, ncats, vm, prices=prices,
@@ -816,4 +883,9 @@ class AnticlusterEngine:
                        if vm is None else jnp.sum(vm, dtype=jnp.float32))
             return labels, new_prices, mu * cnt[..., None], cnt
 
-        return jax.jit(fn, donate_argnums=(1,))
+        if per_call_mask:
+            return jax.jit(lambda x, prices, vm: body(x, prices, vm),
+                           donate_argnums=(1,))
+        static_vm = self._vm
+        return jax.jit(lambda x, prices: body(x, prices, static_vm),
+                       donate_argnums=(1,))

@@ -36,7 +36,7 @@ def fold_engine(n_folds: int, *, categories: np.ndarray | None = None,
     """
     from repro.data.minibatch import _auto_or_flat_spec
     spec = _auto_or_flat_spec(n_folds, max_k, chunk_size, mesh=mesh,
-                              data_axes=data_axes).replace(
+                              data_axes=data_axes).evolve(
         categories=None if categories is None else jnp.asarray(categories))
     return AnticlusterEngine(spec)
 

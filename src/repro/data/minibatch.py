@@ -64,7 +64,7 @@ def _auto_or_flat_spec(k: int, max_k: int, chunk_size="auto", mesh=None,
             f"k={k} has no {where}; falling back to the flat single-level "
             "single-device solve (slower at this k)",
             RuntimeWarning, stacklevel=3)
-        return spec.replace(plan=None, mesh=None)
+        return spec.evolve(plan=None, mesh=None)
 
 
 class ABABatchSequencer:

@@ -1,4 +1,7 @@
 from repro.serve.generate import Generator
+from repro.serve.router import (AnticlusterRouter, EnginePool, Rejected,
+                                ServiceMetrics, Ticket)
 from repro.serve.anticluster_service import AnticlusterService
 
-__all__ = ["Generator", "AnticlusterService"]
+__all__ = ["AnticlusterRouter", "AnticlusterService", "EnginePool",
+           "Generator", "Rejected", "ServiceMetrics", "Ticket"]

@@ -1,151 +1,37 @@
-"""Request-batching anticlustering service over warm engine lanes.
+"""Synchronous facade over the async serving tier.
 
-The serving shape of the paper's repeated-workload story: clients submit
-``(n, d)`` feature matrices (``partition`` for one, ``partition_many`` for a
-burst) and the service answers with :class:`AnticlusterResult` per request.
-Internally requests are grouped by input signature into **lanes**; each lane
-owns one :class:`repro.anticluster.AnticlusterEngine` plus its carried
-:class:`ABAState`, so a lane compiles on its first request and every later
-request warm-starts the auction from the previous traffic's prices --
-steady-state serving never retraces and never cold-solves.
+:class:`AnticlusterService` is the PR-4 surface -- ``partition`` for one
+request, ``partition_many`` for a burst -- kept bit-for-bit compatible but
+now a thin wrapper over :class:`repro.serve.router.AnticlusterRouter`:
+``partition_many`` admits the whole burst atomically and drives the queue
+inline (no background thread), so same-bucket requests stack exactly as the
+old service stacked same-shape bursts, with the router's row-bucket
+padding, engine pools, and metrics riding along for free.
 
-Same-shape requests arriving together are additionally *stacked* into one
-``(G, M, D)`` batch and solved by a single rank-polymorphic core call (the
-ABA core's group axis; flat-plan specs only -- hierarchical specs fall back
-to sequential warm calls on the same lane).  Stacked lanes pad the group
-axis to power-of-two buckets (repeating the last request) so a fluctuating
-burst size maps onto a handful of compiled executables instead of one per
-burst width.
-
-A spec with a ``mesh`` serves **sharded warm lanes**: each lane's engine
-compiles one ``shard_map`` executable and carries a
-:class:`repro.anticluster.ShardedABAState` (per-shard auction prices) across
-requests, so steady-state distributed serving warm-starts shard-locally
-with zero retraces.  Mesh lanes solve requests one at a time (the group
-axis and the shard axis are different placement dims -- stacking is the
-single-device batching story), so ``mesh`` composes with everything except
-the stacked bucket path.
+New code should use the router's async surface directly
+(``submit(x, deadline=...) -> Ticket``); this class exists so no caller
+migrates under duress.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax.numpy as jnp
-
-from repro.anticluster import (ABAState, AnticlusterEngine,
-                               AnticlusterResult, AnticlusterSpec)
+from repro.serve.router import AnticlusterRouter
 
 __all__ = ["AnticlusterService"]
 
 
-@dataclasses.dataclass
-class _Lane:
-    engine: AnticlusterEngine
-    state: ABAState | None = None
-
-
-class AnticlusterService:
+class AnticlusterService(AnticlusterRouter):
     """Shape-keyed, warm-started request batching for ``anticluster``.
 
-    Args:
-      spec: the :class:`AnticlusterSpec` every request is solved under
-        (keyword ``overrides`` compose like ``anticluster``'s).  Specs with
-        ``categories`` / ``valid_mask`` are per-dataset rather than
-        per-request concepts and are rejected here; a ``mesh`` spec serves
-        each request distributed on warm sharded lanes (requests then solve
-        sequentially per lane -- no stacking across the group axis).
-      max_group: cap on the stacked group axis; bursts larger than this are
-        split into successive stacked calls.
+    A :class:`repro.serve.router.AnticlusterRouter` with no background
+    worker: callers drive the queue inline through the synchronous
+    ``partition`` / ``partition_many`` (or explicitly via ``submit`` +
+    ``Ticket.result``, which pumps the queue on the calling thread).
+    Single-threaded and deterministic -- the shape tier-1 tests and
+    library embeddings want; services absorbing live traffic should use
+    :class:`AnticlusterRouter` itself (``background=True``).
     """
 
-    def __init__(self, spec: AnticlusterSpec | None = None, *,
-                 max_group: int = 32, **overrides):
-        if spec is None:
-            spec = AnticlusterSpec(**overrides)
-        elif overrides:
-            spec = spec.replace(**overrides)
-        if spec.categories is not None or spec.valid_mask is not None:
-            raise NotImplementedError(
-                "AnticlusterService serves anonymous flat (n, d) requests; "
-                "categories/valid_mask are per-dataset concepts -- use "
-                "AnticlusterEngine directly")
-        if max_group < 1:
-            raise ValueError(f"max_group={max_group} must be >= 1")
-        self.spec = spec
-        self.max_group = max_group
-        self._lanes: dict = {}
-        # stacked (G, M, D) execution needs a flat per-request plan (and no
-        # mesh: the shard axis is placement, the group axis is batching);
-        # the factorization search is static per spec, so resolve once here
-        self._flat_plan = (len(spec.resolve_plan()) == 1
-                           and spec.mesh is None)
-
-    @property
-    def lane_count(self) -> int:
-        """Number of live (engine, state) lanes -- one per input signature."""
-        return len(self._lanes)
-
-    def _lane(self, key) -> _Lane:
-        lane = self._lanes.get(key)
-        if lane is None:
-            lane = _Lane(engine=AnticlusterEngine(self.spec))
-            self._lanes[key] = lane
-        return lane
-
-    def _can_stack(self, shape) -> bool:
-        return self._flat_plan and len(shape) == 2
-
-    def partition(self, x) -> AnticlusterResult:
-        """Serve one request on its (warm) lane."""
-        return self.partition_many([x])[0]
-
-    def partition_many(self, requests) -> list[AnticlusterResult]:
-        """Serve a burst; results align with the request order.
-
-        Same-shape requests are stacked into (G, M, D) engine calls in
-        power-of-two group buckets; each bucket size is its own lane (own
-        compiled executable + carried prices).
-        """
-        xs = [jnp.asarray(x).astype(self.spec.dtype) for x in requests]
-        groups: dict[tuple, list[int]] = {}
-        for i, x in enumerate(xs):
-            groups.setdefault(tuple(x.shape), []).append(i)
-        results: list = [None] * len(xs)
-        for shape, idxs in groups.items():
-            solo = idxs
-            if len(idxs) > 1 and self._can_stack(shape):
-                solo = []
-                for lo in range(0, len(idxs), self.max_group):
-                    part = idxs[lo:lo + self.max_group]
-                    if len(part) == 1:
-                        solo.extend(part)  # burst remainders of 1 go to the
-                        continue           # solo lane for this signature
-                    self._serve_stacked(xs, part, shape, results)
-            lane = self._lane(("solo", shape)) if solo else None
-            for i in solo:
-                res, state = self._call(lane, xs[i])
-                lane.state = state
-                results[i] = res
-        return results
-
-    def _serve_stacked(self, xs, idxs, shape, results):
-        G = len(idxs)
-        bucket = 1 << (G - 1).bit_length()  # pad bursts to pow2 widths
-        stack = jnp.stack([xs[i] for i in idxs]
-                          + [xs[idxs[-1]]] * (bucket - G))
-        lane = self._lane(("stack", shape, bucket))
-        res, state = self._call(lane, stack)
-        lane.state = state
-        for g, i in enumerate(idxs):
-            results[i] = AnticlusterResult(
-                labels=res.labels[g], cluster_sizes=res.cluster_sizes[g],
-                diversity_sd=res.diversity_sd[g],
-                diversity_range=res.diversity_range[g],
-                k=res.k, plan=res.plan, solver=res.solver,
-                variant=res.variant)
-
-    def _call(self, lane: _Lane, x):
-        if lane.state is None:
-            return lane.engine.partition(x)
-        return lane.engine.repartition(x, lane.state)
+    def __init__(self, spec=None, *, max_group: int = 32, **overrides):
+        super().__init__(spec, max_group=max_group, background=False,
+                         **overrides)

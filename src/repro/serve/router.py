@@ -1,0 +1,648 @@
+"""Async anticlustering serving tier: continuous batching over engine pools.
+
+The production shape of the paper's repeated-workload story
+(:class:`AnticlusterRouter`): clients ``submit`` ``(n, d)`` feature
+matrices and get a :class:`Ticket` back; a bounded admission queue feeds
+**continuous batching** -- pending requests are admitted into the *next*
+in-flight stacked lane call instead of only stacking bursts that happen to
+arrive together (the PR-4 synchronous service's limitation).
+
+Admission groups requests three ways:
+
+* **Row buckets.**  Requests whose row counts land in the same
+  power-of-two bucket are padded to the bucket with a per-call
+  ``valid_mask`` (the first real exercise of the engine's uneven-row
+  masking), so near-shapes share ONE compiled lane executable instead of
+  one per distinct ``n``.  Padding is restricted to requests whose
+  unpadded solve uses the base (non-interleave) rearrangement -- the
+  masked core skips the Section-4.2 interleave, so only there is the
+  padded solve bit-for-bit identical to the unpadded one (pinned by
+  tests/test_serve.py).  Interleave-regime requests still stack, but only
+  with exact shape twins (the pre-padding behaviour).
+* **Group buckets.**  A formed batch stacks its requests on the core's
+  group axis, padded to a power-of-two width by repeating the last
+  request (same as the synchronous service) -- a fluctuating batch size
+  maps onto a handful of compiled executables.
+* **Sequential lanes.**  Hierarchical-plan and mesh specs cannot stack
+  (the group axis needs a flat plan; the mesh uses its own placement
+  axis, PR-5 semantics): their requests serve one-at-a-time on warm solo
+  lanes.  For hierarchical specs this is a *degraded* path -- it is
+  surfaced by the ``degraded_sequential`` metric and a one-time
+  ``RuntimeWarning`` instead of silently losing throughput.
+
+Robustness: the queue is bounded (``submit`` raises
+:class:`Rejected`("queue_full") -- backpressure, never OOM), requests
+carry optional deadlines and are shed at admission when expired
+(:class:`Rejected`("deadline")), and closing the router rejects pending
+work (:class:`Rejected`("shutdown")).  Throughput: per-spec
+:class:`EnginePool` lanes are placed round-robin across ``jax.devices()``
+(meshless specs), so concurrent lanes solve on different chips.
+Observability: :meth:`AnticlusterRouter.metrics` returns a
+:class:`ServiceMetrics` snapshot (queue depth, warm-hit rate, stack/row
+occupancy, per-lane compile counts, degraded-path counters);
+``benchmarks/serve_bench.py`` turns it into the CI-gated
+``BENCH_serve.json`` SLO trajectory.
+
+The synchronous ``partition`` / ``partition_many`` survive as thin
+wrappers over ``submit`` (see :class:`repro.serve.AnticlusterService`) --
+bit-for-bit identical results, no caller migrates under duress.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+import warnings
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anticluster import (AnticlusterEngine, AnticlusterResult,
+                               AnticlusterSpec, _resolve_spec)
+
+__all__ = ["AnticlusterRouter", "EnginePool", "Rejected", "ServiceMetrics",
+           "Ticket"]
+
+# A request is row-padded only when its unpadded solve would use the base
+# rearrangement: variant "auto" interleaves at n // k <= 8 (mirrors
+# ``repro.core.aba.aba_core``), and the masked core skips interleave, so
+# padding an interleave-regime request would change its labels.
+_INTERLEAVE_RATIO = 8
+
+
+class Rejected(RuntimeError):
+    """Typed rejection outcome of a serving request.
+
+    ``reason`` is one of:
+
+    * ``"queue_full"`` -- backpressure: the bounded admission queue was at
+      ``max_queue`` (raised synchronously by ``submit``; the request was
+      never admitted).
+    * ``"deadline"`` -- the request's deadline expired before a lane picked
+      it up; it was shed at admission and its ticket resolves rejected.
+    * ``"shutdown"`` -- the router was closed while the request was pending.
+    """
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+class Ticket:
+    """Handle for one submitted request.
+
+    ``done()`` is non-blocking; ``result()`` blocks until the request is
+    served (re-raising the :class:`Rejected` outcome if it was shed) --
+    under a background worker it waits, without one it *drives* the
+    router's queue inline, so the sync wrappers never need a thread.
+    ``submitted_at`` / ``completed_at`` are router-clock stamps and
+    ``latency`` their difference: the load benchmark's SLO numbers come
+    straight from tickets.
+    """
+
+    __slots__ = ("_router", "_event", "_result", "_rejection",
+                 "submitted_at", "completed_at")
+
+    def __init__(self, router: "AnticlusterRouter", submitted_at: float):
+        self._router = router
+        self._event = threading.Event()
+        self._result: AnticlusterResult | None = None
+        self._rejection: Rejected | None = None
+        self.submitted_at = submitted_at
+        self.completed_at: float | None = None
+
+    def done(self) -> bool:
+        """True once the request was served or rejected (non-blocking)."""
+        return self._event.is_set()
+
+    @property
+    def rejection(self) -> Rejected | None:
+        """The :class:`Rejected` outcome, or None (pending / served)."""
+        return self._rejection
+
+    @property
+    def latency(self) -> float | None:
+        """Seconds from submission to completion (None while pending)."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    def result(self, timeout: float | None = None) -> AnticlusterResult:
+        """The request's :class:`AnticlusterResult` (blocks until served).
+
+        Raises the ticket's :class:`Rejected` if the request was shed, and
+        ``TimeoutError`` if ``timeout`` seconds pass first.
+        """
+        self._router._fulfil(self, timeout)
+        if self._rejection is not None:
+            raise self._rejection
+        return self._result
+
+    def _resolve(self, result=None, rejection=None, at=None):
+        self._result = result
+        self._rejection = rejection
+        self.completed_at = at
+        self._event.set()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceMetrics:
+    """Point-in-time observability snapshot of a router.
+
+    Counters are lifetime totals since construction; ``queue_depth`` and
+    ``lane_compile_counts`` are current.  The derived properties are the
+    serving-tier SLO signals: ``warm_hit_rate`` (fraction of lane calls
+    that warm-started from carried prices), ``stack_occupancy`` (real
+    requests per stacked group slot -- how much of the batching headroom
+    traffic actually uses), ``row_occupancy`` (real rows per padded row
+    slot -- the cost of row-bucket admission), and ``shed_rate``.
+    """
+
+    queue_depth: int
+    submitted: int
+    completed: int
+    shed_deadline: int
+    rejected_full: int
+    stacked_calls: int
+    solo_calls: int
+    warm_calls: int
+    cold_calls: int
+    degraded_sequential: int
+    group_slots: int
+    group_filled: int
+    row_slots: int
+    row_filled: int
+    lane_compile_counts: dict[str, int]
+    devices: int
+
+    @property
+    def warm_hit_rate(self) -> float:
+        calls = self.warm_calls + self.cold_calls
+        return self.warm_calls / calls if calls else 0.0
+
+    @property
+    def stack_occupancy(self) -> float:
+        return self.group_filled / self.group_slots if self.group_slots \
+            else 0.0
+
+    @property
+    def row_occupancy(self) -> float:
+        return self.row_filled / self.row_slots if self.row_slots else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        finished = self.completed + self.shed_deadline
+        return self.shed_deadline / finished if finished else 0.0
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One warm serving lane: an engine, its carried state, its device."""
+
+    engine: AnticlusterEngine
+    state: Any = None
+    device: Any = None
+    calls: int = 0
+
+
+class EnginePool:
+    """Per-spec pool of warm engine lanes, placed round-robin over devices.
+
+    Each lane key (an input signature bucket) owns one
+    :class:`AnticlusterEngine` plus its carried state.  Meshless specs
+    place successive *new* lanes on ``jax.devices()`` round-robin -- a
+    lane's inputs and state are committed to its device, so lanes solve on
+    different chips without any cross-device chatter.  Mesh specs keep the
+    PR-5 semantics (the engine's ``shard_map`` placement owns the devices;
+    no per-lane pinning).
+    """
+
+    def __init__(self, spec: AnticlusterSpec):
+        self.spec = spec
+        self.lanes: dict[tuple, _Lane] = {}
+        self._devices = list(jax.devices()) if spec.mesh is None else []
+        self._next_device = 0
+
+    @property
+    def device_count(self) -> int:
+        return len(self._devices) if self._devices else len(jax.devices())
+
+    def lane(self, key: tuple) -> _Lane:
+        lane = self.lanes.get(key)
+        if lane is None:
+            device = None
+            if len(self._devices) > 1:
+                device = self._devices[self._next_device
+                                       % len(self._devices)]
+                self._next_device += 1
+            lane = _Lane(engine=AnticlusterEngine(self.spec), device=device)
+            self.lanes[key] = lane
+        return lane
+
+
+@dataclasses.dataclass
+class _Request:
+    x: Any                      # (n, d) jnp array, already spec.dtype
+    n: int
+    d: int
+    ticket: Ticket
+    deadline_at: float | None   # absolute router-clock time, or None
+    key: tuple                  # admission key (what can batch together)
+    bucket: int                 # padded row count (== n when not padded)
+
+
+class AnticlusterRouter:
+    """Admission-controlled async front end over warm anticluster lanes.
+
+    Args:
+      spec: the :class:`AnticlusterSpec` every request is solved under
+        (keyword ``overrides`` compose via ``AnticlusterSpec.evolve``).
+        Specs with ``categories`` / ``valid_mask`` are per-dataset rather
+        than per-request concepts and are rejected; a ``mesh`` spec serves
+        requests one-at-a-time on warm sharded lanes (PR-5 semantics).
+      max_group: cap on the stacked group axis per lane call; pending
+        same-bucket requests beyond it wait for the next call.
+      max_queue: bound on admitted-but-unserved requests; ``submit`` above
+        it raises :class:`Rejected`("queue_full") synchronously.
+      row_buckets: pad near-shapes to power-of-two row buckets so they
+        share lanes (False restores exact-shape-only stacking).
+      background: serve from a daemon worker thread (started lazily on the
+        first ``submit``).  False leaves driving to the caller:
+        ``Ticket.result`` / ``drain`` / ``step`` pump the queue inline --
+        deterministic and thread-free, which is what the sync
+        :class:`repro.serve.AnticlusterService` wrapper and the tier-1
+        tests use.
+      clock: the router's time source (monotonic seconds) for deadlines
+        and latency stamps; injectable so tests shed deterministically.
+    """
+
+    def __init__(self, spec: AnticlusterSpec | None = None, *,
+                 max_group: int = 32, max_queue: int = 1024,
+                 row_buckets: bool = True, background: bool = True,
+                 clock: Callable[[], float] = time.monotonic, **overrides):
+        spec = _resolve_spec(spec, overrides)
+        if spec.categories is not None or spec.valid_mask is not None:
+            raise NotImplementedError(
+                "the serving tier solves anonymous flat (n, d) requests; "
+                "categories/valid_mask are per-dataset concepts -- use "
+                "AnticlusterEngine directly")
+        if max_group < 1:
+            raise ValueError(f"max_group={max_group} must be >= 1")
+        if max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1")
+        self.spec = spec
+        self.max_group = max_group
+        self.max_queue = max_queue
+        self.row_buckets = row_buckets
+        self._clock = clock
+        self._background = background
+        self._plan = spec.resolve_plan()
+        # stacked (G, M, D) execution needs a flat per-request plan, no mesh
+        # (the shard axis is placement, the group axis is batching), and a
+        # dense solve (an explicit int chunk_size bans stacked input)
+        self._stackable = (len(self._plan) == 1 and spec.mesh is None
+                           and not isinstance(spec.chunk_size, int))
+        self._is_hier = len(self._plan) > 1 and spec.mesh is None
+        self._pool = EnginePool(spec)
+        self._queue: collections.deque[_Request] = collections.deque()
+        self._cv = threading.Condition()
+        self._serve_mutex = threading.Lock()  # one batch former at a time
+        self._worker: threading.Thread | None = None
+        self._closed = False
+        self._warned_degraded = False
+        # metrics counters (guarded by self._cv)
+        self._submitted = 0
+        self._completed = 0
+        self._shed_deadline = 0
+        self._rejected_full = 0
+        self._stacked_calls = 0
+        self._solo_calls = 0
+        self._warm_calls = 0
+        self._cold_calls = 0
+        self._degraded_sequential = 0
+        self._group_slots = 0
+        self._group_filled = 0
+        self._row_slots = 0
+        self._row_filled = 0
+
+    # -- admission ----------------------------------------------------------
+
+    @property
+    def lane_count(self) -> int:
+        """Number of live (engine, state) lanes -- one per signature bucket."""
+        return len(self._pool.lanes)
+
+    @property
+    def _lanes(self) -> dict:
+        return self._pool.lanes
+
+    def _coerce(self, x) -> jnp.ndarray:
+        xa = jnp.asarray(x)
+        if xa.ndim != 2:
+            raise ValueError(
+                f"requests are (n, d) feature matrices; got shape "
+                f"{tuple(xa.shape)}")
+        if xa.shape[0] < self.spec.k:
+            raise ValueError(
+                f"request has n={xa.shape[0]} rows < spec.k={self.spec.k}")
+        return xa.astype(self.spec.dtype)
+
+    def _admission(self, n: int, d: int) -> tuple[tuple, int]:
+        """(admission key, padded row bucket) for an ``(n, d)`` request.
+
+        Requests sharing a key may be served by one stacked lane call.
+        """
+        if not self._stackable:
+            return ("seq", n, d), n
+        spec = self.spec
+        paddable = self.row_buckets and (
+            spec.variant == "base"
+            or (spec.variant == "auto" and n // spec.k > _INTERLEAVE_RATIO))
+        if paddable:
+            bucket = 1 << (n - 1).bit_length()  # next pow2 >= n
+            if spec.resolve_chunk(bucket, self._plan[0]) is not None:
+                # at streaming scale the flat chunked path beats a padded
+                # dense stack; serve solo (the solo lane streams)
+                return ("seq", n, d), n
+            return ("pad", bucket, d), bucket
+        return ("exact", n, d), n
+
+    def submit(self, x, deadline: float | None = None) -> Ticket:
+        """Admit one ``(n, d)`` request; returns its :class:`Ticket`.
+
+        ``deadline`` is a seconds-from-now latency budget: a request still
+        queued when it expires is shed (its ticket resolves
+        :class:`Rejected`("deadline")).  Raises
+        :class:`Rejected`("queue_full") synchronously when the bounded
+        queue is full -- backpressure, by construction never OOM.
+        """
+        xa = self._coerce(x)
+        with self._cv:
+            return self._submit_locked(xa, deadline)
+
+    def _submit_locked(self, xa, deadline: float | None) -> Ticket:
+        if self._closed:
+            raise Rejected("shutdown")
+        if len(self._queue) >= self.max_queue:
+            self._rejected_full += 1
+            raise Rejected("queue_full")
+        now = self._clock()
+        n, d = map(int, xa.shape)
+        key, bucket = self._admission(n, d)
+        ticket = Ticket(self, now)
+        self._queue.append(_Request(
+            x=xa, n=n, d=d, ticket=ticket,
+            deadline_at=None if deadline is None else now + deadline,
+            key=key, bucket=bucket))
+        self._submitted += 1
+        if self._background and self._worker is None:
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="anticluster-router",
+                daemon=True)
+            self._worker.start()
+        self._cv.notify()
+        return ticket
+
+    # -- sync wrappers (the PR-4 service surface, now thin) -----------------
+
+    def partition(self, x) -> AnticlusterResult:
+        """Serve one request synchronously: ``submit(x).result()``."""
+        return self.submit(x).result()
+
+    def partition_many(self, requests) -> list[AnticlusterResult]:
+        """Serve a burst synchronously; results align with request order.
+
+        Admission is atomic -- every request enters the queue before any
+        batch is formed -- so batching is deterministic: same-bucket
+        requests stack together exactly as the old synchronous service
+        stacked same-shape bursts (continuous batching then extends the
+        same behaviour to requests that arrive *while* a call is in
+        flight).
+        """
+        xs = [self._coerce(x) for x in requests]
+        with self._cv:
+            if len(xs) + len(self._queue) > self.max_queue:
+                self._rejected_full += 1
+                raise Rejected("queue_full")
+            tickets = [self._submit_locked(xa, None) for xa in xs]
+        return [t.result() for t in tickets]
+
+    # -- serving ------------------------------------------------------------
+
+    def step(self) -> bool:
+        """Form and serve one admission group; False when the queue is idle.
+
+        The worker thread's unit of work, public so callers without a
+        background worker (tests, the sync wrappers) can drive the queue
+        deterministically.
+        """
+        with self._serve_mutex:
+            with self._cv:
+                group = self._take_group_locked()
+            if group is None:
+                return False
+            self._serve(group)
+            return True
+
+    def drain(self) -> None:
+        """Serve until the queue is empty (inline; safe alongside a worker)."""
+        while self.step():
+            pass
+
+    def _fulfil(self, ticket: Ticket, timeout: float | None) -> None:
+        if ticket.done():
+            return
+        worker = self._worker
+        if worker is not None and worker.is_alive() \
+                and worker is not threading.current_thread():
+            if not ticket._event.wait(timeout):
+                raise TimeoutError(
+                    f"request not served within {timeout} s")
+            return
+        stop_at = None if timeout is None else time.monotonic() + timeout
+        while not ticket.done():
+            if not self.step():
+                if ticket.done():
+                    return
+                raise RuntimeError(
+                    "ticket is unresolved but the queue is idle (router "
+                    "closed?)")
+            if stop_at is not None and time.monotonic() > stop_at:
+                raise TimeoutError(f"request not served within {timeout} s")
+
+    def _take_group_locked(self) -> list[_Request] | None:
+        """Shed expired requests, then pop the head's admission group."""
+        now = self._clock()
+        kept: collections.deque[_Request] = collections.deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if r.deadline_at is not None and now > r.deadline_at:
+                self._shed_deadline += 1
+                r.ticket._resolve(rejection=Rejected("deadline"), at=now)
+            else:
+                kept.append(r)
+        self._queue = kept
+        if not self._queue:
+            return None
+        head = self._queue.popleft()
+        group = [head]
+        rest: collections.deque[_Request] = collections.deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if r.key == head.key and len(group) < self.max_group:
+                group.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        if len(group) > 1 and head.key[0] == "seq" and self._is_hier:
+            self._degraded_sequential += len(group)
+            if not self._warned_degraded:
+                self._warned_degraded = True
+                warnings.warn(
+                    f"hierarchical plan {self._plan} cannot stack requests "
+                    "on the group axis: a burst of "
+                    f"{len(group)} same-shape requests degrades to "
+                    "sequential warm solves (counted in "
+                    "ServiceMetrics.degraded_sequential; use a flat plan "
+                    "-- plan=None or max_k >= k -- for stacked serving)",
+                    RuntimeWarning, stacklevel=3)
+        return group
+
+    def _serve(self, group: list[_Request]) -> None:
+        head = group[0]
+        if head.key[0] == "seq":
+            for r in group:
+                self._serve_solo(r)
+            return
+        if len(group) == 1 and head.n == head.bucket:
+            # an exact-fit singleton takes the plain flat lane (identical
+            # labels either way; keeps single-stream traffic off the
+            # stacked executables)
+            self._serve_solo(head)
+            return
+        self._serve_stacked(group)
+
+    def _serve_solo(self, r: _Request) -> None:
+        res, _warm = self._call_lane(("solo", (r.n, r.d)), r.x, None)
+        with self._cv:
+            self._solo_calls += 1
+            self._completed += 1
+        r.ticket._resolve(result=res, at=self._clock())
+
+    def _serve_stacked(self, group: list[_Request]) -> None:
+        head = group[0]
+        G, rows, d = len(group), head.bucket, head.d
+        gbucket = 1 << (G - 1).bit_length()  # pad bursts to pow2 widths
+        dtype = self.spec.dtype
+        xs = [r.x if r.n == rows
+              else jnp.concatenate(
+                  [r.x, jnp.zeros((rows - r.n, d), dtype)], axis=0)
+              for r in group]
+        xs += [xs[-1]] * (gbucket - G)
+        stack = jnp.stack(xs)
+        vm = None
+        if any(r.n < rows for r in group):
+            m = np.zeros((gbucket, rows), np.bool_)
+            for g, r in enumerate(group):
+                m[g, :r.n] = True
+            m[G:] = m[G - 1]  # group-padding repeats the last request
+            vm = jnp.asarray(m)
+        res, _warm = self._call_lane(("stack", (rows, d), gbucket), stack, vm)
+        with self._cv:
+            self._stacked_calls += 1
+            self._completed += len(group)
+            self._group_slots += gbucket
+            self._group_filled += G
+            self._row_slots += G * rows
+            self._row_filled += sum(r.n for r in group)
+        now = self._clock()
+        for g, r in enumerate(group):
+            r.ticket._resolve(result=AnticlusterResult(
+                labels=res.labels[g][:r.n],
+                cluster_sizes=res.cluster_sizes[g],
+                diversity_sd=res.diversity_sd[g],
+                diversity_range=res.diversity_range[g],
+                k=res.k, plan=res.plan, solver=res.solver,
+                variant=res.variant), at=now)
+
+    def _call_lane(self, key: tuple, x, vm):
+        lane = self._pool.lane(key)
+        if lane.device is not None:
+            x = jax.device_put(x, lane.device)
+            if vm is not None:
+                vm = jax.device_put(vm, lane.device)
+        warm = lane.state is not None
+        state = lane.state
+        if state is None:
+            state = lane.engine.init_state(tuple(x.shape))
+            if lane.device is not None:
+                state = jax.device_put(state, lane.device)
+        res, lane.state = lane.engine.repartition(x, state, valid_mask=vm)
+        lane.calls += 1
+        with self._cv:
+            if warm:
+                self._warm_calls += 1
+            else:
+                self._cold_calls += 1
+        return res, warm
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._queue:
+                    return
+            while self.step():
+                pass
+
+    def close(self) -> None:
+        """Stop serving: reject pending requests with Rejected("shutdown")."""
+        with self._cv:
+            self._closed = True
+            now = self._clock()
+            while self._queue:
+                r = self._queue.popleft()
+                r.ticket._resolve(rejection=Rejected("shutdown"), at=now)
+            self._cv.notify_all()
+        worker, self._worker = self._worker, None
+        if worker is not None and worker.is_alive() \
+                and worker is not threading.current_thread():
+            worker.join(timeout=60.0)
+
+    def __enter__(self) -> "AnticlusterRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- observability ------------------------------------------------------
+
+    def metrics(self) -> ServiceMetrics:
+        """A :class:`ServiceMetrics` snapshot (thread-safe)."""
+        with self._cv:
+            return ServiceMetrics(
+                queue_depth=len(self._queue),
+                submitted=self._submitted,
+                completed=self._completed,
+                shed_deadline=self._shed_deadline,
+                rejected_full=self._rejected_full,
+                stacked_calls=self._stacked_calls,
+                solo_calls=self._solo_calls,
+                warm_calls=self._warm_calls,
+                cold_calls=self._cold_calls,
+                degraded_sequential=self._degraded_sequential,
+                group_slots=self._group_slots,
+                group_filled=self._group_filled,
+                row_slots=self._row_slots,
+                row_filled=self._row_filled,
+                lane_compile_counts={
+                    str(k): lane.engine.compile_count
+                    for k, lane in self._pool.lanes.items()},
+                devices=self._pool.device_count)
