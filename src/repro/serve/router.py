@@ -33,8 +33,11 @@ Admission groups requests three ways:
 Robustness: the queue is bounded (``submit`` raises
 :class:`Rejected`("queue_full") -- backpressure, never OOM), requests
 carry optional deadlines and are shed at admission when expired
-(:class:`Rejected`("deadline")), and closing the router rejects pending
-work (:class:`Rejected`("shutdown")).  Throughput: per-spec
+(:class:`Rejected`("deadline")), closing the router rejects pending
+work (:class:`Rejected`("shutdown")), and an engine error while serving
+resolves the affected tickets with that exception (re-raised by
+``Ticket.result``; counted in ``ServiceMetrics.errored``) instead of
+killing the worker -- the loop keeps serving.  Throughput: per-spec
 :class:`EnginePool` lanes are placed round-robin across ``jax.devices()``
 (meshless specs), so concurrent lanes solve on different chips.
 Observability: :meth:`AnticlusterRouter.metrics` returns a
@@ -62,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.anticluster import (AnticlusterEngine, AnticlusterResult,
-                               AnticlusterSpec, _resolve_spec)
+                               AnticlusterSpec, _mesh_shards, _resolve_spec)
 
 __all__ = ["AnticlusterRouter", "EnginePool", "Rejected", "ServiceMetrics",
            "Ticket"]
@@ -81,7 +84,10 @@ class Rejected(RuntimeError):
 
     * ``"queue_full"`` -- backpressure: the bounded admission queue was at
       ``max_queue`` (raised synchronously by ``submit``; the request was
-      never admitted).
+      never admitted).  Burst admission via ``partition_many`` is
+      all-or-nothing: a burst that does not fit whole is rejected whole,
+      and every request in it counts toward
+      ``ServiceMetrics.rejected_full``.
     * ``"deadline"`` -- the request's deadline expired before a lane picked
       it up; it was shed at admission and its ticket resolves rejected.
     * ``"shutdown"`` -- the router was closed while the request was pending.
@@ -96,15 +102,16 @@ class Ticket:
     """Handle for one submitted request.
 
     ``done()`` is non-blocking; ``result()`` blocks until the request is
-    served (re-raising the :class:`Rejected` outcome if it was shed) --
-    under a background worker it waits, without one it *drives* the
-    router's queue inline, so the sync wrappers never need a thread.
-    ``submitted_at`` / ``completed_at`` are router-clock stamps and
-    ``latency`` their difference: the load benchmark's SLO numbers come
-    straight from tickets.
+    served (re-raising the :class:`Rejected` outcome if it was shed, or
+    the engine's exception if serving it errored) -- under a background
+    worker it waits, without one it *drives* the router's queue inline,
+    so the sync wrappers never need a thread.  ``submitted_at`` /
+    ``completed_at`` are router-clock stamps and ``latency`` their
+    difference: the load benchmark's SLO numbers come straight from
+    tickets.
     """
 
-    __slots__ = ("_router", "_event", "_result", "_rejection",
+    __slots__ = ("_router", "_event", "_result", "_rejection", "_error",
                  "submitted_at", "completed_at")
 
     def __init__(self, router: "AnticlusterRouter", submitted_at: float):
@@ -112,6 +119,7 @@ class Ticket:
         self._event = threading.Event()
         self._result: AnticlusterResult | None = None
         self._rejection: Rejected | None = None
+        self._error: BaseException | None = None
         self.submitted_at = submitted_at
         self.completed_at: float | None = None
 
@@ -125,6 +133,11 @@ class Ticket:
         return self._rejection
 
     @property
+    def error(self) -> BaseException | None:
+        """The exception serving this request raised, or None."""
+        return self._error
+
+    @property
     def latency(self) -> float | None:
         """Seconds from submission to completion (None while pending)."""
         if self.completed_at is None:
@@ -134,17 +147,25 @@ class Ticket:
     def result(self, timeout: float | None = None) -> AnticlusterResult:
         """The request's :class:`AnticlusterResult` (blocks until served).
 
-        Raises the ticket's :class:`Rejected` if the request was shed, and
-        ``TimeoutError`` if ``timeout`` seconds pass first.
+        Raises the ticket's :class:`Rejected` if the request was shed, the
+        engine's exception if serving it errored, and ``TimeoutError`` if
+        ``timeout`` seconds pass first.  Without a background worker the
+        timeout is best-effort: the calling thread drives the queue and
+        only checks the clock between ``step()`` calls, so one step (a
+        first-call compile, or a large stacked solve of other requests'
+        groups) can overrun the budget before ``TimeoutError`` is raised.
         """
         self._router._fulfil(self, timeout)
         if self._rejection is not None:
             raise self._rejection
+        if self._error is not None:
+            raise self._error
         return self._result
 
-    def _resolve(self, result=None, rejection=None, at=None):
+    def _resolve(self, result=None, rejection=None, error=None, at=None):
         self._result = result
         self._rejection = rejection
+        self._error = error
         self.completed_at = at
         self._event.set()
 
@@ -160,6 +181,9 @@ class ServiceMetrics:
     requests per stacked group slot -- how much of the batching headroom
     traffic actually uses), ``row_occupancy`` (real rows per padded row
     slot -- the cost of row-bucket admission), and ``shed_rate``.
+    ``errored`` counts requests whose serve raised (their tickets carry
+    the exception); a rejected ``partition_many`` burst adds every one of
+    its requests to ``rejected_full``.
     """
 
     queue_depth: int
@@ -167,6 +191,7 @@ class ServiceMetrics:
     completed: int
     shed_deadline: int
     rejected_full: int
+    errored: int
     stacked_calls: int
     solo_calls: int
     warm_calls: int
@@ -219,6 +244,10 @@ class EnginePool:
     different chips without any cross-device chatter.  Mesh specs keep the
     PR-5 semantics (the engine's ``shard_map`` placement owns the devices;
     no per-lane pinning).
+
+    ``lane()`` does not lock: the router calls it under its metrics lock,
+    which is what lets ``AnticlusterRouter.metrics`` iterate ``lanes``
+    concurrently with serving.
     """
 
     def __init__(self, spec: AnticlusterSpec):
@@ -307,6 +336,7 @@ class AnticlusterRouter:
         self._stackable = (len(self._plan) == 1 and spec.mesh is None
                            and not isinstance(spec.chunk_size, int))
         self._is_hier = len(self._plan) > 1 and spec.mesh is None
+        self._shards = _mesh_shards(spec)  # 1 when meshless
         self._pool = EnginePool(spec)
         self._queue: collections.deque[_Request] = collections.deque()
         self._cv = threading.Condition()
@@ -319,6 +349,7 @@ class AnticlusterRouter:
         self._completed = 0
         self._shed_deadline = 0
         self._rejected_full = 0
+        self._errored = 0
         self._stacked_calls = 0
         self._solo_calls = 0
         self._warm_calls = 0
@@ -349,6 +380,15 @@ class AnticlusterRouter:
         if xa.shape[0] < self.spec.k:
             raise ValueError(
                 f"request has n={xa.shape[0]} rows < spec.k={self.spec.k}")
+        if self._shards > 1 and xa.shape[0] % self._shards:
+            # reject at admission what the mesh engine would reject inside
+            # a lane call: by the time a lane solves, the ticket is the
+            # only way out, and an async failure is a worse surface than a
+            # synchronous one
+            raise ValueError(
+                f"request has n={xa.shape[0]} rows, not divisible by the "
+                f"mesh shard count {self._shards} (mesh lanes shard each "
+                "request's rows evenly across devices)")
         return xa.astype(self.spec.dtype)
 
     def _admission(self, n: int, d: int) -> tuple[tuple, int]:
@@ -399,7 +439,8 @@ class AnticlusterRouter:
             deadline_at=None if deadline is None else now + deadline,
             key=key, bucket=bucket))
         self._submitted += 1
-        if self._background and self._worker is None:
+        if self._background and (self._worker is None
+                                 or not self._worker.is_alive()):
             self._worker = threading.Thread(
                 target=self._worker_loop, name="anticluster-router",
                 daemon=True)
@@ -426,7 +467,7 @@ class AnticlusterRouter:
         xs = [self._coerce(x) for x in requests]
         with self._cv:
             if len(xs) + len(self._queue) > self.max_queue:
-                self._rejected_full += 1
+                self._rejected_full += len(xs)  # every request of the burst
                 raise Rejected("queue_full")
             tickets = [self._submit_locked(xa, None) for xa in xs]
         return [t.result() for t in tickets]
@@ -438,14 +479,27 @@ class AnticlusterRouter:
 
         The worker thread's unit of work, public so callers without a
         background worker (tests, the sync wrappers) can drive the queue
-        deterministically.
+        deterministically.  A group's requests are popped from the queue
+        before serving, so an engine error must not escape with their
+        tickets unresolved: it is caught here, the group's pending tickets
+        resolve with the exception (``Ticket.result`` re-raises it,
+        ``ServiceMetrics.errored`` counts it), and the worker loop keeps
+        serving.
         """
         with self._serve_mutex:
             with self._cv:
                 group = self._take_group_locked()
             if group is None:
                 return False
-            self._serve(group)
+            try:
+                self._serve(group)
+            except Exception as exc:
+                now = self._clock()
+                pending = [r for r in group if not r.ticket.done()]
+                with self._cv:
+                    self._errored += len(pending)
+                for r in pending:
+                    r.ticket._resolve(error=exc, at=now)
             return True
 
     def drain(self) -> None:
@@ -465,14 +519,17 @@ class AnticlusterRouter:
             return
         stop_at = None if timeout is None else time.monotonic() + timeout
         while not ticket.done():
+            # best-effort: checked before every step, but a single step
+            # (first-call compile, someone else's large stacked group) can
+            # overrun the budget -- see Ticket.result
+            if stop_at is not None and time.monotonic() > stop_at:
+                raise TimeoutError(f"request not served within {timeout} s")
             if not self.step():
                 if ticket.done():
                     return
                 raise RuntimeError(
                     "ticket is unresolved but the queue is idle (router "
                     "closed?)")
-            if stop_at is not None and time.monotonic() > stop_at:
-                raise TimeoutError(f"request not served within {timeout} s")
 
     def _take_group_locked(self) -> list[_Request] | None:
         """Shed expired requests, then pop the head's admission group."""
@@ -570,7 +627,11 @@ class AnticlusterRouter:
                 variant=res.variant), at=now)
 
     def _call_lane(self, key: tuple, x, vm):
-        lane = self._pool.lane(key)
+        with self._cv:
+            # lane insertion mutates the pool's dict under the same lock
+            # metrics() iterates it with (engine construction is cheap --
+            # compilation happens in repartition, outside the lock)
+            lane = self._pool.lane(key)
         if lane.device is not None:
             x = jax.device_put(x, lane.device)
             if vm is not None:
@@ -633,6 +694,7 @@ class AnticlusterRouter:
                 completed=self._completed,
                 shed_deadline=self._shed_deadline,
                 rejected_full=self._rejected_full,
+                errored=self._errored,
                 stacked_calls=self._stacked_calls,
                 solo_calls=self._solo_calls,
                 warm_calls=self._warm_calls,

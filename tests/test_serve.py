@@ -1,8 +1,10 @@
 """Async serving tier: continuous batching, row-bucket padding parity,
 deadline shedding and backpressure (deterministic fake clock -- no sleeps),
-the degraded hierarchical path, engine pools across devices, the metrics
-snapshot, Spec.evolve, and per-call engine masks."""
+engine-error containment, the degraded hierarchical path, engine pools
+across devices, the metrics snapshot, Spec.evolve, and per-call engine
+masks."""
 
+import threading
 import warnings
 
 import numpy as np
@@ -199,10 +201,13 @@ def test_queue_full_backpressure():
     with pytest.raises(Rejected, match="queue_full") as ei:
         r.submit(x)
     assert ei.value.reason == "queue_full"
-    # an atomic burst larger than the remaining room is rejected whole
+    # an atomic burst larger than the remaining room is rejected whole,
+    # and EVERY request it carried counts toward rejected_full
     with pytest.raises(Rejected, match="queue_full"):
         r.partition_many([x])
-    assert r.metrics().rejected_full == 2
+    with pytest.raises(Rejected, match="queue_full"):
+        r.partition_many([x, x])
+    assert r.metrics().rejected_full == 4
     r.drain()                                 # queue drains -> room again
     assert t1.done() and t2.done()
     assert r.submit(x).result().labels.shape == (64,)
@@ -223,6 +228,87 @@ def test_router_is_a_context_manager():
         t.result()
     with pytest.raises(Rejected, match="shutdown"):
         r.submit(_data(64, 3, seed=1))
+
+
+# ---------------------------------------------------------------------------
+# Engine errors resolve tickets and never kill the serving loop
+# ---------------------------------------------------------------------------
+
+def test_engine_error_resolves_every_ticket_in_the_group(monkeypatch):
+    r = _router(k=4, plan=None)
+    t1 = r.submit(_data(64, 3, seed=1))
+    t2 = r.submit(_data(64, 3, seed=2))   # same bucket: one popped group
+    real = AnticlusterEngine.repartition
+
+    def boom(self, *a, **kw):
+        raise RuntimeError("lane exploded")
+
+    monkeypatch.setattr(AnticlusterEngine, "repartition", boom)
+    with pytest.raises(RuntimeError, match="lane exploded"):
+        t1.result()
+    # the whole popped group resolved -- nobody hangs on a lost request
+    assert t1.done() and t2.done()
+    assert t1.rejection is None and isinstance(t1.error, RuntimeError)
+    with pytest.raises(RuntimeError, match="lane exploded"):
+        t2.result()
+    m = r.metrics()
+    assert m.errored == 2 and m.completed == 0
+    # the router keeps serving once the engine behaves again
+    monkeypatch.setattr(AnticlusterEngine, "repartition", real)
+    res = r.submit(_data(64, 3, seed=3)).result()
+    assert res.labels.shape == (64,)
+    assert r.metrics().completed == 1
+
+
+def test_background_worker_survives_engine_error(monkeypatch):
+    real = AnticlusterEngine.repartition
+
+    def boom(self, *a, **kw):
+        raise RuntimeError("lane exploded")
+
+    monkeypatch.setattr(AnticlusterEngine, "repartition", boom)
+    with AnticlusterRouter(k=4, plan=None) as r:
+        t = r.submit(_data(64, 3, seed=1))
+        with pytest.raises(RuntimeError, match="lane exploded"):
+            t.result(timeout=300)          # worker resolves, not hangs
+        monkeypatch.setattr(AnticlusterEngine, "repartition", real)
+        t2 = r.submit(_data(64, 3, seed=2))
+        assert t2.result(timeout=300).labels.shape == (64,)
+        m = r.metrics()
+        assert m.errored == 1 and m.completed == 1
+
+
+def test_submit_restarts_a_dead_worker():
+    with AnticlusterRouter(k=4, plan=None) as r:
+        r.submit(_data(64, 3, seed=1)).result(timeout=300)
+        dead = threading.Thread(target=lambda: None)
+        dead.start()
+        dead.join()
+        r._worker = dead                   # simulate a crashed worker
+        t = r.submit(_data(64, 3, seed=2))
+        assert r._worker is not dead       # submit spawned a fresh one
+        assert t.result(timeout=300).labels.shape == (64,)
+
+
+def test_inline_timeout_checked_before_stepping():
+    r = _router(k=4, plan=None)
+    t = r.submit(_data(64, 3, seed=1))
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0)                # zero budget: no step started
+    assert not t.done()
+    assert t.result().labels.shape == (64,)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices for a sharded mesh")
+def test_mesh_indivisible_rows_rejected_at_admission():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("data",))
+    r = _router(k=4, mesh=mesh, data_axes=("data",))
+    # rejected synchronously at submit, not asynchronously inside a lane
+    with pytest.raises(ValueError, match="shard count"):
+        r.submit(_data(65, 3, seed=1))
+    assert r.metrics().queue_depth == 0
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +396,7 @@ def test_metrics_snapshot_schema():
     assert isinstance(m, ServiceMetrics)
     assert m.queue_depth == 0 and m.submitted == 2 and m.completed == 2
     assert m.stack_occupancy == 1.0           # 2 requests filled a 2-bucket
-    assert m.shed_rate == 0.0
+    assert m.shed_rate == 0.0 and m.errored == 0
     assert list(m.lane_compile_counts.values()) == [1]
     assert m.devices == len(jax.devices())
 
