@@ -1,0 +1,107 @@
+"""Demonstrates the CPU-jax hang that anticluster()'s blocks-on-labels
+guard prevents (NOT part of CI -- this script hangs by design without
+the guard).
+
+    PYTHONPATH=src python examples/scipy_deadlock_repro.py          # safe
+    PYTHONPATH=src python examples/scipy_deadlock_repro.py --hang   # hangs
+
+Background.  The "scipy" registry solver runs the Hungarian oracle on the
+host through ``jax.pure_callback``.  On the CPU backend, dispatching NEW
+work while a callback computation is still in flight can deadlock the
+runtime: the in-flight computation holds the execution stream waiting for
+the host callback to finish, and the fresh dispatch queues behind it on a
+thread pool the callback itself needs.  ``anticluster()`` therefore calls
+``jax.block_until_ready(labels)`` BEFORE dispatching the result-statistics
+ops (see the guard in src/repro/anticluster.py; pinned by
+tests/test_anticluster.py::test_scipy_solver_stats_no_deadlock).
+
+This script reproduces both sides:
+
+* default: the shipped (guarded) path -- solve + stats complete;
+* ``--hang``: re-enacts the unguarded ordering -- it launches the callback
+  solve and immediately dispatches dependent statistics work without
+  syncing, inside a watchdog.  If the process would hang, the watchdog
+  reports the deadlock and force-exits instead of wedging your terminal.
+
+The hang is timing/backend dependent (it is a scheduling race): on some
+machines the unguarded ordering happens to survive.  A clean run of
+``--hang`` is NOT proof the guard is unnecessary -- the guarded ordering
+is the only one with a completion guarantee.
+"""
+
+import argparse
+import faulthandler
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.anticluster import anticluster
+
+N, D, K = 150, 4, 6
+WATCHDOG_S = 30.0
+
+
+def _data():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+
+
+def run_guarded():
+    """The shipped path: anticluster() syncs labels before the stats ops."""
+    t0 = time.time()
+    res = anticluster(_data(), k=K, plan=None, solver="scipy", stats=True)
+    print(f"guarded path OK in {time.time() - t0:.2f}s: "
+          f"balanced={res.balanced} diversity_sd={float(res.diversity_sd):.4f}")
+
+
+def run_unguarded():
+    """Re-enact the pre-guard ordering under a watchdog.
+
+    Mirrors what anticluster() used to do: kick off the callback-backed
+    label solve, then dispatch the dependent statistics computation while
+    the callback may still be in flight (no block_until_ready between).
+    """
+    done = threading.Event()
+
+    def watchdog():
+        if not done.wait(WATCHDOG_S):
+            print(f"\nDEADLOCK: no progress after {WATCHDOG_S:.0f}s -- this "
+                  "is the hang the blocks-on-labels guard prevents.",
+                  flush=True)
+            faulthandler.dump_traceback()  # where every thread is stuck
+            os._exit(2)  # the runtime is wedged; a clean exit won't happen
+
+    threading.Thread(target=watchdog, daemon=True).start()
+
+    from repro.core.aba import aba_core
+    from repro.core.objective import diversity_per_cluster
+
+    x = _data()
+    labels = aba_core(x[None], K, solver="scipy")[0]  # callback in flight
+    div = diversity_per_cluster(x, labels, K)   # dispatched WITHOUT syncing
+    sd = float(jnp.std(div))                    # forces both computations
+    done.set()
+    print(f"unguarded ordering survived on this machine (scheduling race; "
+          f"diversity_sd={sd:.4f}) -- the guard is still required, see "
+          "the module docstring")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--hang", action="store_true",
+                    help="re-enact the unguarded ordering (may deadlock; "
+                         "a watchdog force-exits after "
+                         f"{WATCHDOG_S:.0f}s)")
+    args = ap.parse_args()
+    print(f"backend={jax.default_backend()} devices={jax.device_count()}")
+    if args.hang:
+        run_unguarded()
+    else:
+        run_guarded()

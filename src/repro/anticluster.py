@@ -137,6 +137,15 @@ class AnticlusterSpec:
         per-group solves (identical labels; exists for benchmarking).
       stats: False skips the diversity statistics (sd/range report 0) so
         timed benchmark windows measure only the solve + cluster sizes.
+        ``stats=True`` additionally surfaces the auction duals as an
+        optimality-gap certificate (``AnticlusterResult.dual_bound`` /
+        ``gap``; meshless modes only, computed outside any timed path).
+      update_threshold: largest delta fraction ``(added + removed) / n_new``
+        that :meth:`AnticlusterEngine.update` absorbs incrementally via the
+        restricted frozen-price auction; a larger delta falls back -- loudly,
+        with a ``RuntimeWarning`` -- to a full warm ``repartition``
+        (bit-for-bit identical to calling ``repartition`` on the post-delta
+        data with the carried prices).
     """
 
     k: int
@@ -155,10 +164,16 @@ class AnticlusterSpec:
     dtype: Any = jnp.float32
     batched: bool = True
     stats: bool = True
+    update_threshold: float = 0.25
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"k={self.k} must be >= 1")
+        if not 0.0 <= self.update_threshold <= 1.0:
+            raise ValueError(
+                f"update_threshold={self.update_threshold} must be in "
+                "[0, 1] (the delta fraction above which update() falls "
+                "back to a full repartition)")
         if isinstance(self.plan, tuple) and math.prod(self.plan) != self.k:
             raise ValueError(
                 f"prod(plan)={math.prod(self.plan)} != k={self.k}")
@@ -236,9 +251,25 @@ class AnticlusterResult:
     """Labels plus the resolved execution plan and quality statistics.
 
     A pytree: ``labels`` / ``cluster_sizes`` / ``diversity_sd`` /
-    ``diversity_range`` are leaves, the resolved ``plan`` and the spec echoes
-    (``k``, ``solver``, ``variant``) are static metadata.  For stacked
-    (G, M, D) inputs every field carries the leading group axis.
+    ``diversity_range`` / ``dual_bound`` / ``gap`` are leaves, the resolved
+    ``plan`` and the spec echoes (``k``, ``solver``, ``variant``) plus the
+    ``updated`` provenance flag are static metadata.  For stacked (G, M, D)
+    inputs every field carries the leading group axis.
+
+    ``dual_bound`` / ``gap`` (``spec.stats=True``, meshless modes) are the
+    LP-dual optimality certificate built from the auction's carried duals
+    (see :func:`repro.core.objective.dual_certificate`): ``dual_bound``
+    upper-bounds the best assignment objective at the realized centroids and
+    ``gap >= 0`` is its relative distance from the achieved objective --
+    near-zero certifies the assignment step converged.  ``None`` when stats
+    are off, under a mesh, or for zero-price (non-auction) solves where only
+    the trivial bound is available (still reported -- it is valid for any
+    prices, just loose).
+
+    ``updated`` is True only for results produced by the incremental path of
+    :meth:`AnticlusterEngine.update` (the restricted frozen-price auction);
+    full solves -- including update()'s loud over-threshold fallback --
+    report False.
     """
 
     labels: jnp.ndarray          # (n,) or (G, M) int32 in [0, k)
@@ -249,6 +280,9 @@ class AnticlusterResult:
     plan: tuple[int, ...] = ()
     solver: str = "auction"
     variant: str = "auto"
+    dual_bound: Any = None       # () or (G,) LP-dual bound (stats=True)
+    gap: Any = None              # () or (G,) relative optimality gap
+    updated: bool = False        # True only for incremental update() results
 
     @property
     def n_valid(self):
@@ -267,8 +301,8 @@ class AnticlusterResult:
 jax.tree_util.register_dataclass(
     AnticlusterResult,
     data_fields=["labels", "cluster_sizes", "diversity_sd",
-                 "diversity_range"],
-    meta_fields=["k", "plan", "solver", "variant"])
+                 "diversity_range", "dual_bound", "gap"],
+    meta_fields=["k", "plan", "solver", "variant", "updated"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -530,6 +564,51 @@ def _result_stats(x, labels, k, valid_mask, diversity=True):
     return sizes, sd, rng
 
 
+def _cluster_prices(prices: tuple, mode: str):
+    """Per-global-cluster duals from a carried per-level price tuple.
+
+    Flat/streamed runs carry a ``(1, k)`` 1-tuple; hierarchical runs a
+    per-level tuple whose *last* level is ``(prod(plan[:-1]), k_last)`` --
+    global labels compose as ``g * k_last + sub`` (see
+    ``repro.core.hierarchical``), so a row-major reshape is exactly
+    global-cluster order.  Stacked runs keep their ``(G, k)`` group axis.
+    Prices are re-centered per group first (idempotent for engine states,
+    which are already re-centered; the duals are shift-invariant).
+    """
+    last = prices[-1]
+    last = last - jnp.max(last, axis=-1, keepdims=True)
+    return last if mode == "stacked" else last.reshape(-1)
+
+
+def _certificate(x, labels, prices: tuple, mode: str, k: int, vm):
+    """(dual_bound, gap) from the carried duals, or (None, None) under mesh.
+
+    The mesh path's per-shard price stacks index shard-local clusters; the
+    global gather is a follow-up -- every other mode reports the
+    certificate (see ``repro.core.objective.dual_certificate``).
+    """
+    if mode == "mesh" or prices is None:
+        return None, None
+    from repro.core.objective import dual_certificate
+    return dual_certificate(x, labels, _cluster_prices(prices, mode), k,
+                            valid_mask=vm)
+
+
+def _mesh_pad_rows(spec: AnticlusterSpec, shape: tuple[int, ...],
+                   has_mask: bool) -> int:
+    """Zero rows the mesh path auto-pads for ``n % n_shards != 0``.
+
+    The padding rides the per-call ``valid_mask`` path (padding rows are
+    masked out and the result is sliced back to ``n``), so it is only
+    available when the caller brings no mask of their own -- with a user
+    mask present the explicit divisibility error in ``_route`` stands (the
+    two mask sources cannot compose).
+    """
+    if spec.mesh is None or len(shape) != 2 or has_mask:
+        return 0
+    return (-shape[0]) % max(_mesh_shards(spec), 1)
+
+
 def anticluster(x, spec: AnticlusterSpec | None = None,
                 **overrides) -> AnticlusterResult:
     """Partition ``x`` into ``spec.k`` anticlusters per the spec.
@@ -575,11 +654,27 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
     vm = None if spec.valid_mask is None else jnp.asarray(
         spec.valid_mask, jnp.bool_)
     get_solver(spec.solver)  # fail fast with the registered-name list
-    mode, plan, solver, chunk = _route(spec, tuple(x.shape),
-                                       cats is not None, vm is not None)
 
-    labels = _call_core(x, spec, mode, plan, solver, chunk,
-                        cats, n_categories, vm)
+    n_rows = x.shape[0]
+    pad = _mesh_pad_rows(spec, tuple(x.shape), vm is not None)
+    x_solve, vm_solve, cats_solve = x, vm, cats
+    if pad:
+        x_solve = jnp.concatenate(
+            [x, jnp.zeros((pad, x.shape[1]), x.dtype)])
+        vm_solve = jnp.concatenate([jnp.ones((n_rows,), jnp.bool_),
+                                    jnp.zeros((pad,), jnp.bool_)])
+        if cats is not None:  # padding rows draw an arbitrary stratum
+            cats_solve = jnp.concatenate(
+                [cats, jnp.zeros((pad,), jnp.int32)])
+    mode, plan, solver, chunk = _route(spec, tuple(x_solve.shape),
+                                       cats is not None,
+                                       vm_solve is not None)
+
+    want_state = spec.stats and mode != "mesh"
+    out = _call_core(x_solve, spec, mode, plan, solver, chunk,
+                     cats_solve, n_categories, vm_solve,
+                     return_state=want_state)
+    labels, st = out if want_state else (out, None)
     if mode == "mesh":
         n_shards = _mesh_shards(spec)
         plan = ((n_shards,) + plan) if n_shards > 1 else plan
@@ -587,13 +682,20 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
     # Finish the label computation before dispatching the statistics ops:
     # host-callback solvers (e.g. "scipy") deadlock on CPU if new work is
     # enqueued while their callback computation is still in flight.
+    # (examples/scipy_deadlock_repro.py demonstrates the hang this guard
+    # prevents; tests/test_anticluster.py::test_scipy_solver_stats_no_deadlock
+    # pins it.)
     labels = jax.block_until_ready(labels)
+    if pad:
+        labels = labels[:n_rows]
     sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
                                    diversity=spec.stats)
+    bound, gap = (None, None) if st is None else _certificate(
+        x, labels, st["prices"], mode, spec.k, vm)
     return AnticlusterResult(
         labels=labels, cluster_sizes=sizes, diversity_sd=sd,
         diversity_range=rng, k=spec.k, plan=plan, solver=solver,
-        variant=spec.variant)
+        variant=spec.variant, dual_bound=bound, gap=gap)
 
 
 class AnticlusterEngine:
@@ -694,13 +796,30 @@ class AnticlusterEngine:
             self._routes[key] = routed
         return routed
 
+    def _solve_shape(self, shape: tuple[int, ...]):
+        """``(padded_shape, pad)`` the executables actually run on.
+
+        Mesh sessions auto-pad ``n % n_shards != 0`` inputs with ``pad``
+        masked zero rows (see ``_mesh_pad_rows``); every state/shape query
+        and ``repartition`` itself agree on this padded geometry, and
+        results are sliced back to the caller's ``n``.  ``pad == 0``
+        everywhere else.
+        """
+        shape = tuple(shape)
+        pad = _mesh_pad_rows(self.spec, shape, self._vm is not None)
+        if pad:
+            return (shape[0] + pad, shape[1]), pad
+        return shape, 0
+
     def price_shapes(self, shape) -> tuple[tuple[int, ...], ...]:
         """Per-level price shapes of the state carried for input ``shape``.
 
         Mesh specs carry per-shard stacks: each level's shape gains a
         leading ``n_shards`` axis (see :class:`ShardedABAState`).
         """
-        mode, plan, _solver, _chunk = self._routed(tuple(shape))
+        shape, pad = self._solve_shape(tuple(shape))
+        mode, plan, _solver, _chunk = self._routed(
+            shape, True if pad else None)
         if mode == "mesh":
             from repro.core.sharded import sharded_price_shapes
             return sharded_price_shapes(plan, _mesh_shards(self.spec))
@@ -723,7 +842,8 @@ class AnticlusterEngine:
         """
         shape = (tuple(x_or_shape) if isinstance(x_or_shape, (tuple, list))
                  else tuple(jnp.shape(x_or_shape)))
-        if self._routed(shape)[0] != "mesh":
+        shape, pad = self._solve_shape(shape)
+        if self._routed(shape, True if pad else None)[0] != "mesh":
             return None
         axes = resolve_data_axes(self.spec.mesh, self.spec.data_axes)
         # eval_shape: leaf ranks without materializing a throwaway state
@@ -732,7 +852,9 @@ class AnticlusterEngine:
 
     def _cold_state(self, shape):
         """Host-side zeroed state pytree for ``shape`` (no placement)."""
-        mode, _plan, _solver, _chunk = self._routed(shape)
+        shape, pad = self._solve_shape(shape)
+        mode, _plan, _solver, _chunk = self._routed(
+            shape, True if pad else None)
         prices = tuple(jnp.zeros(s, jnp.float32)
                        for s in self.price_shapes(shape))
         if mode == "mesh":
@@ -807,6 +929,20 @@ class AnticlusterEngine:
                 raise ValueError(
                     f"valid_mask shape {tuple(vm.shape)} does not match the "
                     f"label shape {shape[:-1]} of input {shape}")
+        n_rows = shape[0]
+        pad = 0
+        if not per_call_mask:
+            solve_shape, pad = self._solve_shape(shape)
+            if pad:
+                # mesh auto-pad: masked zero rows make n divisible by the
+                # shard count; the pad mask rides the per-call-mask
+                # executable, so it composes with warm state like any mask
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad, shape[1]), x.dtype)])
+                vm = jnp.concatenate([jnp.ones((n_rows,), jnp.bool_),
+                                      jnp.zeros((pad,), jnp.bool_)])
+                shape = solve_shape
+                per_call_mask = True
         mode, plan, solver, _chunk = self._routed(shape, vm is not None)
         state_cls = ShardedABAState if mode == "mesh" else ABAState
         if not isinstance(state, state_cls):
@@ -837,14 +973,52 @@ class AnticlusterEngine:
         if mode == "mesh":
             n_shards = _mesh_shards(spec)
             plan = ((n_shards,) + plan) if n_shards > 1 else plan
+        # padding rows are masked in vm, so the stats match the unpadded run
         sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
                                        diversity=spec.stats)
+        bound, gap = (None, None)
+        if spec.stats:
+            bound, gap = _certificate(x, labels, prices, mode, spec.k, vm)
         result = AnticlusterResult(
-            labels=labels, cluster_sizes=sizes, diversity_sd=sd,
-            diversity_range=rng, k=spec.k, plan=plan, solver=solver,
-            variant=spec.variant)
+            labels=labels[:n_rows] if pad else labels, cluster_sizes=sizes,
+            diversity_sd=sd, diversity_range=rng, k=spec.k, plan=plan,
+            solver=solver, variant=spec.variant, dual_bound=bound, gap=gap)
+        # the state keeps the padded geometry (labels' length keys the shape)
         return result, state_cls(prices=prices, moment_sum=msum,
                                  moment_count=mcnt, prev_labels=labels)
+
+    def update(self, x, state, *, added=None,
+               removed=None) -> tuple[AnticlusterResult, Any, ABAState]:
+        """Absorb a delta into a live partition without a full re-solve.
+
+        ``x``/``state`` are the current (n, d) rows and the
+        :class:`ABAState` from the ``partition``/``repartition``/``update``
+        call that produced them.  ``removed`` names departing rows of ``x``
+        (int indices or an (n,) bool mask); ``added`` is an (m, d) block of
+        arriving rows.  Returns ``(result, new_x, new_state)`` where
+        ``new_x = concat(x[kept], added)`` is the post-delta row order the
+        labels/state refer to -- feed the pair straight into the next
+        ``update``/``repartition``.
+
+        Small deltas take the *incremental* path (``result.updated`` is
+        True): kept rows keep their labels, departures free capacity and
+        down-date the carried centrality moments, and arrivals are assigned
+        by a restricted auction over the open cluster slots with every
+        other dual price frozen (see :mod:`repro.incremental`).  The delta
+        path falls back -- loudly, with a ``RuntimeWarning`` -- to a full
+        warm ``repartition`` (``result.updated`` False) when the delta
+        exceeds ``spec.update_threshold * n_new`` or balance cannot be
+        restored locally; the fallback is bit-for-bit identical to calling
+        ``repartition`` on the post-delta rows with the carried prices.
+        A zero delta is exactly ``repartition(x, state)``.
+
+        Flat / streamed / hierarchical category-free sessions only; mesh,
+        stacked, categorical, and masked sessions raise
+        ``NotImplementedError`` (repartition instead).
+        """
+        from repro import incremental as _incremental
+        return _incremental.engine_update(self, x, state, added=added,
+                                          removed=removed)
 
     def _build(self, shape: tuple[int, ...], per_call_mask: bool = False):
         """One shape-keyed executable: solve + state refresh, donated state.
@@ -860,6 +1034,12 @@ class AnticlusterEngine:
         mode, plan, solver, chunk = self._routed(
             shape, True if per_call_mask else None)
         cats, ncats = self._cats, self._n_categories
+        if (cats is not None and len(shape) == 2
+                and cats.shape[0] < shape[0]):
+            # mesh auto-pad: padding rows draw an arbitrary stratum (they
+            # are masked out, so quotas over real rows are unaffected)
+            cats = jnp.concatenate(
+                [cats, jnp.zeros((shape[0] - cats.shape[0],), jnp.int32)])
 
         def body(x, prices, vm):
             self._trace_count += 1  # python side effect: runs once per trace

@@ -9,27 +9,32 @@ exact-parity shims -- new code goes through ``repro.anticluster``.
 """
 
 from repro.core.aba import (aba, aba_batched, aba_core, aba_reference,
-                            aba_stream, interleave_permutation)
+                            aba_stream, delta_moments,
+                            interleave_permutation)
 from repro.core.assignment import (AuctionConfig, assignment_value,
                                    auction_solve, auction_solve_factored,
                                    available_solvers, get_solver,
-                                   greedy_solve, register_solver, scipy_solve)
+                                   greedy_solve, register_solver, scipy_solve,
+                                   solve_restricted_slots)
 from repro.core.hierarchical import (aba_auto, default_plan,
                                      hierarchical_aba, hierarchical_core)
 from repro.core.objective import (balance_ok, centroids, cluster_sizes,
                                   cut_cost, diversity_per_cluster,
-                                  diversity_stats, objective_centroid,
-                                  objective_pairwise, total_pairwise)
+                                  diversity_stats, dual_certificate,
+                                  objective_centroid, objective_pairwise,
+                                  total_pairwise)
 from repro.core import baselines
 
 __all__ = [
     "aba", "aba_batched", "aba_core", "aba_reference", "aba_stream",
-    "interleave_permutation",
+    "delta_moments", "interleave_permutation",
     "AuctionConfig", "auction_solve", "auction_solve_factored",
     "greedy_solve", "scipy_solve", "assignment_value",
     "register_solver", "get_solver", "available_solvers",
+    "solve_restricted_slots",
     "aba_auto", "default_plan", "hierarchical_aba", "hierarchical_core",
     "balance_ok", "centroids",
     "cluster_sizes", "cut_cost", "diversity_per_cluster", "diversity_stats",
+    "dual_certificate",
     "objective_centroid", "objective_pairwise", "total_pairwise", "baselines",
 ]

@@ -539,6 +539,33 @@ def aba_stream(
     return out[:n]
 
 
+def delta_moments(moment_sum: jnp.ndarray, moment_count: jnp.ndarray,
+                  added: jnp.ndarray | None = None,
+                  removed: jnp.ndarray | None = None,
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge arrivals/departures into carried centrality moments.
+
+    ``moment_sum`` ((d,) feature sum over valid rows) and ``moment_count``
+    (() valid-row count) are the running moments :class:`ABAState` carries
+    behind the level-1 centrality sort -- the same mergeable pair
+    ``aba_stream`` accumulates chunk by chunk.  ``added`` / ``removed`` are
+    the delta's row blocks ((m, d) / (r, d)); the update is exact: the
+    returned moments equal the from-scratch moments of the post-delta
+    dataset up to float summation order.
+    """
+    moment_sum = jnp.asarray(moment_sum, jnp.float32)
+    moment_count = jnp.asarray(moment_count, jnp.float32)
+    if removed is not None and removed.shape[0]:
+        moment_sum = moment_sum - jnp.sum(
+            jnp.asarray(removed, jnp.float32), axis=0)
+        moment_count = moment_count - float(removed.shape[0])
+    if added is not None and added.shape[0]:
+        moment_sum = moment_sum + jnp.sum(
+            jnp.asarray(added, jnp.float32), axis=0)
+        moment_count = moment_count + float(added.shape[0])
+    return moment_sum, moment_count
+
+
 # ---------------------------------------------------------------------------
 # Deprecated shims (exact-parity wrappers over aba_core)
 # ---------------------------------------------------------------------------

@@ -463,6 +463,57 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
     return out[0] if squeeze else out
 
 
+def solve_restricted_slots(cost: jnp.ndarray, mandatory: jnp.ndarray, *,
+                           solver: str = "auction",
+                           config: AuctionConfig = AuctionConfig(),
+                           prices: jnp.ndarray | None = None,
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Frozen-price restricted assignment of m arriving rows over T slots.
+
+    The delta-update subsystem's LAP (``repro.incremental``): ``cost`` is
+    the (m, T) value of placing each arriving row into each open capacity
+    slot (m <= T), ``mandatory`` ((T,) bool) marks slots that MUST take a
+    real row (clusters below the balance floor).  The problem is squared
+    with ``T - m`` neutral dummy rows (constant cost 0, the ``aba_core``
+    dummy convention) barred from mandatory slots by a penalty scaled to
+    the real cost span: with ``pen = -(4 * span + 1)`` an exchange argument
+    against the schedule's ``T * eps_lo <= span_solver / 4`` optimality
+    slack shows an eps-optimal assignment never takes a penalized pair when
+    a feasible completion exists (the categorical ``_MASK_COST = -1e9``
+    would instead blow up the span-derived epsilon schedule and with it the
+    placement quality).
+
+    ``prices`` ((T,) float32) warm-starts the solve from carried per-slot
+    duals; nonzero prices engage ``_run_phases``' adaptive re-entry probe,
+    so near-equilibrium slots sit out all but the final epsilon phase while
+    contested slots re-enter mid-schedule -- "all other prices frozen" falls
+    out of the probe rather than an explicit mask.
+
+    Returns ``(slots, slot_prices)``: each real row's slot ((m,) int32) and
+    the final duals ((T,) float32).  Jit/scan-safe for auction backends.
+    """
+    cost = jnp.asarray(cost, jnp.float32)
+    if cost.ndim != 2:
+        raise ValueError(f"cost must be (m, T), got {cost.shape}")
+    m, T = cost.shape
+    if m > T:
+        raise ValueError(f"m={m} arriving rows exceed T={T} open slots")
+    solver_obj = get_solver(solver)
+    if m == T:
+        square = cost
+    else:
+        # dummy rows see cost 0, so the span must cover 0 like the factored
+        # path's any_dummy branch does
+        hi = jnp.maximum(jnp.max(cost), 0.0)
+        lo = jnp.minimum(jnp.min(cost), 0.0)
+        pen = -(4.0 * jnp.maximum(hi - lo, 1e-6) + 1.0)
+        dummy = jnp.where(jnp.asarray(mandatory, jnp.bool_), pen, 0.0)
+        square = jnp.concatenate(
+            [cost, jnp.broadcast_to(dummy, (T - m, T))], axis=0)
+    assign, p_out = solver_obj.solve(square, config, prices)
+    return assign[:m].astype(jnp.int32), p_out
+
+
 def _repair_permutation(assign: jnp.ndarray) -> jnp.ndarray:
     """Fill any ``-1`` rows with the unused columns (order-preserving)."""
     B, n = assign.shape

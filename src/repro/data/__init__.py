@@ -1,5 +1,5 @@
 from repro.data.minibatch import ABABatchSequencer
-from repro.data.folds import aba_folds
+from repro.data.folds import aba_folds, fold_partition
 from repro.data import synthetic
 
-__all__ = ["ABABatchSequencer", "aba_folds", "synthetic"]
+__all__ = ["ABABatchSequencer", "aba_folds", "fold_partition", "synthetic"]

@@ -79,6 +79,24 @@ def aba_folds(features: np.ndarray, n_folds: int, *,
     return np.asarray(res.labels)
 
 
+def fold_partition(features: np.ndarray, n_folds: int, *, max_k: int = 512,
+                   chunk_size="auto"):
+    """Live representative folds: an :class:`IncrementalPartition`.
+
+    For CV harnesses whose dataset changes between sweeps (arriving
+    samples, retracted rows): ``part.update(added=..., removed=...)``
+    re-balances the folds through the delta path instead of rebuilding
+    from scratch, and ``part.labels`` / :func:`fold_splits` read the live
+    assignment.  Stratification is not supported on the delta path --
+    stratified folds stay on :func:`aba_folds` + :func:`fold_engine`.
+    """
+    from repro.data.minibatch import _auto_or_flat_spec
+    from repro.incremental import IncrementalPartition
+
+    spec = _auto_or_flat_spec(n_folds, max_k, chunk_size)
+    return IncrementalPartition(jnp.asarray(features), spec)
+
+
 def fold_splits(labels: np.ndarray, n_folds: int):
     """Yield (train_idx, val_idx) per fold."""
     for f in range(n_folds):

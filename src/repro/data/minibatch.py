@@ -115,9 +115,15 @@ class ABABatchSequencer:
     def _rebuild_batches(self):
         labels = np.asarray(self.result.labels)
         order = np.argsort(labels, kind="stable")
-        self.batches = order.reshape(self.k, -1) if self.k > 1 else (
-            order[None, :])
-        # anticluster sizes are all exactly batch_size when K | N
+        sizes = np.bincount(labels, minlength=self.k)
+        if sizes.min() == sizes.max():
+            # anticluster sizes are all exactly batch_size when K | N; a
+            # 2D array keeps the historical batches contract
+            self.batches = order.reshape(self.k, -1)
+        else:
+            # a grown sequencer carries floor/ceil batch sizes: the batch
+            # schedule is ragged (list of per-batch index arrays)
+            self.batches = np.split(order, np.cumsum(sizes)[:-1])
 
     def refresh(self, features: np.ndarray):
         """Warm re-partition on updated (same-shape) features.
@@ -129,6 +135,28 @@ class ABABatchSequencer:
         self.result, self.state = self.engine.repartition(
             jnp.asarray(features[:self.n_used]), self.state)
         self._features = features
+        self._rebuild_batches()
+        return self.result
+
+    def grow(self, added: np.ndarray):
+        """Absorb newly arrived examples into the live batch schedule.
+
+        Routes through :meth:`AnticlusterEngine.update`: the arrivals are
+        placed by the restricted warm-price auction against the carried
+        per-batch centroids instead of re-solving the whole epoch (a delta
+        above ``spec.update_threshold`` falls back to a full warm
+        repartition, loudly).  K (steps per epoch) stays fixed; batch sizes
+        become floor/ceil of the new N/K, so the schedule turns ragged.
+        Returns the new :class:`AnticlusterResult` (``.updated`` says which
+        path ran).  Not available under ``mesh`` (the delta subsystem is
+        single-device); drifted-feature refreshes still go through
+        :meth:`refresh`.
+        """
+        self.result, new_x, self.state = self.engine.update(
+            jnp.asarray(self._features[: self.n_used]), self.state,
+            added=jnp.asarray(added, dtype=self.engine.spec.dtype))
+        self._features = np.asarray(new_x)
+        self.n_used = self._features.shape[0]
         self._rebuild_batches()
         return self.result
 

@@ -1,0 +1,449 @@
+"""Delta updates on live partitions: the incremental anticlustering tier.
+
+Every other entry point re-solves from scratch; real deployments mostly see
+*deltas* -- a handful of rows arrive (new samples for the next fold split, a
+fresh batch joining a training pool) and a handful depart (consumed, expired,
+filtered out).  Re-running the full assignment-based solve for a 1% delta
+throws away the other 99% of the answer.  This module keeps a partition
+*live*: departures free capacity in their clusters and down-date the carried
+centrality moments; arrivals are placed by a small restricted assignment over
+only the open capacity, with every other row's label -- and every other
+cluster's dual price -- frozen.
+
+How a delta is absorbed
+-----------------------
+With ``n'`` post-delta rows, the balance constraint allows each of the ``k``
+clusters ``floor(n'/k)`` or ``ceil(n'/k)`` rows.  Given the kept rows' label
+counts ``sizes_c``, cluster ``c`` exposes ``cap_c = ceil' - sizes_c`` open
+*slots*, of which the first ``lo_c = max(0, floor' - sizes_c)`` are
+*mandatory* (must be filled or the cluster ends below the floor).
+
+Placing the ``m`` arrivals onto those slots is a transportation problem with
+*massively duplicated columns* (every open slot of a cluster is identical),
+which is exactly the degenerate regime where a single dense slot-LAP is
+slow: tied objects make Jacobi bidders pile onto one slot and prices crawl
+in epsilon steps.  So the delta core mirrors the paper's own decomposition
+instead.  Arrivals are sorted by centrality against the *carried* global
+moments (far first -- this is why :class:`~repro.anticluster.ABAState`
+carries ``moment_sum``/``moment_count`` and why departures down-date them),
+then split into ``B = max_c cap_c`` batches matched to a rank-indexed slot
+schedule: batch ``b`` owns each cluster's rank-``b`` open slot (so a batch
+never sees a duplicate column), and mandatory slots land in the earliest
+batches by construction.  One *batched* ``(B, k, k)`` LAP -- the same
+auction shape ``repro.core.aba`` solves per row-batch, warm-started from
+the live partition's per-cluster dual prices -- places everything at once:
+batch rows maximize ``||x_i - mu_c||^2`` at the current centroids, dummy
+rows are repelled from mandatory slots (and everyone from void slots) by a
+span-scaled penalty, and the warm prices engage the auction's adaptive
+re-entry probe (`repro.core.assignment`): near-equilibrium clusters re-run
+only the final small-epsilon phase, which is what "all other prices frozen"
+means operationally -- uncontested clusters never re-bid.
+(:func:`repro.core.assignment.solve_restricted_slots` remains the exact
+dense-slot primitive for small ``T``; the batched schedule is how the delta
+path stays strictly cheaper than a full repartition, its work being
+``B/(n/k)`` of the full solve's.)
+
+When the delta is too large for a local patch to be honest -- more than
+``spec.update_threshold`` of the post-delta rows, a cluster left above the
+new ceiling, too few arrivals to refill the floors, or a restricted problem
+bigger than :data:`_MAX_SLOTS` -- ``update`` falls back *loudly* (a
+``RuntimeWarning`` naming the reason) to a full warm repartition that is
+bit-for-bit identical to calling ``AnticlusterEngine.repartition`` on the
+post-delta rows with the carried prices (pinned by
+tests/test_incremental.py).
+
+Surfaces
+--------
+* ``AnticlusterEngine.update(x, state, added=..., removed=...)`` -- the
+  engine method (implemented here as :func:`engine_update`); returns
+  ``(result, new_x, new_state)`` with ``result.updated`` recording which
+  path ran.
+* :class:`IncrementalPartition` -- a convenience wrapper owning the running
+  ``x`` / labels / :class:`ABAState`, for callers who want a mutable live
+  partition instead of threading state by hand (the serving tier's live
+  lane, ``repro.data.folds.fold_partition``).
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anticluster import (ABAState, AnticlusterEngine, AnticlusterResult,
+                               AnticlusterSpec, _certificate, _cluster_prices,
+                               _resolve_spec, _result_stats)
+from repro.core.aba import delta_moments
+from repro.core.assignment import get_solver
+
+__all__ = ["IncrementalPartition"]
+
+
+def _slot_schedule(sizes_kept: np.ndarray, m: int, floor_new: int,
+                   ceil_new: int):
+    """Host-side rank-indexed batch schedule for the arriving rows.
+
+    Batch ``b`` owns each cluster's rank-``b`` open slot -- present while
+    ``b < cap_c``, *mandatory* (must take a real row) while ``b < lo_c`` --
+    so no batch ever sees two slots of the same cluster, and the earliest
+    batches carry every floor-restoring slot.  Real rows are front-loaded:
+    batch ``b`` gets its mandatory quota first, then the leftover arrivals
+    in batch order, so far-first sorted rows land early (the paper's
+    extreme-rows-pick-first idiom).
+
+    Returns ``(slot_map (B, k) int32 cluster-or--1, mandatory (B, k) bool,
+    idx (B, k) sorted-row index or m for dummies, inv_b (m,), inv_j (m,))``
+    with ``idx[inv_b[s], inv_j[s]] == s`` for every sorted row ``s``.
+    Feasibility (``cap_c >= 0``, ``sum lo <= m <= sum cap``) is the
+    caller's pre-check.
+    """
+    k = sizes_kept.shape[0]
+    cap = ceil_new - sizes_kept
+    lo = np.maximum(floor_new - sizes_kept, 0)
+    B = max(int(cap.max(initial=0)), 1)
+    b_idx = np.arange(B)[:, None]
+    open_ = b_idx < cap[None, :]
+    slot_map = np.where(open_, np.arange(k)[None, :], -1).astype(np.int32)
+    mandatory = b_idx < lo[None, :]
+    s_b = open_.sum(axis=1)
+    rows_b = mandatory.sum(axis=1)
+    leftover = m - int(rows_b.sum())
+    for b in range(B):
+        take = min(leftover, int(s_b[b] - rows_b[b]))
+        rows_b[b] += take
+        leftover -= take
+    starts = np.concatenate([[0], np.cumsum(rows_b)[:-1]])
+    idx = np.full((B, k), m, np.int32)
+    inv_b = np.empty((m,), np.int32)
+    inv_j = np.empty((m,), np.int32)
+    for b in range(B):
+        r = int(rows_b[b])
+        idx[b, :r] = starts[b] + np.arange(r)
+        inv_b[starts[b]:starts[b] + r] = b
+        inv_j[starts[b]:starts[b] + r] = np.arange(r)
+    return slot_map, mandatory, idx, inv_b, inv_j
+
+
+@functools.partial(jax.jit, static_argnames=("k", "solver", "config"))
+def _delta_assign(x_kept, labels_kept, added, cluster_prices, msum, mcnt,
+                  slot_map, mandatory, idx, inv_b, inv_j, *, k, solver,
+                  config):
+    """Batched frozen-price placement of the arriving rows.
+
+    Solves one ``(B, k, k)`` LAP stack over the :func:`_slot_schedule`
+    batches -- the same shape the ABA core solves per row batch, so the
+    delta path costs ``B`` batch-LAPs against the full solve's ``n'/k``.
+    Returns ``(added_labels (m,), new_cluster_prices (k,), sizes_final
+    (k,))``; ``added_labels`` is -1 where a row landed on a void slot
+    (never, unless the round-capped auction leaves a tangle -- the caller's
+    balance check catches it).  One trace per ``(n_kept, m, B)`` signature;
+    steady-state same-sized deltas reuse the cache.
+    """
+    x_kept = x_kept.astype(jnp.float32)
+    added = added.astype(jnp.float32)
+    m, d = added.shape
+    B = slot_map.shape[0]
+    sizes = jax.ops.segment_sum(
+        jnp.ones((x_kept.shape[0],), jnp.float32), labels_kept,
+        num_segments=k)
+    sums = jax.ops.segment_sum(x_kept, labels_kept, num_segments=k)
+    mu = sums / jnp.maximum(sizes, 1.0)[:, None]
+
+    # centrality sort against the carried (post-delta) global moments:
+    # the most-distant arrivals pick their clusters first, as in the full
+    # algorithm's centrality pass
+    mean = msum / jnp.maximum(mcnt, 1.0)
+    order = jnp.argsort(-jnp.sum((added - mean[None]) ** 2, axis=-1))
+    srt = jnp.concatenate([added[order], jnp.zeros((1, d), jnp.float32)])
+    rows = srt[idx]                                   # (B, k, d)
+    is_dummy = idx == m                               # (B, k) rows
+    void = slot_map < 0                               # (B, k) columns
+    mu_b = mu[jnp.maximum(slot_map, 0)]               # (B, k, d)
+    # maximize ||x - mu||^2; ||x||^2 is a per-row constant and drops,
+    # leaving the batch LAP's reduced benefit (repro.core.aba)
+    val = (-2.0 * jnp.einsum("bid,bjd->bij", rows, mu_b)
+           + jnp.sum(mu_b * mu_b, axis=-1)[:, None, :])
+    # span-scaled penalty (NOT aba_core's absolute _MASK_COST, which would
+    # inflate the span-derived epsilon schedule): an eps-optimal solution
+    # never takes a penalized pair it can avoid, and the baseline dummy/void
+    # value 0 is folded into the span
+    real = (~is_dummy[:, :, None]) & (~void[:, None, :])
+    hi = jnp.maximum(jnp.max(jnp.where(real, val, -jnp.inf)), 0.0)
+    lo_v = jnp.minimum(jnp.min(jnp.where(real, val, jnp.inf)), 0.0)
+    pen = -(4.0 * jnp.maximum(hi - lo_v, 1e-6) + 1.0)
+    val = jnp.where(
+        is_dummy[:, :, None],
+        jnp.where(mandatory[:, None, :] & ~void[:, None, :], pen, 0.0),
+        jnp.where(void[:, None, :], pen, val))
+    p0 = jnp.where(void, 0.0,
+                   cluster_prices[jnp.maximum(slot_map, 0)])  # (B, k)
+    assign, p_out = get_solver(solver).solve(val, config, p0)
+
+    col = assign[inv_b, inv_j]                        # (m,) sorted order
+    srt_labels = slot_map[inv_b, col]
+    added_labels = jnp.zeros((m,), jnp.int32).at[order].set(srt_labels)
+    # fold the final batch duals back to one price per cluster (mean over
+    # its open slots); clusters with no open slot keep their frozen price
+    seg = jnp.where(void, k, slot_map).reshape(-1)
+    p_sum = jax.ops.segment_sum(p_out.reshape(-1), seg,
+                                num_segments=k + 1)[:k]
+    cnt = jax.ops.segment_sum((~void).reshape(-1).astype(jnp.float32), seg,
+                              num_segments=k + 1)[:k]
+    new_cp = jnp.where(cnt > 0, p_sum / jnp.maximum(cnt, 1.0),
+                       cluster_prices)
+    sizes_final = (sizes.astype(jnp.int32)
+                   + jnp.zeros((k,), jnp.int32)
+                   .at[jnp.maximum(added_labels, 0)]
+                   .add(jnp.where(added_labels >= 0, 1, 0)))
+    return added_labels, new_cp, sizes_final
+
+
+def _carried_state(state: ABAState, new_n: int, added_x,
+                   removed_x) -> ABAState:
+    """The post-delta warm state the fallback hands to ``repartition``.
+
+    Prices are n-independent (one dual per cluster per level), so they
+    carry verbatim; the centrality moments are delta-merged *exactly*
+    (:func:`repro.core.aba.delta_moments` -- the carried sum/count describe
+    the current rows exactly, so add/subtract is not an approximation);
+    ``prev_labels`` reset to -1 (they index the pre-delta row order).  The
+    bit-for-bit fallback contract is pinned against this construction:
+    tests build the same state by hand and compare labels with a direct
+    ``repartition`` on the post-delta rows.
+    """
+    msum, mcnt = delta_moments(state.moment_sum, state.moment_count,
+                               added=added_x, removed=removed_x)
+    return ABAState(prices=state.prices, moment_sum=msum, moment_count=mcnt,
+                    prev_labels=jnp.full((new_n,), -1, jnp.int32))
+
+
+def engine_update(engine: AnticlusterEngine, x, state: ABAState, *,
+                  added=None, removed=None):
+    """Implementation of :meth:`AnticlusterEngine.update` (see its doc)."""
+    spec = engine.spec
+    x = jnp.asarray(x).astype(spec.dtype)
+    shape = tuple(x.shape)
+    if len(shape) != 2:
+        raise NotImplementedError(
+            "update() takes a flat (n, d) live partition; stacked (G, M, D) "
+            "sessions update one group at a time")
+    n, d = shape
+    mode, plan, solver, _chunk = engine._routed(shape)
+    if mode == "mesh":
+        raise NotImplementedError(
+            "mesh sessions do not support delta updates yet; repartition "
+            "(sharded warm starts make it cheap)")
+    if engine._cats is not None:
+        raise NotImplementedError(
+            "categorical quotas pin per-stratum balance, which a local slot "
+            "patch cannot restore; update() is category-free -- repartition")
+    if engine._vm is not None:
+        raise NotImplementedError(
+            "spec.valid_mask sessions carry padding rows; drop the padding "
+            "and update the unmasked rows instead")
+    if not isinstance(state, ABAState):
+        raise TypeError(
+            f"update() carries ABAState, got {type(state).__name__} (build "
+            "states with engine.partition / previous update calls)")
+
+    added_x = None
+    if added is not None:
+        added_x = jnp.asarray(added).astype(spec.dtype)
+        if added_x.ndim != 2 or (added_x.shape[0] and added_x.shape[1] != d):
+            raise ValueError(
+                f"added must be (m, {d}) to match x, got "
+                f"{tuple(added_x.shape)}")
+        if added_x.shape[0] == 0:
+            added_x = None
+    keep = np.ones((n,), bool)
+    r = 0
+    if removed is not None:
+        rem = np.asarray(removed)
+        if rem.dtype == np.bool_:
+            if rem.shape != (n,):
+                raise ValueError(
+                    f"a bool removed mask must be ({n},), got {rem.shape}")
+            keep = ~rem
+            r = int(rem.sum())
+        else:
+            rem = rem.astype(np.int64).reshape(-1)
+            if rem.size:
+                if rem.min() < 0 or rem.max() >= n:
+                    raise ValueError(
+                        f"removed indices must lie in [0, {n}), got range "
+                        f"[{rem.min()}, {rem.max()}]")
+                if np.unique(rem).size != rem.size:
+                    raise ValueError("removed indices must be unique")
+                keep[rem] = False
+                r = int(rem.size)
+    m = 0 if added_x is None else int(added_x.shape[0])
+
+    if m == 0 and r == 0:
+        # zero delta IS a repartition (pinned bit-for-bit by tests)
+        res, new_state = engine.repartition(x, state)
+        return res, x, new_state
+
+    new_n = n - r + m
+    if new_n < spec.k:
+        raise ValueError(
+            f"the delta leaves n={new_n} rows, fewer than k={spec.k}")
+
+    removed_x = (None if r == 0
+                 else x[jnp.asarray(np.flatnonzero(~keep))])
+    x_kept = x if r == 0 else x[jnp.asarray(np.flatnonzero(keep))]
+    new_x = x_kept if m == 0 else jnp.concatenate([x_kept, added_x])
+
+    def _fallback(reason: str):
+        warnings.warn(
+            f"update(added={m}, removed={r}) on n={n}: {reason}; falling "
+            "back to a full warm repartition of the post-delta rows "
+            "(bit-for-bit identical to repartition() with the carried "
+            "prices)", RuntimeWarning, stacklevel=3)
+        res, st = engine.repartition(
+            new_x, _carried_state(state, new_n, added_x, removed_x))
+        return res, new_x, st
+
+    frac = (m + r) / new_n
+    if frac > spec.update_threshold:
+        return _fallback(
+            f"delta fraction {frac:.3f} exceeds "
+            f"update_threshold={spec.update_threshold}")
+
+    prev = np.asarray(state.prev_labels)
+    if prev.shape != (n,) or (prev < 0).any() or (prev >= spec.k).any():
+        raise ValueError(
+            "state carries no labels for these rows (prev_labels unset or "
+            "from a different shape); run partition()/repartition() first")
+
+    k = spec.k
+    floor_new, ceil_new = new_n // k, -(-new_n // k)
+    sizes_kept = np.bincount(prev[keep], minlength=k)
+    if sizes_kept.max(initial=0) > ceil_new:
+        return _fallback(
+            "a cluster exceeds the new size ceiling after the departures "
+            "(balance cannot be restored locally)")
+    if int(np.maximum(floor_new - sizes_kept, 0).sum()) > m:
+        return _fallback(
+            "too few arrivals to refill every cluster to the new floor "
+            "(balance cannot be restored locally)")
+
+    labels_kept = jnp.asarray(prev[keep].astype(np.int32))
+    cp = _cluster_prices(tuple(state.prices), mode)  # (k,) global duals
+    msum, mcnt = delta_moments(state.moment_sum, state.moment_count,
+                               added=added_x, removed=removed_x)
+    if m == 0:
+        # departures only: every kept row keeps its label, duals untouched
+        # (the feasibility checks above guarantee balance already holds)
+        new_labels, new_cp = labels_kept, cp
+    else:
+        slot_map, mandatory, idx, inv_b, inv_j = _slot_schedule(
+            sizes_kept, m, floor_new, ceil_new)
+        added_labels, new_cp, sizes_final = _delta_assign(
+            x_kept, labels_kept, added_x, cp, msum, mcnt,
+            jnp.asarray(slot_map), jnp.asarray(mandatory),
+            jnp.asarray(idx), jnp.asarray(inv_b), jnp.asarray(inv_j),
+            k=k, solver=solver, config=spec.auction_config)
+        labels_np = np.asarray(added_labels)
+        sizes_np = np.asarray(sizes_final)
+        if (labels_np < 0).any() or sizes_np.min() < floor_new \
+                or sizes_np.max() > ceil_new:
+            # the round-capped auction can (rarely) leave a row or dummy on
+            # the wrong slot; a local patch that breaks balance is worthless
+            return _fallback(
+                "the restricted assignment could not restore balance "
+                "locally")
+        new_labels = jnp.concatenate([labels_kept, added_labels])
+
+    # scatter the per-cluster duals back into the state's per-level layout:
+    # only the last level's prices index global clusters (labels compose as
+    # g * k_last + sub); earlier levels carry over and stay re-centered
+    last_shape = state.prices[-1].shape
+    new_last = new_cp.reshape(last_shape)
+    new_last = new_last - jnp.max(new_last, axis=-1, keepdims=True)
+    new_prices = tuple(state.prices[:-1]) + (new_last,)
+    new_state = ABAState(prices=new_prices, moment_sum=msum,
+                         moment_count=mcnt, prev_labels=new_labels)
+
+    # host-level result statistics, outside the solve (see repartition)
+    new_labels = jax.block_until_ready(new_labels)
+    sizes, sd, rng = _result_stats(new_x, new_labels, k, None,
+                                   diversity=spec.stats)
+    bound, gap = (None, None)
+    if spec.stats:
+        bound, gap = _certificate(new_x, new_labels, new_prices, mode, k,
+                                  None)
+    result = AnticlusterResult(
+        labels=new_labels, cluster_sizes=sizes, diversity_sd=sd,
+        diversity_range=rng, k=k, plan=plan, solver=solver,
+        variant=spec.variant, dual_bound=bound, gap=gap, updated=True)
+    return result, new_x, new_state
+
+
+class IncrementalPartition:
+    """A live partition: owns the running rows/labels/state, absorbs deltas.
+
+    The object-level face of the delta subsystem: construct it with the
+    initial rows (solved immediately), then :meth:`update` mutates the
+    partition in place as rows arrive and depart.  ``x`` row order after an
+    update is ``concat(kept rows in original order, added rows)``.
+
+        live = IncrementalPartition(x0, k=16)
+        live.update(added=fresh_rows)            # restricted warm placement
+        live.update(removed=np.arange(8))        # departures free capacity
+        live.result.gap                          # certificate still attached
+
+    Pass a spec / overrides (a private engine is built) or share an
+    ``engine=`` across partitions (one compile cache).  The wrapper adds no
+    solver behavior of its own -- everything is
+    :meth:`AnticlusterEngine.update` semantics, including the loud
+    over-threshold fallback (``result.updated`` False for that call).
+    """
+
+    def __init__(self, x, spec: AnticlusterSpec | None = None, *,
+                 engine: AnticlusterEngine | None = None, **overrides):
+        if engine is not None:
+            if spec is not None or overrides:
+                raise ValueError(
+                    "pass spec/overrides or a prebuilt engine, not both")
+            self.engine = engine
+        else:
+            self.engine = AnticlusterEngine(_resolve_spec(spec, overrides))
+        self._x = jnp.asarray(x).astype(self.engine.spec.dtype)
+        self.result, self.state = self.engine.partition(self._x)
+
+    @property
+    def x(self):
+        """The current (n, d) rows, post-delta row order."""
+        return self._x
+
+    @property
+    def labels(self):
+        return self.result.labels
+
+    @property
+    def k(self) -> int:
+        return self.engine.spec.k
+
+    @property
+    def n(self) -> int:
+        return int(self._x.shape[0])
+
+    def __len__(self) -> int:
+        return self.n
+
+    def update(self, added=None, removed=None) -> AnticlusterResult:
+        """Absorb a delta in place; returns (and stores) the new result."""
+        result, self._x, self.state = self.engine.update(
+            self._x, self.state, added=added, removed=removed)
+        self.result = result
+        return result
+
+    def repartition(self) -> AnticlusterResult:
+        """Force a full warm re-solve of the current rows."""
+        self.result, self.state = self.engine.repartition(self._x,
+                                                          self.state)
+        return self.result

@@ -183,7 +183,11 @@ class ServiceMetrics:
     slot -- the cost of row-bucket admission), and ``shed_rate``.
     ``errored`` counts requests whose serve raised (their tickets carry
     the exception); a rejected ``partition_many`` burst adds every one of
-    its requests to ``rejected_full``.
+    its requests to ``rejected_full``.  The live-partition lane reports
+    ``update_calls`` / ``update_fallbacks`` (deltas that fell back to a
+    full repartition; ``update_fallback_rate`` derives the ratio -- a
+    rising rate means deltas outgrew ``spec.update_threshold``) and the
+    current ``live_partitions`` count.
     """
 
     queue_depth: int
@@ -203,6 +207,16 @@ class ServiceMetrics:
     row_filled: int
     lane_compile_counts: dict[str, int]
     devices: int
+    # the live-partition (delta-update) lane; defaults keep older
+    # positional/partial constructions working
+    update_calls: int = 0
+    update_fallbacks: int = 0
+    live_partitions: int = 0
+
+    @property
+    def update_fallback_rate(self) -> float:
+        return (self.update_fallbacks / self.update_calls
+                if self.update_calls else 0.0)
 
     @property
     def warm_hit_rate(self) -> float:
@@ -282,6 +296,8 @@ class _Request:
     deadline_at: float | None   # absolute router-clock time, or None
     key: tuple                  # admission key (what can batch together)
     bucket: int                 # padded row count (== n when not padded)
+    op: str = "solve"           # "solve" | "open" | "update"
+    payload: Any = None         # ("update": the (added, removed) delta)
 
 
 class AnticlusterRouter:
@@ -359,6 +375,15 @@ class AnticlusterRouter:
         self._group_filled = 0
         self._row_slots = 0
         self._row_filled = 0
+        self._update_calls = 0
+        self._update_fallbacks = 0
+        # live named partitions (the delta-update lane).  _live_names is
+        # the synchronous reservation set (admission-time duplicate/unknown
+        # checks); _live maps name -> IncrementalPartition once the open
+        # has been served.  Both guarded by self._cv; the partitions
+        # themselves are only touched under _serve_mutex.
+        self._live_names: set[str] = set()
+        self._live: dict[str, Any] = {}
 
     # -- admission ----------------------------------------------------------
 
@@ -380,15 +405,20 @@ class AnticlusterRouter:
         if xa.shape[0] < self.spec.k:
             raise ValueError(
                 f"request has n={xa.shape[0]} rows < spec.k={self.spec.k}")
-        if self._shards > 1 and xa.shape[0] % self._shards:
-            # reject at admission what the mesh engine would reject inside
-            # a lane call: by the time a lane solves, the ticket is the
-            # only way out, and an async failure is a worse surface than a
-            # synchronous one
+        if self._shards > 1 and xa.shape[0] % self._shards \
+                and len(self._plan) > 1:
+            # flat per-shard plans auto-pad uneven rows inside the engine
+            # (masked zero rows; see AnticlusterEngine._solve_shape), so
+            # only the composition the engine itself cannot mask -- a
+            # multi-level per-shard plan -- is rejected here, at admission:
+            # by the time a lane solves, the ticket is the only way out,
+            # and an async failure is a worse surface than a synchronous one
             raise ValueError(
                 f"request has n={xa.shape[0]} rows, not divisible by the "
-                f"mesh shard count {self._shards} (mesh lanes shard each "
-                "request's rows evenly across devices)")
+                f"mesh shard count {self._shards}, and the per-shard plan "
+                f"{self._plan} is hierarchical (mesh lanes can auto-pad "
+                "uneven rows only under a flat per-shard plan; raise "
+                "max_k or pad the request)")
         return xa.astype(self.spec.dtype)
 
     def _admission(self, n: int, d: int) -> tuple[tuple, int]:
@@ -424,20 +454,25 @@ class AnticlusterRouter:
         with self._cv:
             return self._submit_locked(xa, deadline)
 
-    def _submit_locked(self, xa, deadline: float | None) -> Ticket:
+    def _submit_locked(self, xa, deadline: float | None, *,
+                       op: str = "solve", key: tuple | None = None,
+                       payload: Any = None) -> Ticket:
         if self._closed:
             raise Rejected("shutdown")
         if len(self._queue) >= self.max_queue:
             self._rejected_full += 1
             raise Rejected("queue_full")
         now = self._clock()
-        n, d = map(int, xa.shape)
-        key, bucket = self._admission(n, d)
+        n, d = map(int, xa.shape) if xa is not None else (0, 0)
+        if key is None:
+            key, bucket = self._admission(n, d)
+        else:
+            bucket = n
         ticket = Ticket(self, now)
         self._queue.append(_Request(
             x=xa, n=n, d=d, ticket=ticket,
             deadline_at=None if deadline is None else now + deadline,
-            key=key, bucket=bucket))
+            key=key, bucket=bucket, op=op, payload=payload))
         self._submitted += 1
         if self._background and (self._worker is None
                                  or not self._worker.is_alive()):
@@ -471,6 +506,87 @@ class AnticlusterRouter:
                 raise Rejected("queue_full")
             tickets = [self._submit_locked(xa, None) for xa in xs]
         return [t.result() for t in tickets]
+
+    # -- live partitions (the delta-update lane) -----------------------------
+
+    def open_partition(self, name: str, x,
+                       deadline: float | None = None) -> Ticket:
+        """Admit ``x`` as the named *live* partition; returns its Ticket.
+
+        A live partition stays resident after its solve: subsequent
+        :meth:`submit_update` calls absorb row arrivals/departures through
+        :meth:`repro.anticluster.AnticlusterEngine.update` instead of
+        re-solving.  The name is reserved synchronously (a duplicate
+        ``open_partition`` raises ``ValueError`` immediately, not on the
+        ticket); open and update ops on one name share the admission key
+        ``("update", name)``, so the queue's FIFO order IS the partition's
+        op order.  Mesh specs have no delta path and raise here.
+        """
+        if self.spec.mesh is not None:
+            raise NotImplementedError(
+                "mesh lanes do not support delta updates; submit() full "
+                "requests instead")
+        xa = self._coerce(x)
+        with self._cv:
+            if name in self._live_names:
+                raise ValueError(
+                    f"live partition {name!r} is already open")
+            ticket = self._submit_locked(xa, deadline, op="open",
+                                         key=("update", name))
+            self._live_names.add(name)
+            return ticket
+
+    def submit_update(self, name: str, added=None, removed=None,
+                      deadline: float | None = None) -> Ticket:
+        """Admit a delta against the named live partition.
+
+        ``added`` is an (m, d) block of arriving rows; ``removed`` names
+        departing rows of the partition's *current* row order (int indices
+        or a bool mask) -- :meth:`AnticlusterEngine.update` semantics,
+        including the loud over-threshold fallback (``result.updated`` is
+        False for that call and ``ServiceMetrics.update_fallbacks``
+        counts it).  Raises ``ValueError`` synchronously when ``name`` was
+        never opened (or already closed).
+        """
+        with self._cv:
+            if name not in self._live_names:
+                raise ValueError(
+                    f"live partition {name!r} is not open (open_partition "
+                    "first)")
+            added_a = (None if added is None
+                       else jnp.asarray(added).astype(self.spec.dtype))
+            return self._submit_locked(None, deadline, op="update",
+                                       key=("update", name),
+                                       payload=(added_a, removed))
+
+    def live_partition(self, name: str):
+        """The named :class:`repro.incremental.IncrementalPartition`.
+
+        Available once the open ticket resolved; ``KeyError`` otherwise.
+        Treat it as read-only (``.labels``, ``.x``, ``.result``) -- mutate
+        through :meth:`submit_update`, which serializes with serving.
+        """
+        with self._cv:
+            part = self._live.get(name)
+        if part is None:
+            raise KeyError(
+                f"live partition {name!r} is not open (or its open has "
+                "not been served yet)")
+        return part
+
+    def partition_labels(self, name: str):
+        """Current labels of the named live partition (see live_partition)."""
+        return self.live_partition(name).labels
+
+    def close_partition(self, name: str) -> None:
+        """Release the named live partition (its name becomes reusable).
+
+        Updates still queued for it resolve with an error; drain first for
+        a clean shutdown of the name.
+        """
+        with self._cv:
+            self._live_names.discard(name)
+            self._live.pop(name, None)
 
     # -- serving ------------------------------------------------------------
 
@@ -571,6 +687,12 @@ class AnticlusterRouter:
 
     def _serve(self, group: list[_Request]) -> None:
         head = group[0]
+        if head.key[0] == "update":
+            # one live partition's ops, in FIFO order (the admission key
+            # pins the name, _take_group_locked keeps arrival order)
+            for r in group:
+                self._serve_live(r)
+            return
         if head.key[0] == "seq":
             for r in group:
                 self._serve_solo(r)
@@ -582,6 +704,45 @@ class AnticlusterRouter:
             self._serve_solo(head)
             return
         self._serve_stacked(group)
+
+    def _serve_live(self, r: _Request) -> None:
+        """Apply one live-partition op (runs under ``_serve_mutex``).
+
+        An exception (unknown name after close, a bad delta shape) escapes
+        to ``step``, which resolves the ticket with it and counts it in
+        ``errored`` -- same containment as every other serve path.
+        """
+        from repro.incremental import IncrementalPartition
+        name = r.key[1]
+        if r.op == "open":
+            with self._cv:
+                lane = self._pool.lane(("live", name))
+            x = r.x
+            if lane.device is not None:
+                x = jax.device_put(x, lane.device)
+            part = IncrementalPartition(x, engine=lane.engine)
+            lane.calls += 1
+            with self._cv:
+                self._live[name] = part
+                self._cold_calls += 1
+                self._solo_calls += 1
+                self._completed += 1
+            r.ticket._resolve(result=part.result, at=self._clock())
+            return
+        with self._cv:
+            part = self._live.get(name)
+        if part is None:
+            raise KeyError(
+                f"live partition {name!r} was closed (or its open "
+                "errored) before this update was served")
+        added, removed = r.payload
+        res = part.update(added=added, removed=removed)
+        with self._cv:
+            self._update_calls += 1
+            if not res.updated:
+                self._update_fallbacks += 1
+            self._completed += 1
+        r.ticket._resolve(result=res, at=self._clock())
 
     def _serve_solo(self, r: _Request) -> None:
         res, _warm = self._call_lane(("solo", (r.n, r.d)), r.x, None)
@@ -624,7 +785,10 @@ class AnticlusterRouter:
                 diversity_sd=res.diversity_sd[g],
                 diversity_range=res.diversity_range[g],
                 k=res.k, plan=res.plan, solver=res.solver,
-                variant=res.variant), at=now)
+                variant=res.variant,
+                dual_bound=None if res.dual_bound is None
+                else res.dual_bound[g],
+                gap=None if res.gap is None else res.gap[g]), at=now)
 
     def _call_lane(self, key: tuple, x, vm):
         with self._cv:
@@ -707,4 +871,7 @@ class AnticlusterRouter:
                 lane_compile_counts={
                     str(k): lane.engine.compile_count
                     for k, lane in self._pool.lanes.items()},
-                devices=self._pool.device_count)
+                devices=self._pool.device_count,
+                update_calls=self._update_calls,
+                update_fallbacks=self._update_fallbacks,
+                live_partitions=len(self._live))

@@ -438,14 +438,16 @@ def test_public_api_snapshot():
     ]
     assert repro.core.__all__ == [
         "aba", "aba_batched", "aba_core", "aba_reference", "aba_stream",
-        "interleave_permutation",
+        "delta_moments", "interleave_permutation",
         "AuctionConfig", "auction_solve", "auction_solve_factored",
         "greedy_solve", "scipy_solve", "assignment_value",
         "register_solver", "get_solver", "available_solvers",
+        "solve_restricted_slots",
         "aba_auto", "default_plan", "hierarchical_aba", "hierarchical_core",
         "balance_ok", "centroids",
         "cluster_sizes", "cut_cost", "diversity_per_cluster",
         "diversity_stats",
+        "dual_certificate",
         "objective_centroid", "objective_pairwise", "total_pairwise",
         "baselines",
     ]

@@ -379,6 +379,33 @@ def test_two_device_stream_and_categories():
 
 
 @_multi
+def test_two_device_uneven_rows_autopad_parity():
+    # 65 rows on 2 shards: the engine pads one masked zero row instead of
+    # raising, riding the per-call valid_mask executable
+    x = jnp.asarray(_data(65, 3, 70))
+    spec = AnticlusterSpec(k=4, mesh=_mesh2(), data_axes=("data",))
+    res = anticluster(x, spec)
+    assert res.labels.shape == (65,)
+    counts = np.bincount(np.asarray(res.labels), minlength=4)
+    assert counts.min() >= 65 // 4 and counts.max() <= -(-65 // 4)
+    # parity: identical to padding by hand and masking the pad row
+    pad = jnp.concatenate([x, jnp.zeros((1, 3), x.dtype)])
+    ref = anticluster(pad, spec.replace(valid_mask=np.arange(66) < 65))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(ref.labels)[:65])
+    # the engine agrees, and warm repartitions stay on one executable
+    eng = AnticlusterEngine(spec)
+    r1, st = eng.partition(x)
+    np.testing.assert_array_equal(np.asarray(r1.labels),
+                                  np.asarray(res.labels))
+    r2, _ = eng.repartition(x, st)
+    assert r2.balanced and eng.compile_count == 1
+    # a user-provided mask on uneven rows still raises the explicit error
+    with pytest.raises(ValueError, match="divisible"):
+        anticluster(x, spec.replace(valid_mask=np.ones(65, bool)))
+
+
+@_multi
 def test_two_device_presharded_input_and_checkpoint(tmp_path):
     from repro.train.checkpoint import restore_engine_state, save_engine_state
     mesh = _mesh2()

@@ -1,0 +1,297 @@
+"""The delta-update subsystem: ``AnticlusterEngine.update`` and
+``IncrementalPartition``.
+
+Pins the PR's acceptance contracts: in-threshold deltas restore balance
+via the restricted warm-price auction (kept rows never move); zero-delta
+and over-threshold calls are bit-for-bit identical to a full warm
+``repartition`` (the fallback is a contract, not an approximation); the
+LP-duality certificate rides update results; and the guard rails
+(mesh / categories / valid_mask / stale state) fail loudly up front.
+
+Donation caveat for bit-for-bit tests: ``repartition``/``update`` consume
+the state's buffers (donate_argnums), so any test comparing against a
+hand-built carried state must snapshot prices/moments with ``jnp.array``
+BEFORE the consuming call.
+"""
+
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.anticluster import (ABAState, AnticlusterEngine, AnticlusterSpec,
+                               anticluster)
+from repro.core.objective import balance_ok, objective_centroid
+from repro.incremental import IncrementalPartition
+
+from _hypothesis_compat import given, settings, st
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _counts_ok(labels, k):
+    n = len(labels)
+    c = np.bincount(np.asarray(labels), minlength=k)
+    return c.min() >= n // k and c.max() <= -(-n // k)
+
+
+def _snapshot(state):
+    """Donation-safe copy of a state's buffers (see module docstring)."""
+    return ABAState(
+        prices=tuple(jnp.array(p) for p in state.prices),
+        moment_sum=jnp.array(state.moment_sum),
+        moment_count=jnp.array(state.moment_count),
+        prev_labels=None if state.prev_labels is None
+        else jnp.array(state.prev_labels))
+
+
+# ---------------------------------------------------------------------------
+# The delta path: arrivals / departures keep balance, kept rows never move
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(k=8, plan=None),
+    dict(k=8, plan=None, solver="auction_fused"),
+    dict(k=6, plan=(2, 3)),
+])
+def test_update_added_keeps_balance_and_kept_labels(kw):
+    eng = AnticlusterEngine(**kw)
+    x = jnp.asarray(_data(200, 5, seed=3))
+    res0, st = eng.partition(x)
+    added = jnp.asarray(_data(12, 5, seed=4))
+    res, new_x, st2 = eng.update(x, st, added=added)
+    assert res.updated
+    assert new_x.shape == (212, 5)
+    # kept rows come first, in original order, with their original labels
+    np.testing.assert_array_equal(np.asarray(res.labels[:200]),
+                                  np.asarray(res0.labels))
+    np.testing.assert_array_equal(np.asarray(new_x[:200]), np.asarray(x))
+    assert _counts_ok(res.labels, eng.spec.k)
+    assert bool(balance_ok(res.labels, eng.spec.k))
+    # the returned state is live: a follow-up delta keeps composing
+    res3, _, _ = eng.update(new_x, st2, removed=np.arange(6))
+    assert _counts_ok(res3.labels, eng.spec.k)
+
+
+def test_update_removed_only_keeps_labels_when_balanced():
+    eng = AnticlusterEngine(k=8, plan=None)
+    x = jnp.asarray(_data(240, 4, seed=5))
+    res0, st = eng.partition(x)
+    lab0 = np.asarray(res0.labels)
+    # remove one row per cluster: sizes stay exactly balanced, so the pure
+    # departure path keeps every kept row's label verbatim
+    rem = np.array([np.flatnonzero(lab0 == c)[0] for c in range(8)])
+    res, new_x, _ = eng.update(x, st, removed=rem)
+    assert res.updated and new_x.shape == (232, 4)
+    keep = np.ones(240, bool)
+    keep[rem] = False
+    np.testing.assert_array_equal(np.asarray(res.labels), lab0[keep])
+    np.testing.assert_array_equal(np.asarray(new_x), np.asarray(x)[keep])
+
+
+def test_update_mixed_delta_objective_near_full_resolve():
+    eng = AnticlusterEngine(k=16, plan=None)
+    x = jnp.asarray(_data(800, 8, seed=6))
+    _, st = eng.partition(x)
+    added = jnp.asarray(_data(40, 8, seed=7))
+    rem = np.sort(np.random.default_rng(8).choice(800, 40, replace=False))
+    res, new_x, _ = eng.update(x, st, added=added, removed=rem)
+    assert res.updated and _counts_ok(res.labels, 16)
+    o_u = float(objective_centroid(new_x, res.labels, 16))
+    o_f = float(objective_centroid(
+        new_x, anticluster(new_x, k=16, plan=None).labels, 16))
+    assert o_u >= 0.99 * o_f  # the local patch stays within 1% (acceptance)
+
+
+def test_update_removed_bool_mask_equals_indices():
+    eng = AnticlusterEngine(k=5, plan=None)
+    x = jnp.asarray(_data(150, 3, seed=9))
+    _, st_a = eng.partition(x)
+    _, st_b = eng.partition(x)
+    rem = np.array([3, 50, 149])
+    mask = np.zeros(150, bool)
+    mask[rem] = True
+    res_a, xa, _ = eng.update(x, st_a, removed=rem)
+    res_b, xb, _ = eng.update(x, st_b, removed=mask)
+    np.testing.assert_array_equal(np.asarray(res_a.labels),
+                                  np.asarray(res_b.labels))
+    np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+# ---------------------------------------------------------------------------
+# Property: add a batch, then remove those same rows -> balance restored
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(min_value=1, max_value=20),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_update_add_then_remove_restores_balance(m, seed):
+    eng = AnticlusterEngine(k=6, plan=None)
+    x = jnp.asarray(_data(120, 4, seed=seed % 97))
+    _, st = eng.partition(x)
+    added = jnp.asarray(_data(m, 4, seed=seed))
+    res1, x1, st1 = eng.update(x, st, added=added)
+    assert _counts_ok(res1.labels, 6)
+    # the added rows sit at the tail of the running matrix by contract
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)  # fallback allowed
+        res2, x2, _ = eng.update(x1, st1,
+                                 removed=np.arange(120, 120 + m))
+    assert x2.shape == (120, 4)
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(x))
+    assert _counts_ok(res2.labels, 6)
+
+
+# ---------------------------------------------------------------------------
+# The fallback contract: zero-delta and over-threshold == repartition,
+# bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_zero_delta_is_repartition_bitwise():
+    eng = AnticlusterEngine(k=8, plan=None)
+    x = jnp.asarray(_data(160, 4, seed=10))
+    _, st_a = eng.partition(x)
+    _, st_b = eng.partition(x)
+    res_u, new_x, st_u = eng.update(x, st_a)
+    res_r, st_r = eng.repartition(x, st_b)
+    np.testing.assert_array_equal(np.asarray(res_u.labels),
+                                  np.asarray(res_r.labels))
+    np.testing.assert_array_equal(np.asarray(new_x), np.asarray(x))
+    for pu, pr in zip(st_u.prices, st_r.prices):
+        np.testing.assert_array_equal(np.asarray(pu), np.asarray(pr))
+
+
+def test_over_threshold_falls_back_bitwise():
+    from repro.incremental import _carried_state
+
+    eng = AnticlusterEngine(k=8, plan=None, update_threshold=0.1)
+    x = jnp.asarray(_data(160, 4, seed=11))
+    _, st = eng.partition(x)
+    snap = _snapshot(st)  # update() donates st's buffers
+    added = jnp.asarray(_data(40, 4, seed=12))  # 40/200 = 0.2 > 0.1
+
+    with pytest.warns(RuntimeWarning, match="full warm repartition"):
+        res_u, new_x, _ = eng.update(x, st, added=added)
+    assert res_u.updated is False  # provenance: the delta path did NOT run
+
+    # the promise in the warning, verified literally: bit-for-bit identical
+    # to repartition() of the post-delta rows with the carried state
+    ref_x = jnp.concatenate([x, added])
+    res_r, _ = eng.repartition(ref_x, _carried_state(snap, 200, added, None))
+    np.testing.assert_array_equal(np.asarray(res_u.labels),
+                                  np.asarray(res_r.labels))
+    np.testing.assert_array_equal(np.asarray(new_x), np.asarray(ref_x))
+
+
+def test_unrestorable_balance_falls_back():
+    eng = AnticlusterEngine(k=6, plan=None)
+    x = jnp.asarray(_data(120, 4, seed=13))
+    res0, st = eng.partition(x)
+    # removing many rows of one cluster leaves others over the new ceiling
+    lab = np.asarray(res0.labels)
+    rem = np.flatnonzero(lab == 0)[:15]
+    with pytest.warns(RuntimeWarning, match="balance cannot be restored"):
+        res, _, _ = eng.update(x, st, removed=rem)
+    assert res.updated is False
+    assert _counts_ok(res.labels, 6)
+
+
+# ---------------------------------------------------------------------------
+# The certificate rides updates (stats=True), and provenance is honest
+# ---------------------------------------------------------------------------
+
+def test_update_carries_certificate_when_stats():
+    eng = AnticlusterEngine(k=8, plan=None, stats=True)
+    x = jnp.asarray(_data(200, 5, seed=14))
+    res0, st = eng.partition(x)
+    assert res0.gap is not None and float(res0.gap) >= 0
+    res, _, _ = eng.update(x, st, added=jnp.asarray(_data(10, 5, seed=15)))
+    assert res.updated
+    assert res.dual_bound is not None and res.gap is not None
+    assert float(res.gap) >= 0
+    # stats=False keeps the certificate (and its cost) off the result
+    eng2 = AnticlusterEngine(k=8, plan=None, stats=False)
+    _, st2 = eng2.partition(x)
+    res2, _, _ = eng2.update(x, st2,
+                             added=jnp.asarray(_data(10, 5, seed=15)))
+    assert res2.dual_bound is None and res2.gap is None
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+def test_update_guards():
+    eng = AnticlusterEngine(k=4, plan=None)
+    x = jnp.asarray(_data(64, 3, seed=16))
+    _, st = eng.partition(x)
+    with pytest.raises(TypeError, match="ABAState"):
+        eng.update(x, {"prices": None})
+    with pytest.raises(ValueError, match=r"added must be \(m, 3\)"):
+        eng.update(x, st, added=np.ones((5, 7), np.float32))
+    with pytest.raises(ValueError, match="must be unique"):
+        eng.update(x, st, removed=np.array([1, 1, 2]))
+    with pytest.raises(ValueError, match=r"in \[0, 64\)"):
+        eng.update(x, st, removed=np.array([64]))
+    with pytest.raises(ValueError, match="fewer than k"):
+        eng.update(x, st, removed=np.arange(62))
+    with pytest.raises(NotImplementedError, match="one group at a time"):
+        eng.update(jnp.zeros((2, 64, 3)), st, added=np.ones((1, 3)))
+
+    cat_eng = AnticlusterEngine(
+        k=4, plan=None, categories=np.zeros(64, np.int32), n_categories=1)
+    _, cat_st = cat_eng.partition(x)
+    with pytest.raises(NotImplementedError, match="category-free"):
+        cat_eng.update(x, cat_st, added=np.ones((2, 3), np.float32))
+
+
+def test_update_requires_prev_labels():
+    eng = AnticlusterEngine(k=4, plan=None)
+    x = jnp.asarray(_data(64, 3, seed=17))
+    _, st = eng.partition(x)
+    stale = ABAState(prices=tuple(jnp.array(p) for p in st.prices),
+                     moment_sum=jnp.array(st.moment_sum),
+                     moment_count=jnp.array(st.moment_count),
+                     prev_labels=jnp.full((64,), -1, jnp.int32))
+    with pytest.raises(ValueError, match="prev_labels"):
+        eng.update(x, stale, added=np.ones((2, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# IncrementalPartition: the object-level face
+# ---------------------------------------------------------------------------
+
+def test_incremental_partition_lifecycle():
+    x0 = _data(128, 4, seed=18)
+    part = IncrementalPartition(x0, k=8)
+    assert part.n == len(part) == 128 and part.k == 8
+    np.testing.assert_array_equal(
+        np.asarray(part.labels),
+        np.asarray(anticluster(jnp.asarray(x0), k=8).labels))
+
+    res = part.update(added=_data(9, 4, seed=19))
+    assert res.updated and part.n == 137
+    assert res is part.result  # the wrapper stores what it returns
+    assert _counts_ok(part.labels, 8)
+
+    res2 = part.update(removed=np.arange(5))
+    assert part.n == 132 and _counts_ok(part.labels, 8)
+    assert res2.labels.shape == (132,)
+
+    res3 = part.repartition()  # forcing a full warm re-solve still works
+    assert _counts_ok(res3.labels, 8) and part.n == 132
+
+
+def test_incremental_partition_engine_sharing_and_guards():
+    eng = AnticlusterEngine(k=4, plan=None)
+    a = IncrementalPartition(_data(64, 3, seed=20), engine=eng)
+    b = IncrementalPartition(_data(64, 3, seed=21), engine=eng)
+    assert eng.compile_count == 1  # both live partitions share the cache
+    a.update(added=_data(3, 3, seed=22))
+    assert a.n == 67 and b.n == 64  # deltas do not leak across partitions
+    with pytest.raises(ValueError, match="not both"):
+        IncrementalPartition(_data(64, 3), AnticlusterSpec(k=4), engine=eng)

@@ -301,14 +301,23 @@ def test_inline_timeout_checked_before_stepping():
 
 @pytest.mark.skipif(len(jax.devices()) < 2,
                     reason="needs >= 2 devices for a sharded mesh")
-def test_mesh_indivisible_rows_rejected_at_admission():
+def test_mesh_indivisible_rows_autopad_or_rejected():
     from jax.sharding import Mesh
     mesh = Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("data",))
+    # flat per-shard plan: uneven rows ride the engine's auto-pad (masked
+    # zero rows behind a per-call valid_mask) instead of being rejected
     r = _router(k=4, mesh=mesh, data_axes=("data",))
-    # rejected synchronously at submit, not asynchronously inside a lane
+    res = r.submit(_data(65, 3, seed=1)).result()
+    assert res.labels.shape == (65,)
+    counts = np.bincount(np.asarray(res.labels), minlength=4)
+    assert counts.min() >= 65 // 4 and counts.max() <= -(-65 // 4)
+
+    # hierarchical per-shard plan is the one composition the engine cannot
+    # mask; still rejected synchronously at submit, not inside a lane
+    r2 = _router(k=8, mesh=mesh, data_axes=("data",), plan=(2, 4))
     with pytest.raises(ValueError, match="shard count"):
-        r.submit(_data(65, 3, seed=1))
-    assert r.metrics().queue_depth == 0
+        r2.submit(_data(65, 3, seed=1))
+    assert r2.metrics().queue_depth == 0
 
 
 # ---------------------------------------------------------------------------
@@ -452,3 +461,52 @@ def test_engine_per_call_mask_guards():
     with pytest.raises(ValueError, match="mutually exclusive"):
         AnticlusterEngine(masked_spec).partition(
             x, valid_mask=np.ones(64, bool))
+
+
+# ---------------------------------------------------------------------------
+# Live partitions: the update lane
+# ---------------------------------------------------------------------------
+
+def test_live_partition_open_update_close():
+    r = _router(k=4, update_threshold=0.25)
+    x = _data(64, 3, seed=7)
+    res = r.open_partition("live", x).result()
+    assert res.labels.shape == (64,)
+
+    # in-threshold delta takes the update path and keeps balance
+    res2 = r.submit_update("live", added=_data(4, 3, seed=8)).result()
+    assert res2.updated
+    labels = r.partition_labels("live")
+    assert labels.shape == (68,)
+    counts = np.bincount(labels, minlength=4)
+    assert counts.min() >= 68 // 4 and counts.max() <= -(-68 // 4)
+
+    # over-threshold delta falls back loudly; the router counts it
+    with pytest.warns(RuntimeWarning, match="full warm repartition"):
+        res3 = r.submit_update("live", added=_data(40, 3, seed=9)).result()
+    assert res3.updated is False
+    m = r.metrics()
+    assert m.update_calls == 2 and m.update_fallbacks == 1
+    assert m.update_fallback_rate == 0.5 and m.live_partitions == 1
+
+    assert r.live_partition("live").n == 108
+    r.close_partition("live")
+    assert r.metrics().live_partitions == 0
+    with pytest.raises(ValueError, match="not open"):
+        r.submit_update("live", added=_data(4, 3, seed=8))
+
+
+def test_live_partition_guards():
+    r = _router(k=4)
+    r.open_partition("dup", _data(64, 3, seed=1)).result()
+    with pytest.raises(ValueError, match="already open"):
+        r.open_partition("dup", _data(64, 3, seed=2))
+    with pytest.raises(ValueError, match="not open"):
+        r.submit_update("missing", added=_data(4, 3, seed=3))
+    with pytest.raises(KeyError):
+        r.live_partition("missing")
+    # a failed open must not reserve the name
+    with pytest.raises(ValueError, match="rows"):
+        r.open_partition("tiny", _data(2, 3, seed=4))
+    r.open_partition("tiny", _data(64, 3, seed=5)).result()
+    assert r.metrics().live_partitions == 2
