@@ -38,10 +38,17 @@ class BenchRecorder:
         self.rows: list[dict] = []
 
     def add(self, bench: str, shape: str, wall_s: float,
-            objective: float | None = None):
-        self.rows.append(dict(zip(BENCH_SCHEMA, (
+            objective: float | None = None,
+            extra: dict | None = None):
+        row = dict(zip(BENCH_SCHEMA, (
             bench, shape, float(wall_s),
-            None if objective is None else float(objective)))))
+            None if objective is None else float(objective))))
+        if extra:
+            # measured side-channels (peak-memory bytes, gap certificates...)
+            # ride along; the regression gate only reads the schema keys, so
+            # extra columns inform without ever breaking the baseline match
+            row.update(extra)
+        self.rows.append(row)
 
     def write(self, path: str):
         with open(path, "w") as f:

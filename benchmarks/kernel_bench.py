@@ -50,7 +50,7 @@ import jax.numpy as jnp
 from repro.core.assignment import (AuctionConfig, auction_solve,
                                    available_solvers, get_solver, scipy_solve)
 from repro.kernels import bid_top2, bid_top2_ref, cdist, cdist_ref
-from repro.kernels.ops import resolve_path
+from repro.kernels.ops import gather_path, gather_rows, resolve_path
 
 from benchmarks.common import BenchRecorder, row, timed
 
@@ -78,6 +78,30 @@ def run(full: bool = False, smoke: bool = False,
             f"flat_us={t * 1e6:.1f};path={resolve_path(m, k)}")
         rec.add(f"kernel/cdist_chunked/4x{m // 4}x{k}x{d}",
                 f"4x{m // 4}x{k}x{d}", t_c)
+
+    # --- streaming chunk gather (double-buffered DMA on TPU) --------------
+    # The per-chunk row movement of aba_stream: gather (m,) rows from an
+    # (n, d) table, then the fused gather+cdist that hides the next block's
+    # DMA behind the current block's compute.  On CPU both resolve to the
+    # XLA reference gather (path= records it); the kernel path is exercised
+    # under interpret=True by tests and measured for real on TPU.
+    gat_shapes = [(4096, 512, 32)] if smoke else [(65536, 8192, 64)]
+    for n_g, m_g, d_g in gat_shapes:
+        tbl = jnp.asarray(rng.normal(size=(n_g, d_g)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, n_g, size=(m_g,)), jnp.int32)
+        c = jnp.asarray(rng.normal(size=(64, d_g)).astype(np.float32))
+        _, t_g = timed(lambda: gather_rows(tbl, idx).block_until_ready(),
+                       repeats=5)
+        row(f"kernel/gather_rows/{n_g}x{m_g}x{d_g}", t_g,
+            f"path={gather_path()}")
+        rec.add(f"kernel/gather_rows/{n_g}x{m_g}x{d_g}",
+                f"{n_g}x{m_g}x{d_g}", t_g)
+        _, t_gc = timed(
+            lambda: cdist(tbl, c, idx=idx).block_until_ready(), repeats=5)
+        row(f"kernel/cdist_gather/{n_g}x{m_g}x{d_g}", t_gc,
+            f"gather_us={t_g * 1e6:.1f};path={gather_path()}")
+        rec.add(f"kernel/cdist_gather/{n_g}x{m_g}x{d_g}",
+                f"{n_g}x{m_g}x{d_g}", t_gc)
 
     # --- fused vs naive bidding round ------------------------------------
     bid_shapes = [(128, 256, 16)] if smoke else \

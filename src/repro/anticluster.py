@@ -94,6 +94,21 @@ class AnticlusterSpec:
         within its groups, and the global constraint (5) still holds exactly
         (ceil/floor compose across levels, see ``repro.core.hierarchical``).
       n_categories: static category count; 0 infers it from ``categories``.
+      fairness: proportional fairness over one or more protected attributes
+        -- the multi-attribute generalization of constraint (5).  Takes a
+        single int attribute array (exactly the ``categories=`` constraint,
+        bit-for-bit), a dict / list / tuple of several, or a stacked
+        ``(n, A)`` int array (last axis = attributes).  With several
+        attributes the *joint* attribute cell drives the Section 4.3
+        rearrangement and every cluster is capped at
+        ``ceil(|N_av| / k)`` members of each attribute value ``av``
+        independently, so each cluster's attribute marginals track the
+        population's proportions.  Multi-attribute caps are best-effort
+        where attribute transversals conflict (the LAP must place k rows in
+        distinct clusters per batch; an infeasible quota combination
+        overflows by at most the conflicting rows -- single-attribute
+        fairness is exact).  Mutually exclusive with ``categories=``;
+        streams, shards and composes everywhere categories do.
       solver: LAP backend name in the solver registry ("auction",
         "auction_fused", "greedy", "scipy", or anything you
         ``register_solver``-ed).
@@ -110,10 +125,14 @@ class AnticlusterSpec:
         "auction_fused" so each batch LAP is matrix-free (the (k, k) value
         matrix is never built -- the paper's Tables 8/10 operating range).
         Applies to the flat path, the first (full-data) hierarchical level,
-        and each shard's local solve under ``mesh``.  Streaming needs flat
-        category-free unmasked input: an explicit int raises otherwise,
-        ``"auto"`` quietly stays dense.  With ``chunk_size >= n`` labels are
-        bit-for-bit identical to the dense path.
+        and each shard's local solve under ``mesh``.  Categories, fairness
+        and valid_mask all stream (the Section 4.3 rearrangement runs as a
+        single chunked rank-in-category pass, the quota counts ride the
+        assignment scan); only stacked (G, M, D) input stays dense -- an
+        explicit int raises there, ``"auto"`` falls back with a
+        ``RuntimeWarning`` (once per route) naming the reason.  With
+        ``chunk_size >= n`` labels are bit-for-bit identical to the dense
+        path.
       max_k: largest admissible LAP size for the auto plan.
       mesh: optional ``jax.sharding.Mesh`` -- an orthogonal *placement* axis
         of the same API, not a separate mode: execution routes through
@@ -152,6 +171,7 @@ class AnticlusterSpec:
     variant: str = "auto"
     categories: Any = None
     n_categories: int = 0
+    fairness: Any = None
     solver: str = "auction"
     auction_config: AuctionConfig = AuctionConfig()
     plan: Any = "auto"
@@ -186,6 +206,13 @@ class AnticlusterSpec:
                  or self.chunk_size < 1):
             raise ValueError(f'chunk_size must be None, "auto", or a '
                              f"positive int; got {self.chunk_size!r}")
+        if self.fairness is not None:
+            if self.categories is not None:
+                raise ValueError(
+                    "categories= and fairness= are mutually exclusive "
+                    "(single-attribute fairness IS the categories= "
+                    "constraint -- pass just one of them)")
+            _fairness_attrs(self.fairness)  # validate shape/dtype up front
 
     def evolve(self, **changes) -> "AnticlusterSpec":
         """A new spec with ``changes`` applied -- the supported public
@@ -399,6 +426,95 @@ def _mesh_shards(spec: "AnticlusterSpec") -> int:
     return math.prod(spec.mesh.shape[a] for a in axes)
 
 
+def _fairness_attrs(fairness) -> list:
+    """Normalize ``AnticlusterSpec.fairness`` to a list of integer attribute
+    arrays (one per protected attribute), validating as it goes.
+
+    Accepted forms: a dict (attribute name -> codes; insertion order), a
+    list/tuple of arrays, a single 1-D array/sequence, or a stacked 2-D
+    ``(n, A)`` array whose last axis is the attribute axis.  (For stacked
+    (G, M, D) inputs pass a list/dict of (G, M) arrays -- a bare 2-D array
+    is always read as (n, A).)
+    """
+    if isinstance(fairness, dict):
+        items = list(fairness.values())
+    elif isinstance(fairness, (list, tuple)):
+        items = list(fairness)
+        if items and np.ndim(items[0]) == 0:
+            items = [fairness]  # one attribute given as a plain sequence
+    else:
+        arr = np.asarray(fairness)
+        items = ([arr[..., a] for a in range(arr.shape[-1])]
+                 if arr.ndim == 2 else [arr])
+    if not items:
+        raise ValueError("fairness= needs at least one attribute")
+    attrs = []
+    for a, item in enumerate(items):
+        arr = np.asarray(item)
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"fairness attribute {a} must be integer-coded, got dtype "
+                f"{arr.dtype} (encode the levels as 0..C-1)")
+        if arr.size and int(arr.min()) < 0:
+            raise ValueError(f"fairness attribute {a} has negative codes")
+        if attrs and arr.shape != attrs[0].shape:
+            raise ValueError(
+                f"fairness attributes disagree on shape: {arr.shape} vs "
+                f"{attrs[0].shape}")
+        attrs.append(arr)
+    return attrs
+
+
+def _resolve_constraints(spec: "AnticlusterSpec"):
+    """``(categories, n_categories, fair_codes, n_fair_codes)`` as the cores
+    take them, from either ``spec.categories`` or ``spec.fairness``.
+
+    One attribute (or plain ``categories=``) resolves to the exact
+    constraint-(5) path (``fair_codes`` stays None -- bit-for-bit the
+    categorical core).  Several attributes resolve to the *joint* mixed-radix
+    cell as the rearrangement category plus per-attribute offset codes into
+    one shared ``sum(C_a)``-wide quota axis (see ``aba_core``'s
+    ``fair_codes``).
+    """
+    if spec.fairness is None:
+        cats = spec.categories
+        n_categories = spec.n_categories
+        if cats is not None:
+            cats = jnp.asarray(cats, jnp.int32)
+            if n_categories <= 0:
+                n_categories = int(np.asarray(cats).max()) + 1
+        return cats, n_categories, None, 0
+    attrs = _fairness_attrs(spec.fairness)
+    sizes = [int(a.max()) + 1 if a.size else 1 for a in attrs]
+    if len(attrs) == 1:
+        # one attribute degenerates to the exact categories= constraint
+        return jnp.asarray(attrs[0], jnp.int32), sizes[0], None, 0
+    joint = np.zeros(attrs[0].shape, np.int64)
+    for a, s in zip(attrs, sizes):
+        joint = joint * s + a
+    offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    codes = np.stack([a + o for a, o in zip(attrs, offs)], axis=-1)
+    return (jnp.asarray(joint, jnp.int32), int(np.prod(sizes)),
+            jnp.asarray(codes, jnp.int32), int(sum(sizes)))
+
+
+_WARNED_FALLBACKS: set = set()
+
+
+def _warn_dense_fallback(key, msg: str) -> None:
+    """RuntimeWarning (once per route key) for a silent-degradation point.
+
+    Streaming fallbacks change *memory*, not labels, so they warn instead of
+    raising -- but only once per distinct route, so a per-epoch engine loop
+    does not spam.  docs/ARCHITECTURE.md's fallback matrix lists every
+    caller.
+    """
+    if key in _WARNED_FALLBACKS:
+        return
+    _WARNED_FALLBACKS.add(key)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
 def _route(spec: AnticlusterSpec, shape: tuple[int, ...],
            has_categories: bool, has_valid_mask: bool):
     """Static dispatch decisions shared by ``anticluster()`` and the engine.
@@ -412,21 +528,31 @@ def _route(spec: AnticlusterSpec, shape: tuple[int, ...],
     if len(shape) not in (2, 3):
         raise ValueError(f"x must be (n, d) or (G, M, D), got {shape}")
     plan = spec.resolve_plan()
-    streamable = (len(shape) == 2 and not has_categories
-                  and not has_valid_mask)
+    streamable = len(shape) == 2  # categories/fairness/valid_mask all stream
     if spec.chunk_size is not None and not streamable \
             and spec.chunk_size != "auto":
         raise NotImplementedError(
-            "chunk_size streaming needs flat (n, d) input without "
-            'categories or valid_mask; chunk_size="auto" falls back to the '
-            "dense core for those")
+            "chunk_size streaming needs flat (n, d) input; stacked "
+            '(G, M, D) batches stay dense (chunk_size="auto" falls back '
+            "loudly) -- split the groups into flat calls to stream them")
+    if spec.chunk_size is not None and len(shape) == 3 \
+            and shape[1] >= _AUTO_STREAM_MIN:
+        _warn_dense_fallback(
+            ("stacked", shape[1]),
+            f"chunk_size streaming does not apply to stacked (G, M, D) "
+            f"input; running the dense core on {shape} (split the groups "
+            "into flat anticluster() calls to stream them)")
 
     def chunk_for(n_level: int, k_level: int) -> int | None:
         return spec.resolve_chunk(n_level, k_level) if streamable else None
 
     n = shape[0]
     solver = spec.solver
-    if spec.chunk_size == "auto" and solver == "auction" and streamable:
+    if spec.chunk_size == "auto" and solver == "auction" and streamable \
+            and not has_categories:
+        # (with categories the quota mask can't be factored -- _assign_batch
+        # would fall back to the fused solver's dense solve anyway, so the
+        # plain auction stays the stratified default)
         n_level = n // max(_mesh_shards(spec), 1)
         if chunk_for(n_level, plan[0]) is not None:
             # at scale the matrix-free factored auction is the default engine
@@ -470,18 +596,21 @@ def _route(spec: AnticlusterSpec, shape: tuple[int, ...],
 
 
 def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
-               chunk, cats, n_categories: int, vm,
-               prices=None, return_state: bool = False):
+               chunk, cats, n_categories: int, vm, codes=None,
+               n_codes: int = 0, prices=None, return_state: bool = False):
     """Dispatch one solve to the right core (shared engine/one-shot path).
 
     ``prices`` is the per-level tuple from :class:`ABAState` (flat /
     streamed / stacked runs use a 1-tuple) or, in mesh mode, the per-shard
     stacks from :class:`ShardedABAState`; ``None`` is the cold path and is
-    bit-identical.  With ``return_state`` the return is ``(labels, state)``
-    where ``state["prices"]`` is the per-level tuple and ``state["mu"]`` the
-    level-1 centrality centroid ((d,); (G, d) for stacked input) -- except
-    in mesh mode, where the state carries the per-shard moments directly
-    (``"moment_sum"`` (S, d) / ``"moment_count"`` (S,)).
+    bit-identical.  ``codes`` / ``n_codes`` are the multi-attribute fairness
+    quota codes from :func:`_resolve_constraints` (None for plain categories
+    / single-attribute fairness).  With ``return_state`` the return is
+    ``(labels, state)`` where ``state["prices"]`` is the per-level tuple and
+    ``state["mu"]`` the level-1 centrality centroid ((d,); (G, d) for
+    stacked input) -- except in mesh mode, where the state carries the
+    per-shard moments directly (``"moment_sum"`` (S, d) /
+    ``"moment_count"`` (S,)).
     """
     kw = dict(variant=spec.variant, solver=solver,
               auction_config=spec.auction_config)
@@ -490,12 +619,14 @@ def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
         return sharded_core(
             x, spec.k, spec.mesh, data_axes=spec.data_axes,
             max_k=spec.max_k, batched=spec.batched, chunk_size=chunk,
-            categories=cats, n_categories=n_categories, valid_mask=vm,
+            categories=cats, n_categories=n_categories,
+            fair_codes=codes, n_fair_codes=n_codes, valid_mask=vm,
             prices=prices, return_state=return_state, **kw)
     p0 = None if prices is None else prices[0]
     if mode == "stacked":
         out = aba_core(x, spec.k, vm, categories=cats,
-                       n_categories=n_categories, prices=p0,
+                       n_categories=n_categories, fair_codes=codes,
+                       n_fair_codes=n_codes, prices=p0,
                        return_state=return_state, **kw)
         if not return_state:
             return out
@@ -504,11 +635,14 @@ def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
     if mode == "hier":
         return hierarchical_core(x, plan, categories=cats,
                                  n_categories=n_categories,
+                                 fair_codes=codes, n_fair_codes=n_codes,
                                  batched=spec.batched, chunk_size=chunk,
                                  prices=prices, return_state=return_state,
                                  **kw)
     if mode == "stream":
-        out = aba_stream(x, spec.k, chunk, prices=p0,
+        out = aba_stream(x, spec.k, chunk, categories=cats,
+                         n_categories=n_categories, fair_codes=codes,
+                         n_fair_codes=n_codes, valid_mask=vm, prices=p0,
                          return_state=return_state, **kw)
         if not return_state:
             return out
@@ -517,7 +651,9 @@ def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
     # flat: the G=1 specialization of the stacked core
     out = aba_core(x[None], spec.k, None if vm is None else vm[None],
                    categories=None if cats is None else cats[None],
-                   n_categories=n_categories, prices=p0,
+                   n_categories=n_categories,
+                   fair_codes=None if codes is None else codes[None],
+                   n_fair_codes=n_codes, prices=p0,
                    return_state=return_state, **kw)
     if not return_state:
         return out[0]
@@ -645,19 +781,14 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
         x = jnp.asarray(kplus_augment(np.asarray(x), spec.kplus_moments))
     x = x.astype(spec.dtype)
 
-    cats = spec.categories
-    n_categories = spec.n_categories
-    if cats is not None:
-        cats = jnp.asarray(cats, jnp.int32)
-        if n_categories <= 0:
-            n_categories = int(np.asarray(cats).max()) + 1
+    cats, n_categories, codes, n_codes = _resolve_constraints(spec)
     vm = None if spec.valid_mask is None else jnp.asarray(
         spec.valid_mask, jnp.bool_)
     get_solver(spec.solver)  # fail fast with the registered-name list
 
     n_rows = x.shape[0]
     pad = _mesh_pad_rows(spec, tuple(x.shape), vm is not None)
-    x_solve, vm_solve, cats_solve = x, vm, cats
+    x_solve, vm_solve, cats_solve, codes_solve = x, vm, cats, codes
     if pad:
         x_solve = jnp.concatenate(
             [x, jnp.zeros((pad, x.shape[1]), x.dtype)])
@@ -666,6 +797,9 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
         if cats is not None:  # padding rows draw an arbitrary stratum
             cats_solve = jnp.concatenate(
                 [cats, jnp.zeros((pad,), jnp.int32)])
+        if codes is not None:
+            codes_solve = jnp.concatenate(
+                [codes, jnp.zeros((pad, codes.shape[-1]), jnp.int32)])
     mode, plan, solver, chunk = _route(spec, tuple(x_solve.shape),
                                        cats is not None,
                                        vm_solve is not None)
@@ -673,6 +807,7 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
     want_state = spec.stats and mode != "mesh"
     out = _call_core(x_solve, spec, mode, plan, solver, chunk,
                      cats_solve, n_categories, vm_solve,
+                     codes=codes_solve, n_codes=n_codes,
                      return_state=want_state)
     labels, st = out if want_state else (out, None)
     if mode == "mesh":
@@ -760,11 +895,8 @@ class AnticlusterEngine:
                 "(spec.batched=True)")
         get_solver(spec.solver)  # fail fast
         self.spec = spec
-        self._cats = (None if spec.categories is None
-                      else jnp.asarray(spec.categories, jnp.int32))
-        self._n_categories = spec.n_categories
-        if self._cats is not None and self._n_categories <= 0:
-            self._n_categories = int(np.asarray(self._cats).max()) + 1
+        (self._cats, self._n_categories,
+         self._codes, self._n_codes) = _resolve_constraints(spec)
         self._vm = (None if spec.valid_mask is None
                     else jnp.asarray(spec.valid_mask, jnp.bool_))
         self._fns: dict = {}
@@ -1034,17 +1166,22 @@ class AnticlusterEngine:
         mode, plan, solver, chunk = self._routed(
             shape, True if per_call_mask else None)
         cats, ncats = self._cats, self._n_categories
+        codes, ncodes = self._codes, self._n_codes
         if (cats is not None and len(shape) == 2
                 and cats.shape[0] < shape[0]):
             # mesh auto-pad: padding rows draw an arbitrary stratum (they
             # are masked out, so quotas over real rows are unaffected)
-            cats = jnp.concatenate(
-                [cats, jnp.zeros((shape[0] - cats.shape[0],), jnp.int32)])
+            pad_n = shape[0] - cats.shape[0]
+            cats = jnp.concatenate([cats, jnp.zeros((pad_n,), jnp.int32)])
+            if codes is not None:
+                codes = jnp.concatenate(
+                    [codes, jnp.zeros((pad_n, codes.shape[-1]), jnp.int32)])
 
         def body(x, prices, vm):
             self._trace_count += 1  # python side effect: runs once per trace
             labels, st = _call_core(x, spec, mode, plan, solver, chunk,
-                                    cats, ncats, vm, prices=prices,
+                                    cats, ncats, vm, codes=codes,
+                                    n_codes=ncodes, prices=prices,
                                     return_state=True)
             # re-center the dual prices per group (the auction is invariant
             # to a uniform shift) so carried state stays bounded over epochs

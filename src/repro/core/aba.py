@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.assignment import AuctionConfig, get_solver
+from repro.kernels.ops import gather_rows
 
 _MASK_COST = -1e9  # categorical upper-bound mask (paper 4.3)
 
@@ -110,6 +111,12 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
     the streaming core's chunked scan both call it, which is what makes the
     ``chunk_size >= n`` parity guarantee hold bit-for-bit.
 
+    ``cb`` carries each row's quota codes as a (G, k, A) stack -- A = 1 with
+    plain ``categories`` (the code IS the category), A > 1 for multi-attribute
+    fairness (one offset code per attribute into a shared ``ub`` axis).  A
+    cluster is closed for a row when ANY of the row's codes is at its
+    ``ub`` quota, which with A = 1 degenerates exactly to constraint (5).
+
     ``prices`` warm-starts the batch LAP from a carried (G, k) price vector
     (``None`` = zeros: the cold path, unchanged); the solver's final prices
     are returned so a stateful caller can carry them into its next run.
@@ -127,9 +134,12 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
                 + jnp.sum(cents * cents, axis=-1)[:, None, :])
         cost = jnp.where(is_real[..., None], cost, 0.0)  # neutral dummies
         if ub is not None:
-            full = (jnp.take_along_axis(
-                cat_counts, cb[:, None, :], axis=2).swapaxes(1, 2)
-                >= jnp.take_along_axis(ub, cb, axis=1)[..., None])
+            # cnt[g, i, j, a] = cat_counts[g, j, cb[g, i, a]]: how many of
+            # row i's code-a peers cluster j already holds
+            cnt = jnp.take_along_axis(
+                cat_counts[:, None], cb[:, :, None, :], axis=3)
+            quota = jnp.take_along_axis(ub[:, None], cb, axis=2)
+            full = jnp.any(cnt >= quota[:, :, None, :], axis=-1)
             cost = jnp.where(jnp.logical_and(full, is_real[..., None]),
                              _MASK_COST, cost)
         assign, p_out = solver_obj.solve(cost, auction_config,
@@ -142,8 +152,9 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
     cents = cents + upd / jnp.maximum(
         new_counts, 1)[..., None].astype(jnp.float32)
     if ub is not None:
-        cat_counts = cat_counts.at[garange, assign, cb].add(
-            is_real.astype(jnp.int32))
+        cat_counts = cat_counts.at[
+            garange[..., None], assign[..., None], cb].add(
+            is_real[..., None].astype(jnp.int32))
     return cents, new_counts, cat_counts, assign, p_out
 
 
@@ -153,8 +164,8 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "variant", "n_categories", "solver",
-                     "auction_config", "return_state"),
+    static_argnames=("k", "variant", "n_categories", "n_fair_codes",
+                     "solver", "auction_config", "return_state"),
 )
 def aba_core(
     x: jnp.ndarray,
@@ -164,6 +175,8 @@ def aba_core(
     variant: Variant = "base",
     categories: jnp.ndarray | None = None,
     n_categories: int = 0,
+    fair_codes: jnp.ndarray | None = None,
+    n_fair_codes: int = 0,
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
     prices: jnp.ndarray | None = None,
@@ -191,6 +204,17 @@ def aba_core(
         applied independently per group (stratification composes across
         hierarchical levels).
       n_categories: static number of categories (required with categories).
+      fair_codes: optional (G, M, A) int32 multi-attribute quota codes --
+        the proportional-fairness generalization of constraint (5).  The
+        rearrangement still follows ``categories`` (the front door passes
+        the joint attribute cell there), but the quota upper bounds are
+        enforced per *code*: each of a row's A codes indexes a shared
+        ``n_fair_codes``-wide count axis (attributes occupy disjoint offset
+        ranges) and a cluster is closed once any code hits
+        ``ceil(count(code)/k)``.  ``None`` (with categories) is exactly the
+        single-attribute case: codes = categories, A = 1, bit-identical to
+        the pre-fairness behaviour.
+      n_fair_codes: static total code count (required with fair_codes).
       solver: registry name (see ``repro.core.assignment.register_solver``);
         defaults: "auction" | "auction_fused" | "greedy" | "scipy".  A solver
         with a matrix-free ``factored`` path (e.g. "auction_fused", whose
@@ -272,9 +296,22 @@ def aba_core(
     real = real.reshape(G, n_batches, k)
 
     x_ext = jnp.concatenate([xf, jnp.zeros((G, 1, D), jnp.float32)], 1)
+    if fair_codes is not None and categories is None:
+        raise ValueError("fair_codes requires categories (the joint "
+                         "attribute cell drives the 4.3 rearrangement)")
     if categories is not None:
-        cat_ext = jnp.concatenate(
-            [cat_i, jnp.zeros((G, 1), jnp.int32)], 1)
+        # quota codes: A=1 plain categories (code IS the category) or the
+        # (G, M, A) multi-attribute fairness codes sharing one count axis
+        if fair_codes is not None:
+            if n_fair_codes <= 0:
+                raise ValueError("n_fair_codes must be set with fair_codes")
+            codes_i = fair_codes.astype(jnp.int32)
+            n_codes = n_fair_codes
+        else:
+            codes_i = cat_i[..., None]
+            n_codes = n_categories
+        codes_ext = jnp.concatenate(
+            [codes_i, jnp.zeros((G, 1, codes_i.shape[-1]), jnp.int32)], 1)
 
     # --- batch 1 initializes centroids ---------------------------------------
     first_idx = jnp.minimum(batches[:, 0], M)
@@ -285,13 +322,14 @@ def aba_core(
         valid_i = (jnp.ones((G, M), jnp.int32) if valid_mask is None
                    else valid_mask.astype(jnp.int32))
         ub = -(-jnp.maximum(
-            jnp.zeros((G, n_categories), jnp.int32).at[garange, cat_i].add(
-                valid_i), 0) // k)  # (G, C): ceil(|N_g| / k) per group
+            jnp.zeros((G, n_codes), jnp.int32).at[
+                garange[..., None], codes_i].add(valid_i[..., None]),
+            0) // k)  # (G, n_codes): ceil(|N_code| / k) per group
         cat_counts0 = (
-            jnp.zeros((G, k, n_categories), jnp.int32)
-            .at[garange, labels0,
-                jnp.take_along_axis(cat_ext, first_idx, axis=1)]
-            .add(real[:, 0].astype(jnp.int32)))
+            jnp.zeros((G, k, n_codes), jnp.int32)
+            .at[garange[..., None], labels0[..., None],
+                jnp.take_along_axis(codes_ext, first_idx[..., None], axis=1)]
+            .add(real[:, 0].astype(jnp.int32)[..., None]))
     else:
         ub = None
         cat_counts0 = jnp.zeros((G, k, 1), jnp.int32)
@@ -316,7 +354,8 @@ def aba_core(
         cents, counts, cat_counts, _p_last = carry
         idx, is_real = inp  # (G, k) each
         xb = jnp.take_along_axis(x_ext, jnp.minimum(idx, M)[..., None], axis=1)
-        cb = (jnp.take_along_axis(cat_ext, jnp.minimum(idx, M), axis=1)
+        cb = (jnp.take_along_axis(codes_ext, jnp.minimum(idx, M)[..., None],
+                                  axis=1)
               if ub is not None else None)
         # every batch warm-starts from the SAME carried epoch prices (not the
         # previous batch's): the cold path (prices=None -> per-batch zeros)
@@ -347,8 +386,9 @@ def aba_core(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "chunk_size", "variant", "solver",
-                     "auction_config", "return_state"),
+    static_argnames=("k", "chunk_size", "variant", "n_categories",
+                     "n_fair_codes", "solver", "auction_config",
+                     "return_state"),
 )
 def aba_stream(
     x: jnp.ndarray,
@@ -356,6 +396,11 @@ def aba_stream(
     chunk_size: int,
     *,
     variant: Variant = "base",
+    categories: jnp.ndarray | None = None,
+    n_categories: int = 0,
+    fair_codes: jnp.ndarray | None = None,
+    n_fair_codes: int = 0,
+    valid_mask: jnp.ndarray | None = None,
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
     prices: jnp.ndarray | None = None,
@@ -373,29 +418,51 @@ def aba_stream(
     O(chunk_size * d + k * d) in the feature dimension (plus the O(n)
     scalar dist/order/label vectors every path needs), not O(n * d): there
     is no concatenated/permuted dataset copy anywhere (chunks are dynamic
-    slices; sentinel rows are clamped gathers masked by ``is_real``).  With a ``factored`` solver
+    slices; sentinel rows are clamped gathers masked by ``is_real``).  On
+    TPU the per-chunk gather runs through the double-buffered DMA kernel
+    (``repro.kernels.ops.gather_rows``) so the next chunk's row movement
+    overlaps the current chunk's batch solves.  With a ``factored`` solver
     (e.g. "auction_fused") each batch's LAP is matrix-free on top: the
     (k, k) value matrix is never built either (`bid_top2` streams column
     tiles through VMEM on TPU).
 
+    ``categories`` / ``fair_codes`` / ``valid_mask`` stream too (the bans
+    lifted): the Section 4.3 rearrangement becomes a single pass over the
+    centrality-sorted category stream -- an outer scan carries per-category
+    running counts while each chunk ranks its rows locally with one
+    (chunk, C) one-hot cumsum -- and the assignment scan carries the
+    (k, n_codes) per-cluster quota counts, so the categorical working set is
+    O(chunk * C + k * C) and never the dense (n, C) one-hot.  The rank pass
+    is integer-exact, so the rearranged order is bit-identical to the dense
+    categorical path at ANY chunk size; quota masking runs through the same
+    ``_assign_batch`` as the dense core.
+
     Every batch runs through the same ``_assign_batch`` step as the dense
     core, so with ``chunk_size >= n`` the labels are bit-for-bit identical
-    to ``aba_core(x[None], k)[0]`` with the same solver/variant (the parity
-    contract tested in tests/test_anticluster.py).  Larger chunks only
-    change *memory*, never assignment order; smaller chunks are exactly
-    equivalent too except that the global centroid is accumulated chunk by
-    chunk (same sum, same result -- the permutation and all LAPs see
-    identical inputs).
-
-    Categories and valid_mask are not supported here -- the front door
-    routes those through the dense core.
+    to ``aba_core(x[None], k)[0]`` with the same
+    solver/variant/categories/fairness/mask (the parity contract tested in
+    tests/test_anticluster.py and tests/test_stream_categorical.py).
+    Larger chunks only change *memory*, never assignment order; smaller
+    chunks are exactly equivalent too except that the global centroid is
+    accumulated chunk by chunk (same sum, same result up to float summation
+    order -- the permutation and all LAPs see identical inputs).
 
     Args:
       x: (n, d) float features.
       k: number of anticlusters (static).
       chunk_size: rows processed per outer step (static); rounded down to a
         multiple of k (at least one k-batch).
-      variant: "base" | "interleave" | "auto" (same rule as ``aba_core``).
+      variant: "base" | "interleave" | "auto" (same rule as ``aba_core``;
+        categories take precedence, and the static interleave is skipped
+        under ``valid_mask`` exactly like the dense core).
+      categories: optional (n,) int32 in [0, n_categories) -- Section 4.3.
+      n_categories: static category count (required with categories).
+      fair_codes: optional (n, A) int32 multi-attribute quota codes (see
+        ``aba_core``); requires ``categories`` (the joint attribute cell).
+      n_fair_codes: static total code count (required with fair_codes).
+      valid_mask: optional (n,) bool; False rows are padding (arbitrary
+        labels, masked out of moments/quotas), same contract as the dense
+        core.
       solver / auction_config: LAP backend (registry name) and schedule.
       prices: optional (1, k) float32 warm-start prices, same contract as
         ``aba_core`` (every batch LAP starts from this carried vector; None
@@ -414,6 +481,22 @@ def aba_stream(
     xf = x.astype(jnp.float32)
     cpb = max(1, int(chunk_size) // k)  # batches per chunk
     chunk = cpb * k
+    vm = None if valid_mask is None else valid_mask.astype(jnp.bool_)
+    if fair_codes is not None and categories is None:
+        raise ValueError("fair_codes requires categories (the joint "
+                         "attribute cell drives the 4.3 rearrangement)")
+    if categories is not None:
+        if n_categories <= 0:
+            raise ValueError("n_categories must be set with categories")
+        cat_i = categories.astype(jnp.int32)
+        if fair_codes is not None:
+            if n_fair_codes <= 0:
+                raise ValueError("n_fair_codes must be set with fair_codes")
+            codes_i = fair_codes.astype(jnp.int32)   # (n, A)
+            n_codes = n_fair_codes
+        else:
+            codes_i = cat_i[:, None]                 # A = 1: code IS the cat
+            n_codes = n_categories
 
     # --- centrality: running moments + chunked distance pass ---------------
     # No padded O(n*d) copy: chunks are dynamic slices of the input.  The
@@ -427,23 +510,49 @@ def aba_stream(
         # contract "chunk_size >= n == dense labels" holds structurally
         # (rounding down to a k-multiple must not switch the float reduction
         # order of the centrality mean).
-        mu = jnp.mean(xf, axis=0)
-        dist = jnp.sum((xf - mu[None, :]) ** 2, axis=-1)
+        if vm is None:
+            mu = jnp.mean(xf, axis=0)
+            dist = jnp.sum((xf - mu[None, :]) ** 2, axis=-1)
+        else:
+            w = vm.astype(jnp.float32)
+            mu = jnp.sum(xf * w[:, None], axis=0) / jnp.maximum(
+                jnp.sum(w), 1.0)
+            dist = jnp.where(vm,
+                             jnp.sum((xf - mu[None, :]) ** 2, axis=-1),
+                             -jnp.inf)  # padding sorts to the end
     else:
         starts = jnp.minimum(
             jnp.arange(n_chunks, dtype=jnp.int32) * chunk, n - chunk)
         offs = jnp.arange(n_chunks, dtype=jnp.int32) * chunk - starts
         crange = jnp.arange(chunk, dtype=jnp.int32)
 
-        def moment_step(acc, inp):
-            s, off = inp
-            xc = jax.lax.dynamic_slice(xf, (s, 0), (chunk, d))
-            w = (crange >= off).astype(jnp.float32)[:, None]
-            return acc + jnp.sum(xc * w, axis=0), None
+        if vm is None:
+            def moment_step(acc, inp):
+                s, off = inp
+                xc = jax.lax.dynamic_slice(xf, (s, 0), (chunk, d))
+                w = (crange >= off).astype(jnp.float32)[:, None]
+                return acc + jnp.sum(xc * w, axis=0), None
 
-        total, _ = jax.lax.scan(
-            moment_step, jnp.zeros((d,), jnp.float32), (starts, offs))
-        mu = total / n
+            total, _ = jax.lax.scan(
+                moment_step, jnp.zeros((d,), jnp.float32), (starts, offs))
+            mu = total / n
+        else:
+            def moment_step(acc, inp):
+                s, off = inp
+                xc = jax.lax.dynamic_slice(xf, (s, 0), (chunk, d))
+                wc = jnp.logical_and(
+                    crange >= off,
+                    jax.lax.dynamic_slice(vm, (s,), (chunk,)))
+                wf = wc.astype(jnp.float32)
+                tot, cnt = acc
+                return (tot + jnp.sum(xc * wf[:, None], axis=0),
+                        cnt + jnp.sum(wf)), None
+
+            (total, cnt), _ = jax.lax.scan(
+                moment_step,
+                (jnp.zeros((d,), jnp.float32), jnp.zeros((), jnp.float32)),
+                (starts, offs))
+            mu = total / jnp.maximum(cnt, 1.0)
 
         def dist_step(buf, inp):
             s, _off = inp
@@ -453,11 +562,48 @@ def aba_stream(
 
         dist, _ = jax.lax.scan(
             dist_step, jnp.zeros((n,), jnp.float32), (starts, offs))
+        if vm is not None:
+            dist = jnp.where(vm, dist, -jnp.inf)
     order = jnp.argsort(-dist, stable=True).astype(jnp.int32)
 
-    # --- rearrangement (static; same rule as the dense core) ---------------
-    if variant == "interleave" or (variant == "auto" and n // k <= 8):
+    # --- rearrangement (same rules as the dense core) -----------------------
+    if categories is not None:
+        cat_sorted = cat_i[order]
+        if vm is not None:
+            # padding gets a virtual category that sorts last (dense rule)
+            cat_sorted = jnp.where(vm[order], cat_sorted, n_categories - 1)
+        # Single-pass rank-in-category over the sorted category stream: the
+        # outer scan carries the (C,) per-category running counts, each
+        # chunk ranks its rows locally with one (chunk, C) one-hot cumsum --
+        # the dense (n, C) one-hot never materializes.  Integer-exact, so
+        # the rearranged order is bit-identical to the dense categorical
+        # path at ANY chunk size.
+        rpad = n_chunks * chunk - n
+        cs_p = (jnp.concatenate([cat_sorted, jnp.zeros((rpad,), jnp.int32)])
+                if rpad else cat_sorted)
+        in_rng = jnp.arange(n_chunks * chunk, dtype=jnp.int32) < n
+
+        def rank_step(run, inp):
+            cat_c, ok_c = inp
+            oh = (jax.nn.one_hot(cat_c, n_categories, dtype=jnp.int32)
+                  * ok_c.astype(jnp.int32)[:, None])
+            local = jnp.cumsum(oh, axis=0) - oh
+            r = run[cat_c] + jnp.take_along_axis(
+                local, cat_c[:, None], axis=1)[:, 0]
+            return run + jnp.sum(oh, axis=0), r
+
+        cat_counts, ranks = jax.lax.scan(
+            rank_step, jnp.zeros((n_categories,), jnp.int32),
+            (cs_p.reshape(n_chunks, chunk), in_rng.reshape(n_chunks, chunk)))
+        rank_in_cat = ranks.reshape(-1)[:n]
+        order = jnp.take_along_axis(
+            order[None],
+            categorical_sort_order(cat_sorted[None], rank_in_cat[None],
+                                   cat_counts[None], k), axis=1)[0]
+    elif (variant == "interleave" or (variant == "auto" and n // k <= 8)) \
+            and vm is None:
         order = order[jnp.asarray(interleave_permutation(n, k))]
+    # (interleave + valid_mask: same dense-core rule -- fall back to base)
 
     # --- pad to full batches, then to full chunks ---------------------------
     n_batches = -(-n // k)
@@ -465,21 +611,36 @@ def aba_stream(
                                                 jnp.int32)])
                if n_batches * k > n else order)
     real = order_p < n
+    if vm is not None:
+        real = jnp.logical_and(real, vm[jnp.minimum(order_p, n - 1)])
     batches = order_p.reshape(n_batches, k)
     real_b = real.reshape(n_batches, k)
 
     # Sentinel indices (== n) clamp to the last row instead of indexing a
     # concatenated zero-row copy: a clamped gather avoids the dense core's
     # O(n*d) ``x_ext`` duplicate, and every consumer of a dummy row's values
-    # masks them with ``is_real`` (cost neutralized, centroid delta zeroed),
-    # so the clamped garbage never leaks -- labels stay bit-identical.
+    # masks them with ``is_real`` (cost neutralized, centroid delta zeroed,
+    # quota add zeroed), so the clamped garbage never leaks -- labels stay
+    # bit-identical.
 
-    # --- batch 1 initializes centroids (its k rows are always real) ---------
+    # --- batch 1 initializes centroids ---------------------------------------
     first_idx = jnp.minimum(batches[0], n - 1)
     centroids0 = xf[first_idx][None]              # (1, k, d)
     counts0 = real_b[0].astype(jnp.int32)[None]   # (1, k)
     labels0 = jnp.arange(k, dtype=jnp.int32)
-    cat0 = jnp.zeros((1, k, 1), jnp.int32)        # no categories here
+    if categories is not None:
+        valid_i = (jnp.ones((n,), jnp.int32) if vm is None
+                   else vm.astype(jnp.int32))
+        # ceil(|N_code| / k) quota bounds over valid rows -- (1, n_codes)
+        ub = -(-jnp.maximum(
+            jnp.zeros((n_codes,), jnp.int32).at[codes_i].add(
+                valid_i[:, None]), 0) // k)[None]
+        cat0 = (jnp.zeros((k, n_codes), jnp.int32)
+                .at[jnp.arange(k)[:, None], codes_i[first_idx]]
+                .add(real_b[0].astype(jnp.int32)[:, None]))[None]
+    else:
+        ub = None
+        cat0 = jnp.zeros((1, k, 1), jnp.int32)
     prices_in = (None if prices is None
                  else jnp.asarray(prices, jnp.float32))
     if n_batches == 1:
@@ -505,30 +666,44 @@ def aba_stream(
     idx_rest = idx_rest.reshape(n_bchunks, cpb, k)
     real_rest = real_rest.reshape(n_bchunks, cpb, k)
 
-    fused = solver_obj.factored is not None
+    # same rule as the dense core: the categorical quota mask cannot be
+    # factored, so a factored solver falls back to its dense solve under it
+    fused = solver_obj.factored is not None and categories is None
     p_init = (jnp.zeros((1, k), jnp.float32) if prices_in is None
               else prices_in)
 
     def chunk_step(carry, inp):
-        cents, counts, p_last = carry
+        cents, counts, ccat, p_last = carry
         idx_c, real_c = inp                      # (cpb, k)
-        xc = xf[jnp.minimum(idx_c, n - 1)]       # ONE (chunk, d) gather
+        idx_g = jnp.minimum(idx_c, n - 1)
+        # ONE (chunk, d) gather; double-buffered DMA kernel on TPU
+        xc = gather_rows(xf, idx_g.reshape(-1)).reshape(cpb, k, d)
+        if categories is not None:
+            xs = (xc, real_c, codes_i[idx_g])    # + (cpb, k, A) code gather
+        else:
+            xs = (xc, real_c)
 
         def batch_step(bcarry, binp):
-            bcents, bcounts, _bp = bcarry
-            xb, is_real = binp                   # (k, d), (k,)
+            bcents, bcounts, bcat, _bp = bcarry
+            if categories is not None:
+                xb, is_real, cb = binp           # (k, d), (k,), (k, A)
+            else:
+                (xb, is_real), cb = binp, None
             # same epoch-carried warm start per batch as the dense core
-            bcents, bcounts, _cc, assign, p_out = _assign_batch(
-                solver_obj, fused, auction_config, bcents, bcounts, cat0,
-                xb[None], is_real[None], prices=prices_in)
-            return (bcents, bcounts, p_out), assign[0]
+            bcents, bcounts, bcat, assign, p_out = _assign_batch(
+                solver_obj, fused, auction_config, bcents, bcounts, bcat,
+                xb[None], is_real[None],
+                cb=None if cb is None else cb[None], ub=ub,
+                prices=prices_in)
+            return (bcents, bcounts, bcat, p_out), assign[0]
 
-        (cents, counts, p_last), assigns = jax.lax.scan(
-            batch_step, (cents, counts, p_last), (xc, real_c))
-        return (cents, counts, p_last), assigns  # (cpb, k)
+        (cents, counts, ccat, p_last), assigns = jax.lax.scan(
+            batch_step, (cents, counts, ccat, p_last), xs)
+        return (cents, counts, ccat, p_last), assigns  # (cpb, k)
 
-    (_, _, prices_f), assigns = jax.lax.scan(
-        chunk_step, (centroids0, counts0, p_init), (idx_rest, real_rest))
+    (_, _, _, prices_f), assigns = jax.lax.scan(
+        chunk_step, (centroids0, counts0, cat0, p_init),
+        (idx_rest, real_rest))
 
     labels_all = jnp.concatenate(
         [labels0, assigns.reshape(-1)[:rem * k]])

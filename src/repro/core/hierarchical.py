@@ -90,8 +90,8 @@ def _regroup(glabels: jnp.ndarray, valid: jnp.ndarray, n_groups: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("plan", "variant", "n_categories", "solver",
-                     "auction_config", "batched", "chunk_size",
+    static_argnames=("plan", "variant", "n_categories", "n_fair_codes",
+                     "solver", "auction_config", "batched", "chunk_size",
                      "return_state"),
 )
 def hierarchical_core(
@@ -101,6 +101,8 @@ def hierarchical_core(
     variant: str = "auto",
     categories: jnp.ndarray | None = None,
     n_categories: int = 0,
+    fair_codes: jnp.ndarray | None = None,
+    n_fair_codes: int = 0,
     solver: str = "auction",
     auction_config: AuctionConfig = AuctionConfig(),
     batched: bool = True,
@@ -120,9 +122,15 @@ def hierarchical_core(
     docstring for why the global constraint (5) still holds exactly).
 
     ``chunk_size`` streams **level 1** (the only level that sees all n rows
-    at once) through ``repro.core.aba.aba_stream``; levels >= 2 work on
-    n/K_1-row group stacks and stay on the dense batched core.  Level-1
-    streaming requires category-free input (the front door guarantees it).
+    at once) through ``repro.core.aba.aba_stream`` -- categories and
+    ``fair_codes`` included (the chunked rank-in-category pass keeps level-1
+    labels bit-identical to the dense level at chunk >= n); levels >= 2 work
+    on n/K_1-row group stacks and stay on the dense batched core.
+
+    ``fair_codes`` / ``n_fair_codes`` thread the multi-attribute fairness
+    quota codes (see ``aba_core``) through every level; like categories, the
+    per-level ceil quotas compose (ceil-of-ceil), so each attribute's global
+    cap holds level by level.  Requires the ``batched=True`` level engine.
 
     ``prices`` warm-starts every level's auction from a per-level carried
     price tuple (level l has shape ``(prod(plan[:l]), plan[l])``, level 1 is
@@ -139,6 +147,9 @@ def hierarchical_core(
     if (not batched) and (return_state or prices is not None):
         raise NotImplementedError(
             "price/state threading requires batched=True levels")
+    if (not batched) and fair_codes is not None:
+        raise NotImplementedError(
+            "fair_codes requires the batched=True level engine")
     kw = dict(variant=variant, solver=solver, auction_config=auction_config,
               n_categories=n_categories)
 
@@ -147,18 +158,27 @@ def hierarchical_core(
     if categories is not None:
         cat_i = categories.astype(jnp.int32)
         cat_ext = jnp.concatenate([cat_i, jnp.zeros((1,), jnp.int32)])
+    if fair_codes is not None:
+        codes_i = fair_codes.astype(jnp.int32)
+        codes_ext = jnp.concatenate(
+            [codes_i, jnp.zeros((1, codes_i.shape[-1]), jnp.int32)])
 
     p_levels = []
     p_in = (lambda i: None) if prices is None else (lambda i: prices[i])
-    if chunk_size is not None and categories is None:
+    if chunk_size is not None:
         glabels, st1 = aba_stream(
-            xf, plan[0], chunk_size, variant=variant, solver=solver,
+            xf, plan[0], chunk_size, variant=variant,
+            categories=None if categories is None else cat_i,
+            n_categories=n_categories, fair_codes=fair_codes,
+            n_fair_codes=n_fair_codes, solver=solver,
             auction_config=auction_config, prices=p_in(0), return_state=True)
         mu1 = st1["mu"]
     else:
         glabels, st1 = aba_core(
             xf[None], plan[0],
             categories=None if categories is None else cat_i[None],
+            fair_codes=None if fair_codes is None else codes_i[None],
+            n_fair_codes=n_fair_codes,
             prices=p_in(0), return_state=True, **kw)
         glabels = glabels[0]
         mu1 = st1["mu"][0]
@@ -170,9 +190,11 @@ def hierarchical_core(
         idx, valid = _regroup(glabels, jnp.ones((n,), jnp.bool_), n_groups, m)
         xg = x_ext[jnp.minimum(idx, n)]  # (G, M, D)
         cg = None if categories is None else cat_ext[jnp.minimum(idx, n)]
+        fg = None if fair_codes is None else codes_ext[jnp.minimum(idx, n)]
         if batched:
             sub, st_l = aba_core(xg, k_l, valid, variant="base",
                                  categories=cg, n_categories=n_categories,
+                                 fair_codes=fg, n_fair_codes=n_fair_codes,
                                  solver=solver,
                                  auction_config=auction_config,
                                  prices=p_in(li), return_state=True)

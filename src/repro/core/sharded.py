@@ -74,6 +74,8 @@ def sharded_core(
     chunk_size: int | None = None,
     categories: jnp.ndarray | None = None,
     n_categories: int = 0,
+    fair_codes: jnp.ndarray | None = None,
+    n_fair_codes: int = 0,
     valid_mask: jnp.ndarray | None = None,
     prices: tuple[jnp.ndarray, ...] | None = None,
     return_state: bool = False,
@@ -93,9 +95,13 @@ def sharded_core(
     already collective-free, so streaming composes with it.
 
     ``categories`` (with static ``n_categories``) stratifies each shard's
-    local rows exactly (Section 4.3 per shard); ``valid_mask`` marks padding
-    rows (flat per-shard plans only -- the hierarchy's regrouping does not
-    carry masks).  Both are (n,) vectors sharded alongside ``x``.
+    local rows exactly (Section 4.3 per shard); ``fair_codes`` /
+    ``n_fair_codes`` thread the multi-attribute fairness quota codes (see
+    ``aba_core``) per shard; ``valid_mask`` marks padding rows (flat
+    per-shard plans only -- the hierarchy's regrouping does not carry
+    masks).  All are (n,) / (n, A) vectors sharded alongside ``x``, and all
+    of them *stream* when ``chunk_size`` is set (the per-shard local level
+    runs the chunked categorical ``aba_stream``).
 
     ``prices`` warm-starts every shard's per-level auctions from a carried
     per-shard price stack (level shapes from :func:`sharded_price_shapes`;
@@ -127,6 +133,7 @@ def sharded_core(
     kw = dict(variant=variant, solver=solver, auction_config=auction_config)
 
     has_cats = categories is not None
+    has_codes = fair_codes is not None
     has_vm = valid_mask is not None
     has_prices = prices is not None
     n_levels = len(plan)
@@ -136,6 +143,9 @@ def sharded_core(
     if has_cats:
         operands.append(jnp.asarray(categories, jnp.int32))
         in_specs.append(P(axes))
+    if has_codes:
+        operands.append(jnp.asarray(fair_codes, jnp.int32))
+        in_specs.append(P(axes, None))
     if has_vm:
         operands.append(jnp.asarray(valid_mask, jnp.bool_))
         in_specs.append(P(axes))
@@ -152,17 +162,21 @@ def sharded_core(
         x_local = next(it)
         xs = x_local.reshape((-1, x_local.shape[-1]))
         cl = next(it).reshape(-1) if has_cats else None
+        fl = (next(it).reshape(-1, fair_codes.shape[-1]) if has_codes
+              else None)
         vl = next(it).reshape(-1) if has_vm else None
         p_local = tuple(p[0] for p in it) if has_prices else None
 
         p0 = None if p_local is None else p_local[0]
-        if n_levels == 1 and chunk_size is not None and cl is None \
-                and vl is None:
-            # streaming needs category-free unmasked rows (same rule as
-            # hierarchical_core's level 1): with either present the shard
-            # falls back to the dense masked core below
-
-            local, st = aba_stream(xs, k_local, chunk_size, prices=p0,
+        if n_levels == 1 and chunk_size is not None:
+            # each shard streams its local rows -- categories / fair codes /
+            # mask included (the chunked rank-in-category rearrangement
+            # keeps per-shard labels bit-identical to the dense local core
+            # at chunk >= n_local)
+            local, st = aba_stream(xs, k_local, chunk_size,
+                                   categories=cl, n_categories=n_categories,
+                                   fair_codes=fl, n_fair_codes=n_fair_codes,
+                                   valid_mask=vl, prices=p0,
                                    return_state=True, **kw)
             p_out, mu = (st["prices"],), st["mu"]
         elif n_levels == 1:
@@ -170,13 +184,16 @@ def sharded_core(
                 xs[None], k_local,
                 None if vl is None else vl[None],
                 categories=None if cl is None else cl[None],
-                n_categories=n_categories, prices=p0,
+                n_categories=n_categories,
+                fair_codes=None if fl is None else fl[None],
+                n_fair_codes=n_fair_codes, prices=p0,
                 return_state=True, **kw)
             local = local[0]
             p_out, mu = (st["prices"],), st["mu"][0]
         elif batched:
             local, st = hierarchical_core(
                 xs, plan, categories=cl, n_categories=n_categories,
+                fair_codes=fl, n_fair_codes=n_fair_codes,
                 batched=True, chunk_size=chunk_size,
                 prices=p_local, return_state=True, **kw)
             p_out, mu = st["prices"], st["mu"]

@@ -239,8 +239,9 @@ def engine_update(engine: AnticlusterEngine, x, state: ABAState, *,
             "(sharded warm starts make it cheap)")
     if engine._cats is not None:
         raise NotImplementedError(
-            "categorical quotas pin per-stratum balance, which a local slot "
-            "patch cannot restore; update() is category-free -- repartition")
+            "categorical/fairness quotas pin per-stratum balance, which a "
+            "local slot patch cannot restore; update() is category-free -- "
+            "repartition")
     if engine._vm is not None:
         raise NotImplementedError(
             "spec.valid_mask sessions carry padding rows; drop the padding "

@@ -9,6 +9,12 @@ memory-bound bidding step into an MXU-bound one.
 
 The row-constant ``||x_i||^2`` is dropped: v1 - v2 (the bid increment) and the
 argmax are invariant to per-row constants.
+
+The streaming core's chunk steps use the gather-fused twin of this kernel
+(``repro.kernels.gather.bid_top2_gather_pallas``, dispatched through
+``repro.kernels.ops.bid_top2(..., idx=)``): same tile loop and top-2 merge,
+but the row block arrives through a double-buffered DMA ring indexed by a
+prefetched ``idx`` vector, so the gathered copy never exists in HBM.
 """
 
 from __future__ import annotations

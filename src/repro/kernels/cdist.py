@@ -7,7 +7,11 @@ in on the last reduction step, so the cost matrix is produced in one pass
 over HBM with arithmetic intensity ~ bm*bn*D / ((bm+bn)*D) elements.
 
 The ABA scan calls this once per batch with (K, D) x (K, D) -> (K, K); the
-hierarchical/vmapped path calls it with a leading group dimension.
+hierarchical/vmapped path calls it with a leading group dimension.  The
+streaming core's chunk steps use the gather-fused twin
+(``repro.kernels.gather.cdist_gather_pallas``, dispatched through
+``repro.kernels.ops.cdist(..., idx=)``), whose row blocks stream HBM -> VMEM
+through a double-buffered DMA ring instead of reading a pre-gathered copy.
 """
 
 from __future__ import annotations

@@ -1,0 +1,317 @@
+"""Pallas TPU kernels: double-buffered row gather + fused gather-compute.
+
+The streaming ABA core touches its data one chunk at a time through an
+index gather (``x[idx_chunk]``).  On TPU a plain gather serializes: HBM row
+movement for chunk t+1 waits for chunk t's compute.  These kernels pipeline
+it instead -- rows are pulled HBM -> VMEM with explicit ``make_async_copy``
+DMAs into a 2-slot scratch ring, so while block ``j`` is being consumed the
+copies for block ``j+1`` are already in flight (classic double buffering;
+the scalar-prefetch index vector is available to the kernel before the grid
+runs, which is what lets it compute source addresses ahead of time).
+
+Three entry points, all sharing the same issue/wait ring:
+
+- :func:`gather_rows_pallas` -- pure gather, ``x[idx]`` with overlapped DMA.
+- :func:`bid_top2_gather_pallas` -- fused ``bid_top2(x[idx], c, prices)``:
+  the gathered rows never round-trip to HBM; each row block is DMA'd once
+  and reduced against every centroid tile while the next block streams in.
+- :func:`cdist_gather_pallas` -- fused ``cdist(x[idx], c)`` (untiled D; the
+  dispatcher composes gather + tiled cdist instead when D is too large for
+  full rows in VMEM).
+
+On CPU these run under ``interpret=True`` for parity tests only -- the
+dispatcher (:func:`repro.kernels.ops.gather_rows`) uses the jnp take there,
+because interpreting a per-row DMA loop in Python has no fidelity value.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import TPUCompilerParams
+
+_NEG = -1e30
+
+
+def _issue_block(idx_ref, x_ref, rows, sems, slot, blk, bm):
+    """Start the per-row HBM->VMEM copies for row block ``blk`` into ``slot``."""
+
+    def row(r, _):
+        src = x_ref.at[idx_ref[blk * bm + r]]
+        pltpu.make_async_copy(src, rows.at[slot, r], sems.at[slot, r]).start()
+        return 0
+
+    jax.lax.fori_loop(0, bm, row, 0)
+
+
+def _wait_block(idx_ref, x_ref, rows, sems, slot, blk, bm):
+    """Block until every row of ``blk`` has landed in ``slot``."""
+
+    def row(r, _):
+        pltpu.make_async_copy(
+            x_ref.at[idx_ref[blk * bm + r]], rows.at[slot, r],
+            sems.at[slot, r]).wait()
+        return 0
+
+    jax.lax.fori_loop(0, bm, row, 0)
+
+
+# ---------------------------------------------------------------------------
+# Pure gather
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref, rows, sems, *, bm):
+    """Grid = (M/bm,): copy-out slot j%2 while slot (j+1)%2 fills."""
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _prologue():
+        _issue_block(idx_ref, x_ref, rows, sems, 0, 0, bm)
+
+    @pl.when(j + 1 < nb)
+    def _prefetch():
+        _issue_block(idx_ref, x_ref, rows, sems, (j + 1) % 2, j + 1, bm)
+
+    _wait_block(idx_ref, x_ref, rows, sems, j % 2, j, bm)
+    o_ref[...] = rows[j % 2]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def gather_rows_pallas(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    bm: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``x[idx]`` with double-buffered DMA: (n, d), (m,) -> (m, d) float32.
+
+    Out-of-range indices are clipped (the streaming core clamps sentinels
+    itself and masks their values downstream).
+    """
+    n, d = x.shape
+    m = idx.shape[0]
+    bm = min(bm, _rup(m, 8))
+    mp = _rup(m, bm)
+    idx_p = jnp.clip(idx.astype(jnp.int32), 0, n - 1)
+    if mp > m:
+        idx_p = jnp.concatenate([idx_p, jnp.zeros((mp - m,), jnp.int32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((bm, d), lambda j, idx_ref: (j, 0)),
+        scratch_shapes=[pltpu.VMEM((2, bm, d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2, bm))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, d), jnp.float32),
+        interpret=interpret,
+    )(idx_p, x.astype(jnp.float32))
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# Fused gather + bid_top2
+# ---------------------------------------------------------------------------
+
+
+def _bid_gather_kernel(idx_ref, x_ref, c_ref, cn_ref, p_ref,
+                       v1_ref, j1_ref, v2_ref, rows, sems, *, bm, bn):
+    """Grid = (M/bm, K/bn), j innermost.  Row block i is DMA'd once into the
+    2-slot ring at its first column step and reduced against every centroid
+    tile; block i+1's copies are issued at the same point, so they overlap
+    the whole inner loop over centroid tiles."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _prologue():
+        _issue_block(idx_ref, x_ref, rows, sems, 0, 0, bm)
+
+    @pl.when(j == 0)
+    def _arrive():
+        _wait_block(idx_ref, x_ref, rows, sems, i % 2, i, bm)
+
+        @pl.when(i + 1 < pl.num_programs(0))
+        def _prefetch():
+            _issue_block(idx_ref, x_ref, rows, sems, (i + 1) % 2, i + 1, bm)
+
+        v1_ref[...] = jnp.full_like(v1_ref, _NEG)
+        j1_ref[...] = jnp.zeros_like(j1_ref)
+        v2_ref[...] = jnp.full_like(v2_ref, _NEG)
+
+    vals = jax.lax.dot_general(
+        rows[i % 2], c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    vals = -2.0 * vals + (cn_ref[...] - p_ref[...])[None, :]
+
+    col = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    t_v1 = jnp.max(vals, axis=1)
+    t_j1 = jnp.min(jnp.where(vals >= t_v1[:, None], col, bn), axis=1)
+    t_v2 = jnp.max(jnp.where(col == t_j1[:, None], _NEG, vals), axis=1)
+    t_j1 = t_j1 + j * bn
+
+    r_v1, r_j1, r_v2 = v1_ref[...], j1_ref[...], v2_ref[...]
+    take = t_v1 > r_v1
+    v1_ref[...] = jnp.where(take, t_v1, r_v1)
+    j1_ref[...] = jnp.where(take, t_j1, r_j1)
+    v2_ref[...] = jnp.maximum(jnp.minimum(t_v1, r_v1),
+                              jnp.maximum(t_v2, r_v2))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def bid_top2_gather_pallas(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    c: jnp.ndarray,
+    prices: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 512,
+    interpret: bool = False,
+):
+    """``bid_top2(x[idx], c, prices)`` without materializing ``x[idx]``:
+    (n, d), (m,), (k, d), (k,) -> (v1, j1, v2) each (m,)."""
+    n, d = x.shape
+    m = idx.shape[0]
+    k, d2 = c.shape
+    assert d == d2, (x.shape, c.shape)
+    bm, bn = min(bm, _rup(m, 8)), min(bn, _rup(k, 128))
+    mp, kp = _rup(m, bm), _rup(k, bn)
+    idx_p = jnp.clip(idx.astype(jnp.int32), 0, n - 1)
+    if mp > m:
+        idx_p = jnp.concatenate([idx_p, jnp.zeros((mp - m,), jnp.int32)])
+    cp = jnp.zeros((kp, d), jnp.float32).at[:k].set(c.astype(jnp.float32))
+    cn = jnp.sum(cp * cp, axis=1)
+    pp = jnp.full((kp,), -_NEG, jnp.float32).at[:k].set(
+        prices.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, kp // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((bn, d), lambda i, j, idx_ref: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j, idx_ref: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, idx_ref: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j, idx_ref: (i,)),
+            pl.BlockSpec((bm,), lambda i, j, idx_ref: (i,)),
+            pl.BlockSpec((bm,), lambda i, j, idx_ref: (i,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((2, bm, d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2, bm))],
+    )
+    v1, j1, v2 = pl.pallas_call(
+        functools.partial(_bid_gather_kernel, bm=bm, bn=bn),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.int32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        compiler_params=TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(idx_p, x.astype(jnp.float32), cp, cn, pp)
+    return v1[:m], j1[:m], v2[:m]
+
+
+# ---------------------------------------------------------------------------
+# Fused gather + cdist (untiled D)
+# ---------------------------------------------------------------------------
+
+
+def _cdist_gather_kernel(idx_ref, x_ref, c_ref, cn_ref, o_ref, rows, sems,
+                         *, bm):
+    """Grid = (M/bm, N/bn), j innermost; full rows in VMEM (no D tiling),
+    so ``||x_i||^2`` is computed from the landed scratch rows directly."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _prologue():
+        _issue_block(idx_ref, x_ref, rows, sems, 0, 0, bm)
+
+    @pl.when(j == 0)
+    def _arrive():
+        _wait_block(idx_ref, x_ref, rows, sems, i % 2, i, bm)
+
+        @pl.when(i + 1 < pl.num_programs(0))
+        def _prefetch():
+            _issue_block(idx_ref, x_ref, rows, sems, (i + 1) % 2, i + 1, bm)
+
+    xb = rows[i % 2]
+    dots = jax.lax.dot_general(
+        xb, c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    xn = jnp.sum(xb * xb, axis=1)
+    o_ref[...] = (xn[:, None] - 2.0 * dots + cn_ref[...][None, :]
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret", "out_dtype"))
+def cdist_gather_pallas(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """``cdist(x[idx], c)`` without materializing ``x[idx]``:
+    (n, d), (m,), (nc, d) -> (m, nc) squared distances."""
+    n, d = x.shape
+    m = idx.shape[0]
+    nc, d2 = c.shape
+    assert d == d2, (x.shape, c.shape)
+    bm, bn = min(bm, _rup(m, 8)), min(bn, _rup(nc, 128))
+    mp, ncp = _rup(m, bm), _rup(nc, bn)
+    idx_p = jnp.clip(idx.astype(jnp.int32), 0, n - 1)
+    if mp > m:
+        idx_p = jnp.concatenate([idx_p, jnp.zeros((mp - m,), jnp.int32)])
+    cp = jnp.zeros((ncp, d), jnp.float32).at[:nc].set(c.astype(jnp.float32))
+    cn = jnp.sum(cp * cp, axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, ncp // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((bn, d), lambda i, j, idx_ref: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j, idx_ref: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, idx_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((2, bm, d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2, bm))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_cdist_gather_kernel, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, ncp), out_dtype),
+        compiler_params=TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(idx_p, x.astype(jnp.float32), cp, cn)
+    return out[:m, :nc]
+
+
+def _rup(v: int, m: int) -> int:
+    return -(-v // m) * m

@@ -32,9 +32,12 @@ import jax.numpy as jnp
 
 from repro.kernels.bid_top2 import bid_top2_pallas
 from repro.kernels.cdist import cdist_pallas
+from repro.kernels.gather import (bid_top2_gather_pallas, cdist_gather_pallas,
+                                  gather_rows_pallas)
 from repro.kernels.ref import bid_top2_ref, cdist_ref
 
 _CPU_INTERPRET_BUDGET = 1 << 22  # elements; above this CPU uses the ref
+_GATHER_FUSE_MAX_D = 512  # fused-gather kernels keep full rows in VMEM
 
 
 def _backend() -> str:
@@ -57,13 +60,63 @@ def resolve_path(m: int, k: int, force: str | None = None) -> str:
     return "ref"
 
 
-def cdist(x: jnp.ndarray, c: jnp.ndarray, *, force: str | None = None,
-          **block_kw) -> jnp.ndarray:
+def gather_path(force: str | None = None) -> str:
+    """Which path a row-gather dispatch takes: 'pallas' (TPU compiled DMA
+    pipeline), 'pallas-interpret' (forced only), or 'ref' (jnp take).
+
+    Deliberately NOT :func:`resolve_path`: on CPU the default is ALWAYS the
+    ref -- interpreting a per-row DMA loop in Python is pure overhead with no
+    fidelity value (there is no DMA to overlap), and the streaming core calls
+    this inside every chunk step.  Tests pin ``force="pallas"`` to exercise
+    the kernel ring under interpret mode.
+    """
+    if force == "ref":
+        return "ref"
+    if _backend() == "tpu":
+        return "pallas"
+    if force == "pallas":
+        return "pallas-interpret"
+    return "ref"
+
+
+def gather_rows(x: jnp.ndarray, idx: jnp.ndarray, *,
+                force: str | None = None, **block_kw) -> jnp.ndarray:
+    """``x[idx]`` as float32: (n, d), (m,) -> (m, d).
+
+    On TPU this is the double-buffered DMA gather
+    (:func:`repro.kernels.gather.gather_rows_pallas`) -- the next block's
+    HBM row movement overlaps the current block's copy-out; on CPU it is the
+    plain jnp take (bit-identical, so the streaming core's parity contract
+    is path-independent).  Out-of-range indices are clipped on the kernel
+    path; callers clamp before the ref path.
+    """
+    path = gather_path(force)
+    if path == "ref":
+        return x[idx].astype(jnp.float32)
+    return gather_rows_pallas(x, idx, interpret=path != "pallas", **block_kw)
+
+
+def cdist(x: jnp.ndarray, c: jnp.ndarray, *, idx: jnp.ndarray | None = None,
+          force: str | None = None, **block_kw) -> jnp.ndarray:
     """Squared-distance cost matrix; kernel on TPU, ref fallback on big-CPU.
 
     ``x`` may carry leading chunk dims: ``(..., m, d) x (n, d) -> (..., m, n)``
     (flattened into one tiled launch against the shared ``c``).
+
+    With ``idx`` the rows are ``x[idx]`` (x must be 2-D): on TPU the fused
+    gather-compute kernel streams each row block HBM -> VMEM exactly once via
+    the double-buffered DMA ring and never materializes the gathered copy
+    (falling back to gather + tiled kernel when d exceeds the full-row VMEM
+    budget); elsewhere it is a plain take + the usual dispatch.
     """
+    if idx is not None:
+        assert x.ndim == 2, "idx gather needs flat (n, d) x"
+        path = resolve_path(idx.shape[0], c.shape[0], force)
+        if path == "ref" or x.shape[1] > _GATHER_FUSE_MAX_D:
+            return cdist(gather_rows(x, idx, force=force), c, force=force,
+                         **block_kw)
+        return cdist_gather_pallas(x, idx, c, interpret=path != "pallas",
+                                   **block_kw)
     lead = x.shape[:-2]
     if lead:
         x = x.reshape(-1, x.shape[-1])
@@ -74,13 +127,27 @@ def cdist(x: jnp.ndarray, c: jnp.ndarray, *, force: str | None = None,
 
 
 def bid_top2(x: jnp.ndarray, c: jnp.ndarray, prices: jnp.ndarray, *,
-             force: str | None = None, **block_kw):
+             idx: jnp.ndarray | None = None, force: str | None = None,
+             **block_kw):
     """Fused auction bidding reduction (v1, j1, v2 per row).
 
     Accepts a single ``(m, d) x (k, d)`` problem or a stacked
     ``(G, m, d) x (G, k, d)`` batch with ``(G, k)`` prices (each group has
     its own centroid set, so the stack vmaps the kernel).
+
+    With ``idx`` the rows are ``x[idx]`` (x must be flat (n, d)): on TPU the
+    fused gather-bid kernel DMAs each row block once through the
+    double-buffered ring and reduces it against every centroid tile while
+    the next block streams in; elsewhere it is a take + the usual dispatch.
     """
+    if idx is not None:
+        assert x.ndim == 2, "idx gather needs flat (n, d) x"
+        path = resolve_path(idx.shape[0], c.shape[-2], force)
+        if path == "ref" or x.shape[1] > _GATHER_FUSE_MAX_D:
+            return bid_top2(gather_rows(x, idx, force=force), c, prices,
+                            force=force, **block_kw)
+        return bid_top2_gather_pallas(x, idx, c, prices,
+                                      interpret=path != "pallas", **block_kw)
     if x.ndim == 3:
         total_m = x.shape[0] * x.shape[1]
         path = resolve_path(total_m, c.shape[-2], force)

@@ -330,11 +330,12 @@ class AnticlusterRouter:
                  row_buckets: bool = True, background: bool = True,
                  clock: Callable[[], float] = time.monotonic, **overrides):
         spec = _resolve_spec(spec, overrides)
-        if spec.categories is not None or spec.valid_mask is not None:
+        if spec.categories is not None or spec.fairness is not None \
+                or spec.valid_mask is not None:
             raise NotImplementedError(
                 "the serving tier solves anonymous flat (n, d) requests; "
-                "categories/valid_mask are per-dataset concepts -- use "
-                "AnticlusterEngine directly")
+                "categories/fairness/valid_mask are per-dataset concepts -- "
+                "use AnticlusterEngine directly")
         if max_group < 1:
             raise ValueError(f"max_group={max_group} must be >= 1")
         if max_queue < 1:

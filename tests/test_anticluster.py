@@ -371,16 +371,20 @@ def test_stream_auto_at_scale_upgrades_to_factored(monkeypatch):
 
 
 def test_stream_explicit_chunk_rejects_unstreamable_input():
+    # categories and valid_mask stream since the chunked rank-in-category
+    # rearrangement landed; only stacked (G, M, D) input stays dense
+    x3 = jnp.asarray(_data(120, 4, 26)).reshape(2, 60, 4)
+    with pytest.raises(NotImplementedError, match="chunk_size"):
+        anticluster(x3, k=4, plan=None, chunk_size=64)
+    # ...while flat categorical/masked input now streams instead of raising
     x = jnp.asarray(_data(120, 4, 26))
-    cats = np.zeros(120, np.int32)
-    with pytest.raises(NotImplementedError, match="chunk_size"):
-        anticluster(x, k=4, plan=None, chunk_size=64, categories=cats)
-    with pytest.raises(NotImplementedError, match="chunk_size"):
-        anticluster(x, k=4, plan=None, chunk_size=64,
-                    valid_mask=np.arange(120) < 100)
-    # "auto" quietly falls back to the dense core for the same inputs
-    res = anticluster(x, k=4, plan=None, chunk_size="auto", categories=cats)
+    cats = np.asarray(
+        np.random.default_rng(27).integers(0, 3, 120), np.int32)
+    res = anticluster(x, k=4, plan=None, chunk_size=64, categories=cats)
     assert res.balanced
+    res = anticluster(x, k=4, plan=None, chunk_size=64,
+                      valid_mask=np.arange(120) < 100)
+    assert int(res.n_valid) == 100
 
 
 def test_stream_spec_validation():

@@ -1,0 +1,272 @@
+"""Streaming with constraints: the lifted categories/valid_mask ban.
+
+The contract under test, layer by layer:
+
+* ``aba_stream`` with ``categories`` / ``fair_codes`` / ``valid_mask`` is
+  **bit-for-bit identical** to the dense categorical core whenever one chunk
+  covers all rows (the chunked rank-in-category rearrangement is
+  integer-exact, so the permutation -- and therefore every label -- matches
+  exactly, at any chunk size for the ordering and end-to-end at chunk >= n).
+* Below chunk < n the labels may differ from dense (assignment sees chunk
+  boundaries) but the *invariants* hold: exact cluster balance, exact
+  per-stratum balance for single-attribute constraints (spread <= 1), and
+  best-effort multi-attribute quotas no worse than the dense path on the
+  same data.
+* The same guarantees flow through every route that reaches the streaming
+  core: flat front door, hierarchical level 1, and the warm engine.
+* ``chunk_size="auto"`` fallbacks to the dense core are *loud*: a
+  RuntimeWarning (once per route) names the reason.
+"""
+
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.anticluster import (AnticlusterEngine, AnticlusterSpec,
+                               _route, _WARNED_FALLBACKS, anticluster)
+from repro.core.aba import aba_core, aba_stream
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _cats(n, c, seed=1):
+    return np.random.default_rng(seed).integers(0, c, size=n).astype(np.int32)
+
+
+def _stratum_spread(labels, cats, k):
+    """Max over category values of (max - min) per-cluster count."""
+    worst = 0
+    for v in np.unique(cats):
+        cnt = np.bincount(labels[cats == v], minlength=k)
+        worst = max(worst, int(cnt.max() - cnt.min()))
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# chunk >= n: bit-for-bit parity with the dense categorical core
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [364, 400, 4096])
+def test_stream_categories_parity_chunk_ge_n(chunk):
+    x = jnp.asarray(_data(364, 5))
+    cats = jnp.asarray(_cats(364, 4))
+    dense = np.asarray(aba_core(x[None], 7, categories=cats[None],
+                                n_categories=4)[0])
+    stream = np.asarray(aba_stream(x, 7, chunk, categories=cats,
+                                   n_categories=4))
+    np.testing.assert_array_equal(stream, dense)
+
+
+def test_stream_categories_mask_parity_chunk_ge_n():
+    n, k = 300, 6
+    x = jnp.asarray(_data(n, 4, 2))
+    cats = jnp.asarray(_cats(n, 3, 3))
+    vm = jnp.asarray(np.arange(n) < 260)
+    dense = np.asarray(aba_core(x[None], k, vm[None], categories=cats[None],
+                                n_categories=3)[0])
+    stream = np.asarray(aba_stream(x, k, n, categories=cats, n_categories=3,
+                                   valid_mask=vm))
+    vmn = np.asarray(vm)
+    # labels on padding rows are unspecified; compare where the mask is real
+    np.testing.assert_array_equal(stream[vmn], dense[vmn])
+
+
+def test_stream_mask_only_parity_chunk_ge_n():
+    n, k = 250, 5
+    x = jnp.asarray(_data(n, 6, 4))
+    vm = jnp.asarray(np.arange(n) < 233)
+    dense = np.asarray(aba_core(x[None], k, vm[None])[0])
+    stream = np.asarray(aba_stream(x, k, n, valid_mask=vm))
+    vmn = np.asarray(vm)
+    np.testing.assert_array_equal(stream[vmn], dense[vmn])
+
+
+def test_fairness_single_attr_is_exactly_categories():
+    # fairness= with ONE attribute must resolve to the identical constraint
+    # (and therefore identical labels) as categories=
+    x = _data(420, 5, 7)
+    cats = _cats(420, 5, 8)
+    a = anticluster(x, k=6, plan=None, categories=cats)
+    b = anticluster(x, k=6, plan=None, fairness=[cats])
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+    c = anticluster(x, k=6, plan=None, fairness=[cats], chunk_size=420)
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(c.labels))
+
+
+def test_fairness_multi_attr_stream_parity_chunk_ge_n():
+    x = _data(360, 4, 9)
+    a1 = _cats(360, 3, 10)
+    a2 = _cats(360, 2, 11)
+    dense = anticluster(x, k=6, plan=None, fairness={"site": a1, "grp": a2})
+    stream = anticluster(x, k=6, plan=None, fairness={"site": a1, "grp": a2},
+                         chunk_size=512)
+    np.testing.assert_array_equal(np.asarray(dense.labels),
+                                  np.asarray(stream.labels))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(40, 300), k=st.integers(2, 8), c=st.integers(2, 5),
+       seed=st.integers(0, 50))
+def test_stream_categories_parity_property(n, k, c, seed):
+    if k > n:
+        k = 2
+    x = jnp.asarray(_data(n, 3, seed))
+    cats = jnp.asarray(_cats(n, c, seed + 1))
+    dense = np.asarray(aba_core(x[None], k, categories=cats[None],
+                                n_categories=c)[0])
+    stream = np.asarray(aba_stream(x, k, n, categories=cats, n_categories=c))
+    np.testing.assert_array_equal(stream, dense)
+
+
+# ---------------------------------------------------------------------------
+# chunk < n: invariants (balance, stratification, best-effort multi-attr)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,cs,c", [(400, 8, 96, 4), (600, 6, 128, 3),
+                                      (512, 16, 130, 5)])
+def test_stream_categories_multichunk_invariants(n, k, cs, c):
+    x = _data(n, 5, 20)
+    cats = _cats(n, c, 21)
+    res = anticluster(x, k=k, plan=None, categories=cats, chunk_size=cs,
+                      solver="auction")
+    lab = np.asarray(res.labels)
+    cnt = np.bincount(lab, minlength=k)
+    assert cnt.min() >= n // k and cnt.max() <= -(-n // k)
+    # single-attribute stratification is exact at ANY chunk size
+    assert _stratum_spread(lab, cats, k) <= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(100, 400), k=st.integers(2, 8), c=st.integers(2, 4),
+       cs=st.integers(40, 200), seed=st.integers(0, 50))
+def test_stream_categories_multichunk_property(n, k, c, cs, seed):
+    x = _data(n, 3, seed)
+    cats = _cats(n, c, seed + 7)
+    res = anticluster(x, k=k, plan=None, categories=cats, chunk_size=cs,
+                      solver="auction")
+    lab = np.asarray(res.labels)
+    cnt = np.bincount(lab, minlength=k)
+    assert cnt.min() >= n // k and cnt.max() <= -(-n // k)
+    assert _stratum_spread(lab, cats, k) <= 1
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_fairness_multi_attr_stream_no_worse_than_dense(seed):
+    # multi-attribute quotas are best-effort (an infeasible transversal
+    # overflows by the conflicting rows -- on dense and stream alike); the
+    # pinned contract is that streaming is no LOOSER than dense on the same
+    # data, and cluster balance stays exact
+    n, k = 360, 6
+    x = _data(n, 4, seed)
+    a1 = _cats(n, 3, seed + 30)
+    a2 = _cats(n, 2, seed + 60)
+    fair = {"a1": a1, "a2": a2}
+    dl = np.asarray(anticluster(x, k=k, plan=None, fairness=fair).labels)
+    sl = np.asarray(anticluster(x, k=k, plan=None, fairness=fair,
+                                chunk_size=100, solver="auction").labels)
+    cnt = np.bincount(sl, minlength=k)
+    assert cnt.min() >= n // k and cnt.max() <= -(-n // k)
+    for a in (a1, a2):
+        assert _stratum_spread(sl, a, k) <= max(1, _stratum_spread(dl, a, k))
+
+
+def test_stream_mask_multichunk_front_door():
+    n, k = 512, 8
+    x = _data(n, 4, 40)
+    vm = np.arange(n) < 470
+    res = anticluster(x, k=k, plan=None, valid_mask=vm, chunk_size=128,
+                      solver="auction")
+    assert int(res.n_valid) == 470
+    lab = np.asarray(res.labels)[vm]
+    cnt = np.bincount(lab, minlength=k)
+    assert cnt.min() >= 470 // k and cnt.max() <= -(-470 // k)
+
+
+# ---------------------------------------------------------------------------
+# routes: hierarchical level 1 and the warm engine
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_level1_streams_categories():
+    n = 1200
+    x = _data(n, 4, 50)
+    cats = _cats(n, 3, 51)
+    dense = anticluster(x, k=12, max_k=4, categories=cats)
+    assert len(dense.plan) > 1
+    par = anticluster(x, k=12, max_k=4, categories=cats, chunk_size=n)
+    np.testing.assert_array_equal(np.asarray(dense.labels),
+                                  np.asarray(par.labels))
+    multi = anticluster(x, k=12, max_k=4, categories=cats, chunk_size=256,
+                        solver="auction")
+    lab = np.asarray(multi.labels)
+    cnt = np.bincount(lab, minlength=12)
+    assert cnt.min() >= n // 12 and cnt.max() <= -(-n // 12)
+    # ceil-of-ceil composition keeps global stratification exact through
+    # the hierarchy even when level 1 was chunked
+    assert _stratum_spread(lab, cats, 12) <= 1
+
+
+def test_engine_warm_repartition_streams_fairness():
+    n, k = 480, 6
+    x0 = _data(n, 4, 60)
+    x1 = x0 + 0.05 * _data(n, 4, 61)
+    a1 = _cats(n, 3, 62)
+    a2 = _cats(n, 2, 63)
+    spec = AnticlusterSpec(k=k, plan=None, chunk_size=96, solver="auction",
+                           fairness=(a1, a2), stats=False)
+    eng = AnticlusterEngine(spec)
+    res0, state = eng.partition(x0)
+    # the engine's cold pass must equal the one-shot front door bit-for-bit
+    one = anticluster(x0, spec)
+    np.testing.assert_array_equal(np.asarray(res0.labels),
+                                  np.asarray(one.labels))
+    res1, state = eng.repartition(x1, state)
+    assert eng.compile_count == 1  # warm epoch reused the executable
+    lab = np.asarray(res1.labels)
+    cnt = np.bincount(lab, minlength=k)
+    assert cnt.min() >= n // k and cnt.max() <= -(-n // k)
+    for a in (a1, a2):
+        assert _stratum_spread(lab, a, k) <= 2
+
+
+# ---------------------------------------------------------------------------
+# loud fallbacks + spec validation
+# ---------------------------------------------------------------------------
+
+def test_stacked_auto_chunk_warns_once():
+    spec = AnticlusterSpec(k=4, plan=None, chunk_size="auto", stats=False)
+    _WARNED_FALLBACKS.clear()
+    try:
+        with pytest.warns(RuntimeWarning, match="dense core"):
+            _route(spec, (2, 70000, 4), False, False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # second hit must be silent
+            _route(spec, (2, 70000, 4), False, False)
+    finally:
+        _WARNED_FALLBACKS.clear()
+
+
+def test_stacked_explicit_chunk_still_raises():
+    spec = AnticlusterSpec(k=4, plan=None, chunk_size=64, stats=False)
+    with pytest.raises(NotImplementedError, match="flat"):
+        _route(spec, (2, 70000, 4), False, False)
+
+
+def test_spec_rejects_categories_plus_fairness():
+    cats = _cats(100, 3)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        AnticlusterSpec(k=4, categories=cats, fairness=[cats])
+
+
+def test_spec_rejects_non_integer_fairness():
+    with pytest.raises(ValueError, match="integer-coded"):
+        AnticlusterSpec(k=4, fairness=[np.linspace(0, 1, 100)])
+
+
+def test_spec_rejects_mismatched_fairness_lengths():
+    with pytest.raises(ValueError, match="disagree on shape"):
+        AnticlusterSpec(k=4, fairness=[_cats(100, 3), _cats(90, 2)])
