@@ -27,6 +27,8 @@ def measure(name, arch, shape, overrides=None, aba_over=None):
     t0 = time.time()
     if arch == "aba-pipeline":
         rec = run_aba(shape, aba_over or {})
+    elif arch == "pipeline-live":
+        rec = run_pipeline_live(aba_over or {})
     else:
         rec = D.run_cell(arch, shape, multi_pod=False, overrides=overrides)
     rec["iter"] = name
@@ -95,6 +97,69 @@ def run_aba(shape, over):
     return rec
 
 
+def run_pipeline_live(over):
+    """Live ``repro.train.pipeline`` cell: the dryrun rows above cost the
+    ABA solve's HLO; this one actually consumes the pipeline's epoch
+    iterator with a reduced registry model and records per-epoch walls --
+    the overlap receipt at container scale (the heavy end-to-end arms live
+    in ``benchmarks/pipeline_bench.py``)."""
+    import traceback
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.data.synthetic import lm_token_stream
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+    from repro.train import ABAPipeline
+    from repro.train.optimizer import OptConfig, adamw_init
+    from repro.train.train_step import make_train_step
+
+    spec = dict(n_docs=2048, batch=64, seq=16, epochs=3, refresh=True)
+    spec.update(over)
+    rec = {"arch": "pipeline-live", "shape": "train_small",
+           "overrides": {k: str(v) for k, v in over.items()}}
+    try:
+        cfg = get_config("smollm-360m", reduced=True)
+        mesh = make_host_mesh(1, 1)
+        tokens, feats = lm_token_stream(spec["n_docs"], spec["seq"],
+                                        cfg.vocab_size, seed=0)
+        pipe = ABAPipeline(feats, spec["batch"], seed=0)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(
+            cfg, mesh, OptConfig(lr=3e-3, warmup_steps=5,
+                                 decay_steps=len(pipe) * spec["epochs"]),
+            loss_chunk=spec["seq"]))
+
+        def drifted(e):
+            r = np.random.default_rng(1000 + e)
+            return (feats + 0.02 * r.normal(size=feats.shape)
+                    ).astype(np.float32)
+
+        walls, losses = [], []
+        for ep in pipe.epochs(spec["epochs"],
+                              features=drifted if spec["refresh"] else None):
+            t0 = time.time()
+            ls = []
+            for idx in ep:
+                batch = {"tokens": jnp.asarray(tokens[idx])}
+                params, opt, m = step(params, opt, batch)
+                ls.append(m["loss"])
+            losses.append(float(ls[-1]))  # one coalesced sync per epoch
+            walls.append(round(time.time() - t0, 3))
+        toks = len(pipe) * spec["batch"] * spec["seq"]
+        rec.update(status="ok", epoch_walls=walls, losses=losses,
+                   compile_count=pipe.engine.compile_count,
+                   tokens_per_s_warm=round(toks / min(walls[1:]), 1),
+                   overlapped=pipe.overlapped)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
 ITERS = {
     "A": [
         ("A0 falcon train baseline (per-step scan)", "falcon-mamba-7b",
@@ -138,12 +203,18 @@ ITERS = {
         ("C3 aba hier + 2 eps phases", "aba-pipeline", "aba_1m",
          None, {"max_k": 64, "rounds": 96, "phases": 2}),
     ],
+    "P": [
+        ("P0 train pipeline, static membership", "pipeline-live",
+         "train_small", None, {"refresh": False}),
+        ("P1 train pipeline, overlapped per-epoch refresh", "pipeline-live",
+         "train_small", None, {"refresh": True}),
+    ],
 }
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="A,B,C")
+    ap.add_argument("--only", default="A,B,C,P")
     ap.add_argument("--out", default="perf_results.json")
     args = ap.parse_args()
     try:

@@ -1,0 +1,79 @@
+"""Train a tiny registry model through the ABA training pipeline.
+
+The direct-API twin of ``examples/minibatch_training.py`` (which drives the
+full ``repro.launch.train`` launcher): this one consumes
+:class:`repro.train.pipeline.ABAPipeline`'s epoch iterator by hand, the way
+a custom training loop would --
+
+  * the constructor anticlusters the doc embeddings once (one compile);
+  * each epoch hands out diverse mini-batches in a deterministic order;
+  * with ``features=`` the next epoch's re-partition is dispatched
+    asynchronously and drains while the current epoch trains.
+
+    PYTHONPATH=src python examples/train_anticlustered.py
+
+Runs in well under a minute on CPU (CI executes it as an examples-smoke).
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import lm_token_stream
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.train import ABAPipeline
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+N_DOCS, BATCH, SEQ, EPOCHS = 1024, 32, 16, 3
+
+
+def main():
+    cfg = get_config("smollm-360m", reduced=True)
+    mesh = make_host_mesh(1, 1)
+    tokens, feats = lm_token_stream(N_DOCS, SEQ, cfg.vocab_size, seed=0)
+
+    pipe = ABAPipeline(feats, BATCH, seed=0)
+    sd, rg = pipe.diversity_stats(feats)
+    print(f"K={len(pipe)} diverse batches  (per-batch diversity sd={sd:.4f}, "
+          f"range={rg:.4f})")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        cfg, mesh, OptConfig(lr=3e-3, warmup_steps=5,
+                             decay_steps=len(pipe) * EPOCHS),
+        loss_chunk=SEQ))
+
+    # features(e) stands in for a drifting encoder embedding; each next
+    # epoch's warm re-partition is dispatched before this epoch's steps run
+    def drifted(e):
+        r = np.random.default_rng(1000 + e)
+        return (feats + 0.02 * e * r.normal(size=feats.shape)
+                ).astype(np.float32)
+
+    losses = []
+    for ep in pipe.epochs(EPOCHS, features=drifted):
+        t0 = time.time()
+        epoch_losses = []
+        for idx in ep:
+            batch = {"tokens": jnp.asarray(tokens[idx])}
+            params, opt, m = step(params, opt, batch)
+            epoch_losses.append(m["loss"])       # no sync inside the epoch
+        losses.append(float(epoch_losses[-1]))   # one coalesced sync
+        print(f"epoch {ep.index}: last-step loss {losses[-1]:.4f} "
+              f"({time.time() - t0:.1f}s, {len(ep)} steps)")
+    assert pipe.engine.compile_count == 1, "epochs must reuse one executable"
+    assert losses[-1] < losses[0], "training should reduce the loss"
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,7 @@ from repro.sharding.specs import resolve_data_axes, shard_leading
 __all__ = [
     "AnticlusterSpec", "AnticlusterResult", "anticluster",
     "AnticlusterEngine", "ABAState", "ShardedABAState",
+    "PendingRepartition",
     "register_solver", "get_solver", "available_solvers",
 ]
 
@@ -1045,6 +1046,63 @@ class AnticlusterEngine:
         rows and draw arbitrary labels in [0, k); mutually exclusive with
         ``spec.valid_mask``.
         """
+        return self._dispatch(x, state, valid_mask).wait()
+
+    def overlap_capable(self, x_or_shape) -> bool:
+        """Whether :meth:`dispatch_repartition` can overlap for this input.
+
+        False iff the route's resolved solver executes on the host from
+        inside the trace (``Solver.host_callback`` -- e.g. ``"scipy"`` via
+        ``jax.pure_callback``): such a solve occupies the host thread while
+        in flight, so an async dispatch buys nothing and risks the known
+        host-callback deadlock the stats guard exists for.
+        """
+        shape = (tuple(x_or_shape) if isinstance(x_or_shape, (tuple, list))
+                 else tuple(jnp.shape(x_or_shape)))
+        shape, pad = self._solve_shape(shape)
+        _mode, _plan, solver, _chunk = self._routed(
+            shape, True if pad else None)
+        return not get_solver(solver).host_callback
+
+    def dispatch_repartition(self, x, state, *,
+                             valid_mask=None) -> "PendingRepartition":
+        """Non-blocking warm repartition: enqueue the solve, don't sync.
+
+        Runs exactly :meth:`repartition`'s validation and compiled call but
+        returns immediately after the async dispatch (JAX queues the
+        executable; the host thread never touches ``block_until_ready``).
+        The returned :class:`PendingRepartition` finishes the epoch on
+        ``wait()`` -- ``dispatch_repartition(x, state).wait()`` is
+        bit-for-bit identical to ``repartition(x, state)``, stats included.
+
+        ``state`` is consumed at dispatch time (buffers donated), so thread
+        states linearly: never reuse a state an in-flight call took.
+
+        Raises ``RuntimeError`` when :meth:`overlap_capable` is False (a
+        host-callback solver such as ``"scipy"`` -- dispatch would occupy
+        the host thread anyway); callers wanting a fallback should check
+        ``overlap_capable`` and call :meth:`repartition` instead, as
+        ``repro.train.pipeline.ABAPipeline`` does.
+        """
+        shape = tuple(jnp.shape(x))
+        if not self.overlap_capable(shape):
+            _mode, _plan, solver, _chunk = self._routed(
+                self._solve_shape(shape)[0])
+            raise RuntimeError(
+                f"solver {solver!r} runs via a host callback and cannot be "
+                "dispatched asynchronously (the solve occupies the host "
+                "thread -- no overlap is possible); check "
+                "engine.overlap_capable(x) and use the synchronous "
+                "repartition() instead")
+        return self._dispatch(x, state, valid_mask)
+
+    def _dispatch(self, x, state, valid_mask) -> "PendingRepartition":
+        """Validate, resolve the route and enqueue the compiled solve.
+
+        Shared tail of :meth:`repartition` (which ``wait()``s inline) and
+        :meth:`dispatch_repartition` (which hands the pending handle out):
+        everything up to -- but excluding -- the first sync lives here.
+        """
         spec = self.spec
         x = jnp.asarray(x).astype(spec.dtype)
         shape = tuple(x.shape)
@@ -1099,25 +1157,8 @@ class AnticlusterEngine:
             labels, prices, msum, mcnt = fn(x, tuple(state.prices), vm)
         else:
             labels, prices, msum, mcnt = fn(x, tuple(state.prices))
-        # Finish labels before dispatching the (host-level) statistics ops:
-        # host-callback solvers deadlock otherwise (see anticluster()).
-        labels = jax.block_until_ready(labels)
-        if mode == "mesh":
-            n_shards = _mesh_shards(spec)
-            plan = ((n_shards,) + plan) if n_shards > 1 else plan
-        # padding rows are masked in vm, so the stats match the unpadded run
-        sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
-                                       diversity=spec.stats)
-        bound, gap = (None, None)
-        if spec.stats:
-            bound, gap = _certificate(x, labels, prices, mode, spec.k, vm)
-        result = AnticlusterResult(
-            labels=labels[:n_rows] if pad else labels, cluster_sizes=sizes,
-            diversity_sd=sd, diversity_range=rng, k=spec.k, plan=plan,
-            solver=solver, variant=spec.variant, dual_bound=bound, gap=gap)
-        # the state keeps the padded geometry (labels' length keys the shape)
-        return result, state_cls(prices=prices, moment_sum=msum,
-                                 moment_count=mcnt, prev_labels=labels)
+        return PendingRepartition(self, x, vm, labels, prices, msum, mcnt,
+                                  mode, plan, solver, pad, n_rows, state_cls)
 
     def update(self, x, state, *, added=None,
                removed=None) -> tuple[AnticlusterResult, Any, ABAState]:
@@ -1206,3 +1247,73 @@ class AnticlusterEngine:
         static_vm = self._vm
         return jax.jit(lambda x, prices: body(x, prices, static_vm),
                        donate_argnums=(1,))
+
+
+class PendingRepartition:
+    """An in-flight (asynchronously dispatched) engine repartition.
+
+    Produced by :meth:`AnticlusterEngine.dispatch_repartition`: the compiled
+    solve is already enqueued on the device; the arrays held here are JAX's
+    async futures.  ``wait()`` performs the one deliberate sync (the same
+    ``block_until_ready`` guard ``repartition`` uses before its host-level
+    statistics) and finishes the result exactly as the synchronous path
+    would -- ``dispatch(...).wait()`` is bit-for-bit ``repartition(...)``.
+
+    ``wait()`` is idempotent (the finished pair is cached).  ``ready()``
+    polls completion without blocking, for callers that want to interleave
+    more host work while the solve drains.
+    """
+
+    def __init__(self, engine, x, vm, labels, prices, msum, mcnt,
+                 mode, plan, solver, pad, n_rows, state_cls):
+        self._engine = engine
+        self._x, self._vm = x, vm
+        self._labels, self._prices = labels, prices
+        self._msum, self._mcnt = msum, mcnt
+        self._mode, self._plan, self._solver = mode, plan, solver
+        self._pad, self._n_rows = pad, n_rows
+        self._state_cls = state_cls
+        self._done: tuple | None = None
+
+    def ready(self) -> bool:
+        """True iff the dispatched solve has finished (non-blocking)."""
+        if self._done is not None:
+            return True
+        try:
+            return all(a.is_ready() for a in jax.tree_util.tree_leaves(
+                (self._labels, self._prices)))
+        except AttributeError:  # backend arrays without is_ready()
+            return True
+
+    def wait(self) -> tuple[AnticlusterResult, Any]:
+        """Sync, compute stats (per spec) and return ``(result, state)``."""
+        if self._done is not None:
+            return self._done
+        engine, spec = self._engine, self._engine.spec
+        x, vm = self._x, self._vm
+        mode, plan, solver = self._mode, self._plan, self._solver
+        pad, n_rows = self._pad, self._n_rows
+        # Finish labels before dispatching the (host-level) statistics ops:
+        # host-callback solvers deadlock otherwise (see anticluster()).
+        labels = jax.block_until_ready(self._labels)
+        prices, msum, mcnt = self._prices, self._msum, self._mcnt
+        if mode == "mesh":
+            n_shards = _mesh_shards(spec)
+            plan = ((n_shards,) + plan) if n_shards > 1 else plan
+        # padding rows are masked in vm, so the stats match the unpadded run
+        sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
+                                       diversity=spec.stats)
+        bound, gap = (None, None)
+        if spec.stats:
+            bound, gap = _certificate(x, labels, prices, mode, spec.k, vm)
+        result = AnticlusterResult(
+            labels=labels[:n_rows] if pad else labels, cluster_sizes=sizes,
+            diversity_sd=sd, diversity_range=rng, k=spec.k, plan=plan,
+            solver=solver, variant=spec.variant, dual_bound=bound, gap=gap)
+        # the state keeps the padded geometry (labels' length keys the shape)
+        state = self._state_cls(prices=prices, moment_sum=msum,
+                                moment_count=mcnt, prev_labels=labels)
+        self._done = (result, state)
+        self._x = self._labels = self._prices = None  # free the refs
+        self._msum = self._mcnt = None
+        return self._done

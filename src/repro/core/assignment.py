@@ -582,10 +582,19 @@ class Solver(NamedTuple):
     Backends registered with the legacy price-less signature
     ``solve(cost, config) -> row_to_col`` are auto-wrapped in a pass-through
     shim by :func:`register_solver` (with a ``DeprecationWarning``).
+
+    ``host_callback`` marks backends that round-trip to the host from inside
+    the traced computation (``jax.pure_callback`` -- e.g. the scipy
+    Hungarian).  Such a solve occupies the host thread while it "runs on
+    device", so dispatching it asynchronously buys no overlap and the
+    engine's non-blocking path (``AnticlusterEngine.dispatch_repartition``,
+    ``repro.train.pipeline``) refuses it up front and falls back to the
+    synchronous route.
     """
 
     solve: Callable
     factored: Callable | None = None
+    host_callback: bool = False
 
 
 _REGISTRY: dict[str, Solver] = {}
@@ -624,6 +633,7 @@ def _legacy_factored_shim(factored: Callable) -> Callable:
 
 def register_solver(name: str, solve: Callable, *,
                     factored: Callable | None = None,
+                    host_callback: bool = False,
                     overwrite: bool = False) -> Solver:
     """Register a LAP backend under ``name`` (see :class:`Solver`).
 
@@ -634,6 +644,10 @@ def register_solver(name: str, solve: Callable, *,
     pass-through shim (incoming prices are returned unchanged, zeros when
     cold) with a ``DeprecationWarning`` -- warm starts are a no-op for such
     backends but everything else keeps working.
+
+    Pass ``host_callback=True`` for backends that execute on the host via
+    ``jax.pure_callback``: the engine's async dispatch path refuses them
+    (there is nothing to overlap with -- the "device" work IS host work).
 
     The ABA core resolves ``name`` at *trace* time (solver names are static
     jit arguments), so ``overwrite=True`` does not reach already-compiled
@@ -658,7 +672,8 @@ def register_solver(name: str, solve: Callable, *,
             "signature; wrapping it in a pass-through shim.",
             DeprecationWarning, stacklevel=2)
         factored = _legacy_factored_shim(factored)
-    solver = Solver(solve=solve, factored=factored)
+    solver = Solver(solve=solve, factored=factored,
+                    host_callback=host_callback)
     _REGISTRY[name] = solver
     return solver
 
@@ -738,4 +753,4 @@ register_solver("auction", _auction_solve_p)
 register_solver("auction_fused", _auction_solve_p,
                 factored=_auction_factored_p)
 register_solver("greedy", _greedy_stack)
-register_solver("scipy", scipy_solve_jax)
+register_solver("scipy", scipy_solve_jax, host_callback=True)

@@ -67,6 +67,35 @@ def _auto_or_flat_spec(k: int, max_k: int, chunk_size="auto", mesh=None,
         return spec.evolve(plan=None, mesh=None)
 
 
+def build_batch_schedule(labels: np.ndarray, k: int):
+    """Anticluster labels -> per-batch index arrays (the batch membership).
+
+    One batch per anticluster, rows in stable-sort order: a (k, n/k) array
+    when k divides n, else a ragged list of per-batch index arrays
+    (floor/ceil sizes -- a grown sequencer).  Shared by
+    :class:`ABABatchSequencer` and :class:`repro.train.pipeline.ABAPipeline`
+    so the two schedules agree bit-for-bit by construction.
+    """
+    labels = np.asarray(labels)
+    order = np.argsort(labels, kind="stable")
+    sizes = np.bincount(labels, minlength=k)
+    if sizes.min() == sizes.max():
+        # anticluster sizes are all exactly batch_size when K | N; a
+        # 2D array keeps the historical batches contract
+        return order.reshape(k, -1)
+    # floor/ceil batch sizes: the schedule is ragged (list of index arrays)
+    return np.split(order, np.cumsum(sizes)[:-1])
+
+
+def epoch_order(seed: int, epoch_idx: int, k: int) -> np.ndarray:
+    """The deterministic per-epoch batch order (counter-based rng).
+
+    Shared by the sequencer, the pipeline and ``launch.train``'s
+    restore-replay: the permutation depends only on ``(seed, epoch_idx)``.
+    """
+    return np.random.default_rng(seed * 100003 + epoch_idx).permutation(k)
+
+
 class ABABatchSequencer:
     """Deterministic diverse mini-batch schedule over a dataset.
 
@@ -110,28 +139,48 @@ class ABABatchSequencer:
         self.result, self.state = self.engine.partition(
             jnp.asarray(features[:self.n_used]))
         self._features = features
+        self._sig = ((self.n_used,) + tuple(np.shape(features))[1:],
+                     jnp.dtype(self.engine.spec.dtype).name)
         self._rebuild_batches()
 
+    def _check_signature(self, features: np.ndarray):
+        """Refuse features that don't match the engine's compiled signature.
+
+        The engine keys executables by (shape, dtype): a drifted-embedding
+        refresh with a different row count or width would *silently retrace*
+        (the carried flat prices are ``(1, k)`` -- independent of n and d --
+        so the state check alone cannot catch it) and quietly break the
+        compile-once contract.  Raise up front with the expected signature
+        instead; build a fresh sequencer for a genuinely new geometry.
+        """
+        shape, dtype = self._sig
+        got = tuple(np.shape(features))
+        if np.asarray(features).dtype.kind not in "fiu":
+            raise TypeError(
+                f"features dtype {np.asarray(features).dtype} is not "
+                f"numeric; the engine solves {dtype} embeddings")
+        if got[0] < shape[0] or got[1:] != shape[1:]:
+            raise ValueError(
+                f"features of shape {got} do not match the engine's "
+                f"compiled signature {shape} (>= {shape[0]} rows of "
+                f"trailing shape {shape[1:]}): a refresh must keep the "
+                "partition geometry -- build a new ABABatchSequencer for a "
+                "different dataset shape")
+
     def _rebuild_batches(self):
-        labels = np.asarray(self.result.labels)
-        order = np.argsort(labels, kind="stable")
-        sizes = np.bincount(labels, minlength=self.k)
-        if sizes.min() == sizes.max():
-            # anticluster sizes are all exactly batch_size when K | N; a
-            # 2D array keeps the historical batches contract
-            self.batches = order.reshape(self.k, -1)
-        else:
-            # a grown sequencer carries floor/ceil batch sizes: the batch
-            # schedule is ragged (list of per-batch index arrays)
-            self.batches = np.split(order, np.cumsum(sizes)[:-1])
+        self.batches = build_batch_schedule(np.asarray(self.result.labels),
+                                            self.k)
 
     def refresh(self, features: np.ndarray):
         """Warm re-partition on updated (same-shape) features.
 
         The carried :class:`ABAState` warm-starts every batch LAP; the
-        engine's compiled executable is reused as-is (no retrace).  Returns
-        the new :class:`AnticlusterResult`.
+        engine's compiled executable is reused as-is (no retrace).  Features
+        whose shape/dtype don't match the compiled signature raise a
+        ``ValueError`` up front (they would silently retrace otherwise).
+        Returns the new :class:`AnticlusterResult`.
         """
+        self._check_signature(features)
         self.result, self.state = self.engine.repartition(
             jnp.asarray(features[:self.n_used]), self.state)
         self._features = features
@@ -157,6 +206,8 @@ class ABABatchSequencer:
             added=jnp.asarray(added, dtype=self.engine.spec.dtype))
         self._features = np.asarray(new_x)
         self.n_used = self._features.shape[0]
+        # the grown geometry is the engine's signature from here on
+        self._sig = ((self.n_used,) + self._features.shape[1:], self._sig[1])
         self._rebuild_batches()
         return self.result
 
@@ -180,8 +231,8 @@ class ABABatchSequencer:
         """
         if features is not None:
             self.refresh(features)
-        rng = np.random.default_rng(self.seed * 100003 + epoch_idx)
-        return [self.batches[b] for b in rng.permutation(self.k)]
+        return [self.batches[b]
+                for b in epoch_order(self.seed, epoch_idx, self.k)]
 
     def __len__(self):
         return self.k

@@ -12,7 +12,12 @@ scale):
     (elastic restart);
   * the ABA batch schedule is DETERMINISTIC given (dataset, batch size,
     seed): after restore, the step counter alone reproduces the exact
-    mini-batch sequence -- no data-loader state to persist;
+    mini-batch sequence -- no data-loader state to persist.  Batches come
+    from ``repro.train.pipeline.ABAPipeline``'s epoch iterator; with
+    ``--refresh-features`` each next epoch's warm re-partition is
+    dispatched asynchronously and drains under the current epoch's train
+    steps (at the cost of the pure step-counter replay: membership then
+    rides the carried engine state);
   * straggler mitigation: per-step wall times are tracked and steps slower
     than --straggler-factor x the running median are logged with the step id
     (on a real pod this feeds the controller that re-slices the batch or
@@ -31,13 +36,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.data.minibatch import ABABatchSequencer, random_sequencer_batches
+from repro.data.minibatch import epoch_order, random_sequencer_batches
 from repro.data.synthetic import lm_token_stream
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.models.registry import get_config
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.pipeline import ABAPipeline
 from repro.train.train_step import make_train_step
 from repro.train.compression import (init_error_state,
                                      make_compressed_dp_train_step)
@@ -54,6 +60,14 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--aba-batching", action="store_true",
                     help="diverse mini-batches via ABA (the paper's use)")
+    ap.add_argument("--refresh-features", action="store_true",
+                    help="with --aba-batching: warm re-partition every "
+                    "epoch, dispatched asynchronously so the solve overlaps "
+                    "the previous epoch's train steps (repro.train.pipeline)."
+                    " Batch membership then depends on the carried engine "
+                    "state, so restore-replay reproduces the schedule only "
+                    "from the same start epoch (default: static membership, "
+                    "pure step-counter replay)")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
@@ -74,16 +88,18 @@ def main(argv=None):
     # ---- data: synthetic LM corpus + ABA diverse batching ------------------
     tokens, feats = lm_token_stream(args.n_docs, args.seq, cfg.vocab_size,
                                     seed=args.seed)
+    pipe = None
     if args.aba_batching:
-        seq = ABABatchSequencer(feats, args.batch, seed=args.seed)
-        sd, rg = seq.diversity_stats()
-        print(f"[data] ABA batches: K={len(seq)} diversity sd={sd:.4f} "
-              f"range={rg:.4f}")
-        batches = seq.batches
+        pipe = ABAPipeline(feats, args.batch, seed=args.seed)
+        sd, rg = pipe.diversity_stats(feats)
+        print(f"[data] ABA batches: K={len(pipe)} diversity sd={sd:.4f} "
+              f"range={rg:.4f}"
+              + (" (refresh: overlapped)" if args.refresh_features else ""))
+        steps_per_epoch = len(pipe)
     else:
         batches = random_sequencer_batches(args.n_docs, args.batch,
                                            seed=args.seed)
-    steps_per_epoch = len(batches)
+        steps_per_epoch = len(batches)
 
     # ---- model/optimizer ----------------------------------------------------
     key = jax.random.PRNGKey(args.seed)
@@ -121,14 +137,39 @@ def main(argv=None):
                              {"params": params, "opt": opt_state})
             print(f"[ckpt] step {step} -> {path}")
 
+    def epoch_batches():
+        """(step, idx) pairs from ``start_step`` on, epoch-major.
+
+        The ABA path consumes ``ABAPipeline.epochs`` -- with
+        ``--refresh-features`` every next epoch's partition is dispatched
+        before the current epoch's steps run, so the solve drains under the
+        training compute.  Without refresh (and on the random path) the
+        schedule stays the deterministic restore-replay one: membership
+        fixed, per-epoch order a pure function of ``(seed, epoch)``.
+        """
+        start_epoch = start_step // steps_per_epoch
+        n_epochs = -(-args.steps // steps_per_epoch) - start_epoch
+        if pipe is not None:
+            refresh = (lambda e: feats) if args.refresh_features else None
+            epochs_it = pipe.epochs(n_epochs, features=refresh,
+                                    start_epoch=start_epoch)
+        else:
+            epochs_it = ((batches[b] for b in
+                          epoch_order(args.seed, e, steps_per_epoch))
+                         for e in range(start_epoch,
+                                        start_epoch + n_epochs))
+        step = start_epoch * steps_per_epoch
+        for ep in epochs_it:
+            for idx in ep:
+                if step >= args.steps:
+                    return
+                if step >= start_step:
+                    yield step, idx
+                step += 1
+
     times = []
     losses = []
-    for step in range(start_step, args.steps):
-        # deterministic schedule: epoch/batch derived purely from step
-        epoch, b = divmod(step, steps_per_epoch)
-        rng = np.random.default_rng(args.seed * 100003 + epoch)
-        order = rng.permutation(steps_per_epoch)
-        idx = batches[order[b]]
+    for step, idx in epoch_batches():
         batch = {"tokens": jnp.asarray(tokens[idx])}
         t0 = time.time()
         if err is not None:

@@ -1,6 +1,8 @@
 from repro.train.optimizer import (OptConfig, adamw_init, adamw_update,
                                    lr_at, opt_abstract, opt_pspecs)
+from repro.train.pipeline import ABAPipeline, PipelineEpoch
 from repro.train.train_step import make_train_step
 
 __all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_at",
-           "opt_abstract", "opt_pspecs", "make_train_step"]
+           "opt_abstract", "opt_pspecs", "make_train_step",
+           "ABAPipeline", "PipelineEpoch"]

@@ -1,0 +1,232 @@
+"""Async overlapped anticlustered-minibatch pipeline for the training stack.
+
+The paper's headline ML application -- one anticluster per SGD mini-batch --
+only pays off at scale if the per-epoch partition hides behind the training
+compute.  :class:`ABAPipeline` makes that overlap structural instead of
+aspirational:
+
+* it owns one warm :class:`repro.anticluster.AnticlusterEngine` session for
+  the whole run (compile once, warm-start every epoch -- exactly the
+  :class:`repro.data.minibatch.ABABatchSequencer` contract);
+* at the *start* of epoch ``t`` it dispatches epoch ``t+1``'s re-partition
+  without blocking (:meth:`AnticlusterEngine.dispatch_repartition`: JAX's
+  async dispatch enqueues the compiled solve; the host thread never touches
+  ``block_until_ready`` until the epoch boundary), so the solve drains while
+  the consumer runs train steps;
+* the label/permutation buffers are **double-buffered**: the current epoch's
+  batch schedule reads one slot while the in-flight solve's results land in
+  the other; slots flip at the epoch boundary;
+* minibatches come out of an iterator API -- ``for epoch in
+  pipeline.epochs(E, features=...): for idx in epoch: ...`` -- that
+  ``repro.launch.train`` and ``benchmarks/perf_iterations.py`` consume in
+  place of ad-hoc sequencer calls.
+
+Determinism is bit-for-bit the sequencer's: batch membership comes from the
+same engine route (``_auto_or_flat_spec``) and the same schedule builder
+(``build_batch_schedule``), the per-epoch batch order from the same
+counter-based rng (``epoch_order``) -- ``tests/test_pipeline.py`` pins
+pipeline-vs-sequencer equality of labels and batch order per epoch, on one
+device and under the 2-device mesh-smoke job.
+
+When overlap is impossible -- a host-callback solver like ``"scipy"``
+occupies the host thread while it "runs on device"
+(``Solver.host_callback``) -- the pipeline falls back **loudly** (one
+``RuntimeWarning``) to synchronous sequencing: same results, no overlap.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.anticluster import AnticlusterEngine
+from repro.data.minibatch import (_auto_or_flat_spec, build_batch_schedule,
+                                  epoch_order)
+
+__all__ = ["ABAPipeline", "PipelineEpoch"]
+
+
+class PipelineEpoch:
+    """One epoch's minibatch schedule (iterable of batch index arrays).
+
+    Yields ``len(self)`` numpy index arrays into the dataset, in the
+    epoch's deterministic order.  ``gathered(data)`` is the convenience
+    iterator over ``data[idx]`` slices for array-like datasets.  While this
+    epoch is being consumed, the *next* epoch's partition is already in
+    flight (unless the pipeline fell back to synchronous mode).
+    """
+
+    def __init__(self, index: int, batches, order: np.ndarray):
+        self.index = int(index)
+        self.order = order
+        self._batches = batches
+
+    def __len__(self) -> int:
+        return len(self.order)
+
+    def __iter__(self):
+        for b in self.order:
+            yield self._batches[b]
+
+    def gathered(self, data):
+        """Yield ``data[idx]`` per batch (token rows, images, ...)."""
+        for idx in self:
+            yield data[idx]
+
+
+class _SyncSolve:
+    """Deferred *synchronous* repartition (the loud-fallback twin of
+    :class:`repro.anticluster.PendingRepartition`): nothing is dispatched at
+    construction; ``wait()`` runs the blocking ``repartition`` at the epoch
+    boundary, exactly where the sequencer would."""
+
+    def __init__(self, engine, x, state):
+        self._engine, self._x, self._state = engine, x, state
+
+    def wait(self):
+        return self._engine.repartition(self._x, self._state)
+
+
+class ABAPipeline:
+    """Warm-session anticlustered minibatches with epoch-overlapped solves.
+
+    Args (mirroring :class:`~repro.data.minibatch.ABABatchSequencer`):
+      features: (N, D) embedding anticlustered into K = N // batch_size
+        batches.  The constructor's cold partition compiles the engine's
+        one executable; every later epoch warm-starts it
+        (``engine.compile_count`` stays 1).
+      batch_size: examples per step.
+      seed: drives the per-epoch batch-order permutation (bit-identical to
+        the sequencer's / ``launch.train``'s counter-based rng).
+      chunk_size / max_k / mesh / data_axes: forwarded to the engine spec
+        exactly as the sequencer forwards them (mesh sessions dispatch the
+        same single jitted ``shard_map`` executable asynchronously).
+      solver: optional LAP backend override (registry name).  Host-callback
+        backends (``"scipy"``) force the loud synchronous fallback.
+
+    The timed path runs the engine with ``stats=False`` -- diversity stats
+    and the dual certificate are host/device work outside the solve that
+    does not change labels (pinned by ``tests/test_pipeline.py``); call
+    :meth:`diversity_stats` when you want the numbers.
+    """
+
+    def __init__(self, features: np.ndarray, batch_size: int, *,
+                 max_k: int = 512, seed: int = 0, chunk_size="auto",
+                 mesh=None, data_axes="auto", solver: str | None = None):
+        n = features.shape[0]
+        self.batch_size = batch_size
+        self.k = max(n // batch_size, 1)
+        self.n_used = self.k * batch_size
+        self.seed = seed
+        spec = _auto_or_flat_spec(self.k, max_k, chunk_size, mesh=mesh,
+                                  data_axes=data_axes).evolve(stats=False)
+        if solver is not None:
+            spec = spec.evolve(solver=solver)
+        self.engine = AnticlusterEngine(spec)
+        x0 = jnp.asarray(features[:self.n_used])
+        self.result, self._state = self.engine.partition(x0)
+        self._dtype = spec.dtype
+        # double buffer: two (labels, batches) slots; the active one feeds
+        # the current epoch's schedule, the other receives the in-flight
+        # solve's results at the boundary, then they flip.
+        self._slots: list[Any] = [None, None]
+        self._active = 0
+        self._fill_slot(self._active, np.asarray(self.result.labels))
+        self.overlapped = bool(self.engine.overlap_capable(x0))
+        self._warned_sync = False
+
+    # -- buffers -----------------------------------------------------------
+
+    def _fill_slot(self, slot: int, labels: np.ndarray) -> None:
+        self._slots[slot] = (labels, build_batch_schedule(labels, self.k))
+
+    def _flip_to(self, labels: np.ndarray) -> None:
+        back = 1 - self._active
+        self._fill_slot(back, labels)
+        self._active = back
+
+    @property
+    def labels(self) -> np.ndarray:
+        """Current epoch's anticluster labels (the active buffer)."""
+        return self._slots[self._active][0]
+
+    @property
+    def batches(self):
+        """Current epoch's batch membership (the active buffer)."""
+        return self._slots[self._active][1]
+
+    def __len__(self) -> int:
+        return self.k
+
+    # -- stats -------------------------------------------------------------
+
+    def diversity_stats(self, features: np.ndarray):
+        """(sd, range) of per-batch diversity under the current labels."""
+        from repro.core.objective import diversity_per_cluster
+        f = jnp.asarray(features[:self.n_used])
+        div = np.asarray(diversity_per_cluster(
+            f, jnp.asarray(self.labels), self.k))
+        return float(div.std()), float(div.max() - div.min())
+
+    # -- the iterator API --------------------------------------------------
+
+    def epochs(self, n_epochs: int, *,
+               features: Callable[[int], np.ndarray] | None = None,
+               start_epoch: int = 0):
+        """Yield :class:`PipelineEpoch` schedules for ``n_epochs`` epochs.
+
+        ``features``: optional per-epoch embedding provider; ``features(e)``
+        is warm-repartitioned to produce epoch ``e``'s batch membership for
+        ``e > start_epoch`` (epoch ``start_epoch`` uses the constructor's
+        partition, like the sequencer's ``epoch(0)``).  The solve for epoch
+        ``e+1`` is dispatched *before* epoch ``e`` is handed out, so it
+        drains while the consumer trains; the epoch boundary performs the
+        one sync.  ``None`` keeps batch membership static (no further
+        solves) -- only the batch *order* rotates, which preserves
+        ``launch.train``'s restore-replay contract (the schedule is a pure
+        function of the step counter).
+
+        With a host-callback solver the overlap is impossible; one
+        ``RuntimeWarning`` fires and each solve runs synchronously at its
+        epoch boundary instead (same bits, no overlap).
+        """
+        end = start_epoch + n_epochs
+        pending = [None]
+        try:
+            yield from self._epochs(start_epoch, end, features, pending)
+        finally:
+            if pending[0] is not None:
+                # consumer abandoned the generator mid-flight: finish the
+                # dispatched solve so self._state never points at buffers
+                # the in-flight call consumed (they were donated)
+                self.result, self._state = pending[0].wait()
+                self._flip_to(np.asarray(self.result.labels))
+                pending[0] = None
+
+    def _epochs(self, start_epoch, end, features, pending):
+        for e in range(start_epoch, end):
+            if pending[0] is not None:
+                self.result, self._state = pending[0].wait()
+                self._flip_to(np.asarray(self.result.labels))
+            pending[0] = None
+            if features is not None and e + 1 < end:
+                x_next = jnp.asarray(
+                    np.asarray(features(e + 1))[:self.n_used], self._dtype)
+                if self.overlapped:
+                    pending[0] = self.engine.dispatch_repartition(
+                        x_next, self._state)
+                else:
+                    if not self._warned_sync:
+                        warnings.warn(
+                            f"solver {self.engine.spec.solver!r} executes "
+                            "via a host callback: epoch partitions cannot "
+                            "overlap with training; falling back to "
+                            "synchronous sequencing (same results, no "
+                            "overlap)", RuntimeWarning, stacklevel=2)
+                        self._warned_sync = True
+                    pending[0] = _SyncSolve(self.engine, x_next, self._state)
+            yield PipelineEpoch(e, self.batches,
+                                epoch_order(self.seed, e, self.k))

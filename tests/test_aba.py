@@ -49,6 +49,25 @@ def test_beats_random(seed):
     assert oa >= orr * 0.999
 
 
+def test_exchange_vectorized_balance_and_quality():
+    """The vectorized exchange heuristic (table10_scale's competitive frame):
+    exact balance by construction, beats its random start, and lands within
+    a few percent of ABA's objective at small n."""
+    from repro.core.baselines import exchange_anticlustering
+    x = _data(512, 6, 7)
+    k = 8
+    le = exchange_anticlustering(x, k, seed=7)
+    counts = np.bincount(le, minlength=k)
+    assert counts.min() == counts.max() == 512 // k
+    la = np.asarray(aba(jnp.asarray(x), k))
+    lr = random_partition(512, k, seed=7)
+    oe = float(objective_centroid(jnp.asarray(x), jnp.asarray(le), k))
+    oa = float(objective_centroid(jnp.asarray(x), jnp.asarray(la), k))
+    orr = float(objective_centroid(jnp.asarray(x), jnp.asarray(lr), k))
+    assert oe > orr
+    assert oe >= 0.97 * oa
+
+
 def test_balanced_diversity_vs_random():
     """Paper Table 6: ABA's per-cluster diversity spread is much smaller."""
     x = _data(600, 6, 3)

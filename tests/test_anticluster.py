@@ -438,6 +438,7 @@ def test_public_api_snapshot():
     assert repro.anticluster.__all__ == [
         "AnticlusterSpec", "AnticlusterResult", "anticluster",
         "AnticlusterEngine", "ABAState", "ShardedABAState",
+        "PendingRepartition",
         "register_solver", "get_solver", "available_solvers",
     ]
     assert repro.core.__all__ == [

@@ -1,0 +1,193 @@
+"""The training pipeline's contracts: async dispatch parity, bit-for-bit
+pipeline-vs-sequencer determinism (1 device and on a 2-device mesh), the
+compile-once pin, the host-callback fallback, and the refresh signature
+guard (the silent-retrace bugfix)."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.anticluster import AnticlusterEngine, AnticlusterSpec
+from repro.data.minibatch import (ABABatchSequencer, build_batch_schedule,
+                                  epoch_order)
+from repro.launch.mesh import make_host_mesh
+from repro.train.pipeline import ABAPipeline
+
+
+def _feats(n=256, d=8, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _drift(f, e):
+    r = np.random.default_rng(100 + e)
+    return (f + 0.05 * r.normal(size=f.shape)).astype(np.float32)
+
+
+def _drift_chain(f, e):
+    for i in range(1, e + 1):
+        f = _drift(f, i)
+    return f
+
+
+# ---------------------------------------------------------------- dispatch
+
+
+def test_dispatch_wait_matches_repartition():
+    """dispatch_repartition(...).wait() is bitwise the blocking repartition,
+    stats included, on two independent warm sessions."""
+    spec = AnticlusterSpec(k=8, plan="auto", max_k=512)
+    e1, e2 = AnticlusterEngine(spec), AnticlusterEngine(spec)
+    x = jnp.asarray(_feats())
+    _, s1 = e1.partition(x)
+    _, s2 = e2.partition(x)
+    x2 = jnp.asarray(_drift(_feats(), 1))
+    ra, sa = e1.repartition(x2, s1)
+    pending = e2.dispatch_repartition(x2, s2)
+    rb, sb = pending.wait()
+    assert np.array_equal(np.asarray(ra.labels), np.asarray(rb.labels))
+    assert np.array_equal(np.asarray(ra.cluster_sizes),
+                          np.asarray(rb.cluster_sizes))
+    assert float(ra.diversity_sd) == float(rb.diversity_sd)
+    for a, b in zip(jax.tree_util.tree_leaves(sa),
+                    jax.tree_util.tree_leaves(sb)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # wait() is idempotent: the same result object comes back
+    rb2, sb2 = pending.wait()
+    assert rb2 is rb and sb2 is sb
+    assert e1.compile_count == 1 and e2.compile_count == 1
+
+
+def test_dispatch_refuses_host_callback_solver():
+    """scipy runs via pure_callback on the host thread: dispatching it could
+    never overlap, so the engine refuses instead of pretending."""
+    spec = AnticlusterSpec(k=4, plan=None, solver="scipy", chunk_size=None)
+    eng = AnticlusterEngine(spec)
+    x = jnp.asarray(_feats(64, 4))
+    _, st = eng.partition(x)
+    assert not eng.overlap_capable(x)
+    with pytest.raises(RuntimeError, match="host callback"):
+        eng.dispatch_repartition(x, st)
+
+
+# ------------------------------------------------- pipeline vs sequencer
+
+
+def _parity(mesh=None):
+    """Pipeline labels + batch order must equal the sequencer's, per epoch."""
+    feats = _feats()
+    n_epochs = 4
+    seq = ABABatchSequencer(feats, 32, seed=3, mesh=mesh)
+    pipe = ABAPipeline(feats, 32, seed=3, mesh=mesh)
+    for e, ep in enumerate(pipe.epochs(
+            n_epochs, features=lambda i: _drift_chain(feats, i))):
+        seq_batches = seq.epoch(e, features=_drift_chain(feats, e)
+                                if e else None)
+        assert np.array_equal(np.asarray(pipe.labels),
+                              np.asarray(seq.result.labels))
+        assert ep.index == e
+        assert np.array_equal(ep.order, epoch_order(3, e, len(seq)))
+        got = [np.asarray(b) for b in ep]
+        assert len(got) == len(seq_batches)
+        for a, b in zip(got, seq_batches):
+            assert np.array_equal(a, b)
+    assert seq.engine.compile_count == 1
+    assert pipe.engine.compile_count == 1
+
+
+def test_pipeline_matches_sequencer_bitwise():
+    _parity()
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs 2 devices (mesh-smoke job forces them)")
+def test_pipeline_matches_sequencer_bitwise_mesh():
+    _parity(mesh=make_host_mesh(2, 1))
+
+
+def test_pipeline_static_membership_rotates_order_only():
+    """features=None: membership frozen (restore-replay), order rotates."""
+    feats = _feats()
+    pipe = ABAPipeline(feats, 32, seed=1)
+    lab0 = pipe.labels.copy()
+    orders = []
+    for ep in pipe.epochs(3):
+        orders.append(ep.order.copy())
+        assert np.array_equal(pipe.labels, lab0)
+    assert not np.array_equal(orders[0], orders[1])
+    assert np.array_equal(orders[1], epoch_order(1, 1, len(pipe)))
+
+
+def test_pipeline_abandoned_mid_epoch_recovers():
+    """Breaking out mid-flight must finish the dispatched solve (its input
+    state was donated) and leave the pipeline reusable."""
+    feats = _feats()
+    pipe = ABAPipeline(feats, 32, seed=0)
+    for ep in pipe.epochs(4, features=lambda i: _drift_chain(feats, i)):
+        break  # abandon with epoch 1's solve in flight
+    # the generator's cleanup landed the in-flight result; a fresh iteration
+    # starts from it without touching donated buffers
+    ref = ABABatchSequencer(feats, 32, seed=0)
+    ref.epoch(1, features=_drift_chain(feats, 1))
+    assert np.array_equal(np.asarray(pipe.labels),
+                          np.asarray(ref.result.labels))
+    for ep in pipe.epochs(1, start_epoch=2):
+        assert len(list(ep)) == len(pipe)
+    assert pipe.engine.compile_count == 1
+
+
+def test_pipeline_scipy_falls_back_loudly_same_bits():
+    """A host-callback solver cannot overlap: one RuntimeWarning, then
+    synchronous sequencing with identical labels."""
+    feats = _feats(64, 4)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        pipe = ABAPipeline(feats, 16, seed=0, solver="scipy")
+        assert not pipe.overlapped
+        labels = []
+        for ep in pipe.epochs(3, features=lambda i: _drift_chain(feats, i)):
+            labels.append(pipe.labels.copy())
+    warns = [w for w in rec if issubclass(w.category, RuntimeWarning)
+             and "host callback" in str(w.message)]
+    assert len(warns) == 1  # loud, once
+    # same bits as the blocking engine path on the same spec
+    eng = AnticlusterEngine(pipe.engine.spec)
+    res, st = eng.partition(jnp.asarray(feats))
+    assert np.array_equal(labels[0], np.asarray(res.labels))
+    for e in (1, 2):
+        res, st = eng.repartition(
+            jnp.asarray(_drift_chain(feats, e)), st)
+        assert np.array_equal(labels[e], np.asarray(res.labels))
+    assert pipe.engine.compile_count == 1
+
+
+# ------------------------------------------- refresh signature validation
+
+
+def test_refresh_rejects_mismatched_signature_instead_of_retracing():
+    feats = _feats(256, 8)
+    seq = ABABatchSequencer(feats, 32, seed=0)
+    assert seq.engine.compile_count == 1
+    with pytest.raises(ValueError, match="compiled signature"):
+        seq.epoch(1, features=_feats(256, 9, seed=1))   # wrong width
+    with pytest.raises(ValueError, match="compiled signature"):
+        seq.refresh(_feats(128, 8, seed=1))             # too few rows
+    with pytest.raises(TypeError, match="not numeric"):
+        seq.refresh(feats.astype(np.complex64))
+    # the guard fired before any engine call: still exactly one executable
+    assert seq.engine.compile_count == 1
+    seq.epoch(1, features=_drift(feats, 1))             # valid refresh
+    assert seq.engine.compile_count == 1
+
+
+def test_pipeline_epoch_schedule_helpers_agree():
+    """build_batch_schedule is the single source of batch membership."""
+    labels = np.random.default_rng(0).integers(0, 8, size=256)
+    sched = build_batch_schedule(labels, 8)
+    flat = np.concatenate([np.asarray(b) for b in sched])
+    assert sorted(flat.tolist()) == list(range(256))
+    for b, idx in enumerate(sched):
+        assert np.all(labels[np.asarray(idx)] == labels[np.asarray(idx)][0])
