@@ -46,7 +46,14 @@ class BenchRecorder:
         if extra:
             # measured side-channels (peak-memory bytes, gap certificates...)
             # ride along; the regression gate only reads the schema keys, so
-            # extra columns inform without ever breaking the baseline match
+            # extra columns inform without ever breaking the baseline match.
+            # Schema keys are reserved: an extra named "wall_s" would
+            # silently overwrite the measurement the gate compares.
+            clash = set(extra) & set(BENCH_SCHEMA)
+            if clash:
+                raise ValueError(
+                    f"extra keys {sorted(clash)} collide with the BENCH "
+                    f"schema {BENCH_SCHEMA}; rename the extra column(s)")
             row.update(extra)
         self.rows.append(row)
 
@@ -54,6 +61,25 @@ class BenchRecorder:
         with open(path, "w") as f:
             json.dump(self.rows, f, indent=1)
         print(f"# wrote {len(self.rows)} rows -> {path}", flush=True)
+
+
+def obs_disabled_overhead(iters: int = 20000) -> float:
+    """Measured per-call cost (seconds) of a *disabled* ``repro.obs`` span.
+
+    The serve/pipeline benches self-gate tracing's disabled-path overhead
+    deterministically: per-span cost times the spans-per-request estimate
+    must stay under 2% of the measured latency.  Asserts tracing is in fact
+    off -- a stray enabled trace would invalidate every timed arm.
+    """
+    from repro import obs
+    assert not obs.enabled(), \
+        "obs tracing must be disabled during benchmark timing"
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        with obs.span("bench/noop"):
+            pass
+        obs.event("bench/noop")
+    return (time.perf_counter() - t0) / iters
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

@@ -49,6 +49,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.data.minibatch import ABABatchSequencer, random_sequencer_batches
 from repro.data.synthetic import lm_token_stream
 from repro.launch.mesh import make_host_mesh
@@ -58,7 +59,13 @@ from repro.train.optimizer import OptConfig, adamw_init
 from repro.train.pipeline import ABAPipeline
 from repro.train.train_step import make_train_step
 
-from benchmarks.common import BenchRecorder, row
+from benchmarks.common import BenchRecorder, obs_disabled_overhead, row
+
+# instrumented call sites one pipeline epoch crosses with tracing off
+# (pipeline/wait span + pipeline/dispatch event + pipeline/epoch span +
+# engine dispatch's enabled() check) -- the disabled-overhead gate
+# multiplies the measured per-site cost by this
+_OBS_SITES_PER_EPOCH = 4
 
 
 def _drift(feats: np.ndarray, epoch: int) -> np.ndarray:
@@ -163,6 +170,7 @@ def _run_random(cfg, mesh, tokens, feats, batch_size, n_epochs, seed):
 
 def run(full: bool = False, smoke: bool = False, dp: int = 1,
         json_path: str = "BENCH_train.json") -> int:
+    assert not obs.enabled(), "timed arms must run with tracing disabled"
     if smoke:
         # 5 measured epochs: the overlap margin (~5% of an epoch at this
         # shape) needs a median over enough epochs to sit above wall noise
@@ -230,6 +238,18 @@ def run(full: bool = False, smoke: bool = False, dp: int = 1,
     print(f"# overlap: overlapped {ovl_s:.3f}s/epoch vs sequential "
           f"{seq_s:.3f}s/epoch (ratio {ratio:.3f})", flush=True)
     rec.write(json_path)
+
+    # observability cost gate: tracing-off instrumentation must be free at
+    # epoch granularity, measured deterministically (per-site disabled-span
+    # cost x sites per epoch vs the epoch wall), never by A/B timing
+    per_site = obs_disabled_overhead()
+    obs_overhead = per_site * _OBS_SITES_PER_EPOCH
+    print(f"# obs disabled overhead: {per_site * 1e9:.0f} ns/site x "
+          f"{_OBS_SITES_PER_EPOCH} sites = {obs_overhead * 1e6:.2f} "
+          f"us/epoch ({obs_overhead / ovl_s * 100:.4f}% of epoch wall)",
+          flush=True)
+    assert obs_overhead <= 0.02 * ovl_s, \
+        "disabled tracing exceeds 2% of the epoch wall"
 
     failures = []
     if gate:

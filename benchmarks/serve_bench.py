@@ -38,9 +38,16 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.serve import AnticlusterRouter, Rejected
 
-from benchmarks.common import BenchRecorder
+from benchmarks.common import BenchRecorder, obs_disabled_overhead
+
+# instrumented call sites a single served request crosses with tracing off
+# (admit event + queue-wait event + serve/solve span + engine/repartition
+# begin check + resolve latency record + headroom) -- the disabled-overhead
+# gate multiplies the measured per-site cost by this
+_OBS_SITES_PER_REQUEST = 6
 
 SIZES = (100, 104, 112, 120)   # near-shapes sharing the 128-row bucket
 D, K = 4, 5
@@ -109,6 +116,7 @@ def run(smoke: bool = False, json_path: str = "BENCH_serve.json") -> int:
     # bimodal run-to-run) and 400 is decisively past seq's capacity
     qps_points = [100.0, 400.0] if smoke else [50.0, 100.0, 400.0, 600.0]
     duration = 3.0 if smoke else 6.0
+    assert not obs.enabled(), "timed arms must run with tracing disabled"
     rng = np.random.default_rng(0)
     xs = [rng.normal(size=(n, D)).astype(np.float32) for n in SIZES]
     rec = BenchRecorder()
@@ -132,6 +140,20 @@ def run(smoke: bool = False, json_path: str = "BENCH_serve.json") -> int:
         finally:
             router.close()
     rec.write(json_path)
+    # observability cost gate: with tracing disabled (asserted inside the
+    # helper) the per-site cost times the sites one request crosses must
+    # stay under 2% of the cheapest measured p50 -- tracing-off must be
+    # free at serving granularity, deterministically (no A/B timing noise)
+    per_site = obs_disabled_overhead()
+    p50_min = min(r["wall_s"] for r in rec.rows
+                  if not r["bench"].endswith("/p99"))
+    overhead = per_site * _OBS_SITES_PER_REQUEST
+    print(f"# obs disabled overhead: {per_site * 1e9:.0f} ns/site x "
+          f"{_OBS_SITES_PER_REQUEST} sites = {overhead * 1e6:.2f} us/req "
+          f"({overhead / p50_min * 100:.3f}% of min p50 "
+          f"{p50_min * 1e3:.1f} ms)", flush=True)
+    assert overhead <= 0.02 * p50_min, \
+        "disabled tracing exceeds 2% of serve p50"
     wins = [q for q in qps_points
             if thr[("cont", q)] > 1.1 * thr[("seq", q)]]
     if wins:

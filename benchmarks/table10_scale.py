@@ -24,6 +24,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.anticluster import anticluster
 from repro.core import objective_centroid
 from repro.core.aba import aba_core, aba_stream
@@ -44,11 +45,7 @@ def _labels(x, k, chunk, max_k, solver, cats=None, stats=False):
 def _temp_bytes(fn, *args, **kw) -> int:
     """Compiler-measured temp (scratch) bytes for a jitted call, -1 if the
     backend's memory analysis is unavailable (e.g. some CPU builds)."""
-    try:
-        mem = fn.lower(*args, **kw).compile().memory_analysis()
-        return int(mem.temp_size_in_bytes)
-    except Exception:
-        return -1
+    return obs.memory_profile(fn, *args, **kw).temp_bytes
 
 
 def run(full: bool = False, smoke: bool = False,
@@ -101,6 +98,29 @@ def run(full: bool = False, smoke: bool = False,
             assert np.array_equal(lab_p, lab_f), \
                 "chunk_size >= n must be bit-identical to the dense path"
             print("# parity: chunk_size>=n == dense (bit-for-bit) OK")
+
+        if k <= max_k:  # flat route: lower the exact calls being timed
+            # the ROADMAP streaming receipt -- O(chunk*d + k*d) vs O(n*d)
+            # live memory -- as trajectory rows.  memory_profile only
+            # lowers+compiles (nothing executes), so wall_s is 0.0 by
+            # construction and the gate's --min-seconds floor keeps these
+            # rows permanently wall-neutral; the measured bytes ride in
+            # ``objective`` and the extra columns.
+            prof_s = obs.memory_profile(aba_stream, x, k, chunk,
+                                        solver="auction")
+            prof_d = obs.memory_profile(aba_core, x[None], k,
+                                        solver="auction")
+            peak = obs.peak_rss_bytes()
+            for tag, prof in (("stream", prof_s), ("dense", prof_d)):
+                rec.add(f"scale/memory/{tag}/n{n}_k{k}", f"{n}x{d}x{k}",
+                        0.0, float(prof.temp_bytes),
+                        extra={"argument_bytes": prof.argument_bytes,
+                               "output_bytes": prof.output_bytes,
+                               "peak_rss_bytes": peak})
+            print(f"table10mem,{n},{d},{k},{chunk},"
+                  f"temp_stream={prof_s.temp_bytes},"
+                  f"temp_dense={prof_d.temp_bytes},peak_rss={peak}",
+                  flush=True)
 
         dev = dev_pct(o_s, o_d) if run_dense else float("nan")
         print(f"table10,{n},{d},{k},{chunk},{t_s:.2f},{t_d:.2f},"

@@ -1,0 +1,93 @@
+"""End-to-end observability: trace an engine session, a serving router, and
+a training pipeline through ``repro.obs``, then summarize the JSONL.
+
+One scoped ``obs.tracing(...)`` block covers all three tiers:
+
+* an :class:`AnticlusterEngine` built with ``telemetry=True`` -- the solver's
+  compiled-path stats pytree (auction rounds per eps phase, warm re-entry)
+  surfaces as ``engine.last_telemetry`` and per-phase ``solver/phase`` trace
+  events under the ``engine/repartition`` span;
+* an :class:`AnticlusterRouter` (inline-driven, ``background=False``) --
+  admission, queue-wait, and lane-solve instrumentation, plus the latency /
+  queue-wait percentiles on ``ServiceMetrics``;
+* an :class:`ABAPipeline` -- dispatch / wait / epoch spans showing how much
+  of each solve the overlapped epochs actually hid.
+
+    PYTHONPATH=src python examples/trace_anticluster.py
+
+Writes ``TRACE_smoke.jsonl`` (CI uploads it next to the BENCH artifacts) and
+prints the ``tools/trace_report.py`` summary table.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import obs
+from repro.anticluster import AnticlusterEngine, AnticlusterSpec
+from repro.serve import AnticlusterRouter
+from repro.train.pipeline import ABAPipeline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="TRACE_smoke.jsonl")
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+
+    with obs.tracing(args.out) as trace:
+        # -- engine tier: solver telemetry rides the compiled output -------
+        engine = AnticlusterEngine(
+            AnticlusterSpec(k=5, solver="auction", telemetry=True))
+        x = rng.normal(size=(200, 8)).astype(np.float32)
+        res, state = engine.partition(x)
+        engine.repartition(x, state)
+        tele = obs.summarize_auction_telemetry(engine.last_telemetry)
+        print(f"engine: compile_count={engine.compile_count} "
+              f"rounds_total={tele['rounds_total']} "
+              f"warm_fraction={tele['warm_fraction']:.2f}")
+
+        # -- serving tier: inline-driven router (deterministic, no thread) -
+        with AnticlusterRouter(k=5, plan=None, max_group=8,
+                               background=False) as router:
+            tickets = [router.submit(
+                rng.normal(size=(100 + 4 * (i % 3), 8)).astype(np.float32))
+                for i in range(6)]
+            router.drain()
+            for t in tickets:
+                assert t.result().balanced
+            m = router.metrics()
+            print(f"router: completed={m.completed} "
+                  f"latency_p50={m.latency_p50 * 1e3:.1f}ms "
+                  f"queue_wait_p99={m.queue_wait_p99 * 1e3:.1f}ms")
+
+        # -- training tier: overlapped epoch pipeline ----------------------
+        embed = rng.normal(size=(240, 8)).astype(np.float32)
+        pipe = ABAPipeline(embed, batch_size=48, seed=0)
+        drift = [embed + 0.05 * e for e in range(3)]
+        for ep in pipe.epochs(3, features=lambda e: drift[e]):
+            for _ in ep:              # "training": just walk the schedule
+                pass
+        print(f"pipeline: epochs=3 overlapped={pipe.overlapped} "
+              f"compile_count={pipe.engine.compile_count}")
+
+    names = {ev["name"] for ev in trace.snapshot()}
+    for required in ("engine/repartition", "solver/phase", "serve/admit",
+                     "serve/queue_wait", "serve/solve", "pipeline/dispatch",
+                     "pipeline/wait", "pipeline/epoch"):
+        assert required in names, f"missing span/event {required!r}: {names}"
+    assert not obs.enabled(), "tracing() must restore the disabled state"
+
+    print(f"\nwrote {len(trace.snapshot())} events -> {args.out}\n")
+    sys.path.insert(0, "tools")
+    import trace_report
+    print(trace_report.render(trace_report.summarize(
+        trace_report.load_events(args.out))))
+    print("\nOK")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.aba import aba_core, aba_stream
 from repro.core.assignment import (AuctionConfig, available_solvers,
                                    get_solver, register_solver)
@@ -166,6 +167,19 @@ class AnticlusterSpec:
         with a ``RuntimeWarning`` -- to a full warm ``repartition``
         (bit-for-bit identical to calling ``repartition`` on the post-delta
         data with the carried prices).
+      telemetry: surface the auction solver's internals (rounds per eps
+        phase, the eps schedule, warm re-entry decisions) from the compiled
+        path: the engine's result carries the stacked per-batch stats
+        pytree (``AnticlusterEngine.last_telemetry``; converted to NumPy at
+        ``wait()``, outside any timed window) and a traced run
+        (``repro.obs``) records per-phase ``solver/phase`` events.  Flat,
+        stream, and stacked routes report; hierarchical and mesh routes
+        report ``None`` (their per-level/per-shard solves are not
+        stitchable into one batch axis).  Solvers without a registered
+        stats twin (greedy, scipy) report ``None`` as well.  The flag is a
+        static part of the compiled signature: ``telemetry=False`` (the
+        default) leaves every executable byte-identical -- observability
+        never taxes the default path.
     """
 
     k: int
@@ -186,6 +200,7 @@ class AnticlusterSpec:
     batched: bool = True
     stats: bool = True
     update_threshold: float = 0.25
+    telemetry: bool = False
 
     def __post_init__(self):
         if self.k < 1:
@@ -598,7 +613,8 @@ def _route(spec: AnticlusterSpec, shape: tuple[int, ...],
 
 def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
                chunk, cats, n_categories: int, vm, codes=None,
-               n_codes: int = 0, prices=None, return_state: bool = False):
+               n_codes: int = 0, prices=None, return_state: bool = False,
+               telemetry: bool = False):
     """Dispatch one solve to the right core (shared engine/one-shot path).
 
     ``prices`` is the per-level tuple from :class:`ABAState` (flat /
@@ -612,54 +628,76 @@ def _call_core(x, spec: AnticlusterSpec, mode: str, plan, solver: str,
     stacked input) -- except in mesh mode, where the state carries the
     per-shard moments directly (``"moment_sum"`` (S, d) /
     ``"moment_count"`` (S,)).
+
+    ``telemetry`` (static, requires ``return_state``) adds a ``"telemetry"``
+    key to the state dict: the solver's per-batch stats pytree for the
+    flat / stream / stacked routes, ``None`` for hier / mesh (their
+    per-level / per-shard solves have no single batch axis) and for
+    solvers without a stats twin.
     """
     kw = dict(variant=spec.variant, solver=solver,
               auction_config=spec.auction_config)
     if mode == "mesh":
         from repro.core.sharded import sharded_core
-        return sharded_core(
+        out = sharded_core(
             x, spec.k, spec.mesh, data_axes=spec.data_axes,
             max_k=spec.max_k, batched=spec.batched, chunk_size=chunk,
             categories=cats, n_categories=n_categories,
             fair_codes=codes, n_fair_codes=n_codes, valid_mask=vm,
             prices=prices, return_state=return_state, **kw)
+        if return_state and telemetry:
+            out[1]["telemetry"] = None  # per-shard solves: no batch axis
+        return out
     p0 = None if prices is None else prices[0]
     if mode == "stacked":
         out = aba_core(x, spec.k, vm, categories=cats,
                        n_categories=n_categories, fair_codes=codes,
                        n_fair_codes=n_codes, prices=p0,
-                       return_state=return_state, **kw)
+                       return_state=return_state, telemetry=telemetry, **kw)
         if not return_state:
             return out
         labels, st = out
-        return labels, {"prices": (st["prices"],), "mu": st["mu"]}
+        state = {"prices": (st["prices"],), "mu": st["mu"]}
+        if telemetry:
+            state["telemetry"] = st["telemetry"]
+        return labels, state
     if mode == "hier":
-        return hierarchical_core(x, plan, categories=cats,
-                                 n_categories=n_categories,
-                                 fair_codes=codes, n_fair_codes=n_codes,
-                                 batched=spec.batched, chunk_size=chunk,
-                                 prices=prices, return_state=return_state,
-                                 **kw)
+        out = hierarchical_core(x, plan, categories=cats,
+                                n_categories=n_categories,
+                                fair_codes=codes, n_fair_codes=n_codes,
+                                batched=spec.batched, chunk_size=chunk,
+                                prices=prices, return_state=return_state,
+                                **kw)
+        if return_state and telemetry:
+            out[1]["telemetry"] = None  # per-level solves: no batch axis
+        return out
     if mode == "stream":
         out = aba_stream(x, spec.k, chunk, categories=cats,
                          n_categories=n_categories, fair_codes=codes,
                          n_fair_codes=n_codes, valid_mask=vm, prices=p0,
-                         return_state=return_state, **kw)
+                         return_state=return_state, telemetry=telemetry,
+                         **kw)
         if not return_state:
             return out
         labels, st = out
-        return labels, {"prices": (st["prices"],), "mu": st["mu"]}
+        state = {"prices": (st["prices"],), "mu": st["mu"]}
+        if telemetry:
+            state["telemetry"] = st["telemetry"]
+        return labels, state
     # flat: the G=1 specialization of the stacked core
     out = aba_core(x[None], spec.k, None if vm is None else vm[None],
                    categories=None if cats is None else cats[None],
                    n_categories=n_categories,
                    fair_codes=None if codes is None else codes[None],
                    n_fair_codes=n_codes, prices=p0,
-                   return_state=return_state, **kw)
+                   return_state=return_state, telemetry=telemetry, **kw)
     if not return_state:
         return out[0]
     labels, st = out
-    return labels[0], {"prices": (st["prices"],), "mu": st["mu"][0]}
+    state = {"prices": (st["prices"],), "mu": st["mu"][0]}
+    if telemetry:
+        state["telemetry"] = st["telemetry"]
+    return labels[0], state
 
 
 def _result_stats(x, labels, k, valid_mask, diversity=True):
@@ -806,22 +844,24 @@ def anticluster(x, spec: AnticlusterSpec | None = None,
                                        vm_solve is not None)
 
     want_state = spec.stats and mode != "mesh"
-    out = _call_core(x_solve, spec, mode, plan, solver, chunk,
-                     cats_solve, n_categories, vm_solve,
-                     codes=codes_solve, n_codes=n_codes,
-                     return_state=want_state)
-    labels, st = out if want_state else (out, None)
+    with obs.span("anticluster", shape=tuple(x_solve.shape), mode=mode,
+                  solver=solver, k=spec.k):
+        out = _call_core(x_solve, spec, mode, plan, solver, chunk,
+                         cats_solve, n_categories, vm_solve,
+                         codes=codes_solve, n_codes=n_codes,
+                         return_state=want_state)
+        labels, st = out if want_state else (out, None)
+        # Finish the label computation before dispatching the statistics
+        # ops: host-callback solvers (e.g. "scipy") deadlock on CPU if new
+        # work is enqueued while their callback computation is still in
+        # flight.  (examples/scipy_deadlock_repro.py demonstrates the hang
+        # this guard prevents;
+        # tests/test_anticluster.py::test_scipy_solver_stats_no_deadlock
+        # pins it.)
+        labels = jax.block_until_ready(labels)
     if mode == "mesh":
         n_shards = _mesh_shards(spec)
         plan = ((n_shards,) + plan) if n_shards > 1 else plan
-
-    # Finish the label computation before dispatching the statistics ops:
-    # host-callback solvers (e.g. "scipy") deadlock on CPU if new work is
-    # enqueued while their callback computation is still in flight.
-    # (examples/scipy_deadlock_repro.py demonstrates the hang this guard
-    # prevents; tests/test_anticluster.py::test_scipy_solver_stats_no_deadlock
-    # pins it.)
-    labels = jax.block_until_ready(labels)
     if pad:
         labels = labels[:n_rows]
     sizes, sd, rng = _result_stats(x, labels, spec.k, vm,
@@ -903,6 +943,10 @@ class AnticlusterEngine:
         self._fns: dict = {}
         self._routes: dict = {}  # shape -> (mode, plan, solver, chunk)
         self._trace_count = 0
+        #: host-side (NumPy) copy of the last solve's solver telemetry
+        #: pytree; stays None unless ``spec.telemetry`` is set (see
+        #: :class:`AnticlusterSpec`).
+        self.last_telemetry = None
 
     @property
     def compile_count(self) -> int:
@@ -1153,12 +1197,24 @@ class AnticlusterEngine:
         if fn is None:
             fn = self._build(shape, per_call_mask=per_call_mask)
             self._fns[key] = fn
-        if per_call_mask:
-            labels, prices, msum, mcnt = fn(x, tuple(state.prices), vm)
+        span = None
+        if obs.enabled():
+            # async span: dispatch and wait() may happen on different
+            # threads / stack frames (the pipeline's overlapped epochs)
+            span = obs.begin("engine/repartition", shape=shape, mode=mode,
+                             solver=solver, k=spec.k,
+                             telemetry=spec.telemetry)
+            if mode == "stream":
+                obs.event("stream/plan", shape=shape, chunk=_chunk)
+        args = (x, tuple(state.prices)) + ((vm,) if per_call_mask else ())
+        if spec.telemetry:
+            labels, prices, msum, mcnt, tele = fn(*args)
         else:
-            labels, prices, msum, mcnt = fn(x, tuple(state.prices))
+            labels, prices, msum, mcnt = fn(*args)
+            tele = None
         return PendingRepartition(self, x, vm, labels, prices, msum, mcnt,
-                                  mode, plan, solver, pad, n_rows, state_cls)
+                                  mode, plan, solver, pad, n_rows, state_cls,
+                                  tele=tele, span=span)
 
     def update(self, x, state, *, added=None,
                removed=None) -> tuple[AnticlusterResult, Any, ABAState]:
@@ -1223,15 +1279,21 @@ class AnticlusterEngine:
             labels, st = _call_core(x, spec, mode, plan, solver, chunk,
                                     cats, ncats, vm, codes=codes,
                                     n_codes=ncodes, prices=prices,
-                                    return_state=True)
+                                    return_state=True,
+                                    telemetry=spec.telemetry)
+            # solver telemetry rides the output pytree only when the spec
+            # opts in -- the default executable is byte-identical to the
+            # pre-telemetry one (the engine compile_count pins rely on it)
+            tele = st.pop("telemetry", None) if spec.telemetry else None
             # re-center the dual prices per group (the auction is invariant
             # to a uniform shift) so carried state stays bounded over epochs
             new_prices = tuple(p - jnp.max(p, axis=-1, keepdims=True)
                                for p in st["prices"])
             if mode == "mesh":
                 # per-shard moments come straight from the sharded state
-                return (labels, new_prices, st["moment_sum"],
-                        st["moment_count"])
+                out = (labels, new_prices, st["moment_sum"],
+                       st["moment_count"])
+                return out + (tele,) if spec.telemetry else out
             mu = st["mu"]
             if mode == "stacked":
                 cnt = (jnp.full((shape[0],), float(shape[1]), jnp.float32)
@@ -1239,7 +1301,8 @@ class AnticlusterEngine:
             else:
                 cnt = (jnp.asarray(float(shape[0]), jnp.float32)
                        if vm is None else jnp.sum(vm, dtype=jnp.float32))
-            return labels, new_prices, mu * cnt[..., None], cnt
+            out = (labels, new_prices, mu * cnt[..., None], cnt)
+            return out + (tele,) if spec.telemetry else out
 
         if per_call_mask:
             return jax.jit(lambda x, prices, vm: body(x, prices, vm),
@@ -1265,7 +1328,8 @@ class PendingRepartition:
     """
 
     def __init__(self, engine, x, vm, labels, prices, msum, mcnt,
-                 mode, plan, solver, pad, n_rows, state_cls):
+                 mode, plan, solver, pad, n_rows, state_cls,
+                 tele=None, span=None):
         self._engine = engine
         self._x, self._vm = x, vm
         self._labels, self._prices = labels, prices
@@ -1273,6 +1337,8 @@ class PendingRepartition:
         self._mode, self._plan, self._solver = mode, plan, solver
         self._pad, self._n_rows = pad, n_rows
         self._state_cls = state_cls
+        self._tele = tele
+        self._span = span
         self._done: tuple | None = None
 
     def ready(self) -> bool:
@@ -1297,6 +1363,11 @@ class PendingRepartition:
         # host-callback solvers deadlock otherwise (see anticluster()).
         labels = jax.block_until_ready(self._labels)
         prices, msum, mcnt = self._prices, self._msum, self._mcnt
+        if self._tele is not None:
+            # hold the solver telemetry on the host (NumPy) so the session
+            # can inspect it after the donated device state is gone
+            engine.last_telemetry = jax.tree_util.tree_map(
+                np.asarray, self._tele)
         if mode == "mesh":
             n_shards = _mesh_shards(spec)
             plan = ((n_shards,) + plan) if n_shards > 1 else plan
@@ -1313,7 +1384,20 @@ class PendingRepartition:
         # the state keeps the padded geometry (labels' length keys the shape)
         state = self._state_cls(prices=prices, moment_sum=msum,
                                 moment_count=mcnt, prev_labels=labels)
+        if self._span is not None:
+            summary = obs.summarize_auction_telemetry(
+                engine.last_telemetry if self._tele is not None else None)
+            if summary is not None:
+                self._span.set(rounds_total=summary["rounds_total"],
+                               warm_fraction=summary.get("warm_fraction"))
+                trace = obs.active()
+                if trace is not None:
+                    for phase, r in enumerate(summary["rounds_per_phase"]):
+                        trace.event("solver/phase", phase=phase,
+                                    rounds=int(r))
+            self._span.finish(gap=gap)
         self._done = (result, state)
         self._x = self._labels = self._prices = None  # free the refs
         self._msum = self._mcnt = None
+        self._tele = self._span = None
         return self._done

@@ -104,7 +104,8 @@ def categorical_sort_order(categories: jnp.ndarray, rank_in_cat: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _assign_batch(solver_obj, fused, auction_config, cents, counts,
-                  cat_counts, xb, is_real, cb=None, ub=None, prices=None):
+                  cat_counts, xb, is_real, cb=None, ub=None, prices=None,
+                  stats_fn=None):
     """One Algorithm-1 batch on a (G, k, ...) stack: solve the LAP against
     the current centroids and fold the assigned rows into the running
     moments.  The ONE copy of the batch update -- the dense core's scan and
@@ -120,14 +121,25 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
     ``prices`` warm-starts the batch LAP from a carried (G, k) price vector
     (``None`` = zeros: the cold path, unchanged); the solver's final prices
     are returned so a stateful caller can carry them into its next run.
+
+    ``stats_fn`` (the solver's registered telemetry twin, resolved by the
+    caller) swaps the solve for its ``(assign, prices, stats)`` variant;
+    the trailing return slot then carries the per-batch telemetry pytree
+    (``None`` on the default path, which stays byte-identical).
     """
     garange = jnp.arange(cents.shape[0])[:, None]
+    stats = None
     if fused:
         # matrix-free bidding: the (k, k) value matrix is never built;
         # each auction round is one fused bid_top2 kernel call.
-        assign, p_out = solver_obj.factored(xb, cents, is_real=is_real,
+        if stats_fn is not None:
+            assign, p_out, stats = stats_fn(xb, cents, is_real=is_real,
                                             config=auction_config,
                                             prices=prices)
+        else:
+            assign, p_out = solver_obj.factored(xb, cents, is_real=is_real,
+                                                config=auction_config,
+                                                prices=prices)
     else:
         # reduced cost: row-constant ||x||^2 dropped (LAP-invariant)
         cost = (-2.0 * jnp.einsum("gid,gjd->gij", xb, cents)
@@ -142,8 +154,11 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
             full = jnp.any(cnt >= quota[:, :, None, :], axis=-1)
             cost = jnp.where(jnp.logical_and(full, is_real[..., None]),
                              _MASK_COST, cost)
-        assign, p_out = solver_obj.solve(cost, auction_config,
-                                         prices)  # (G, k) batched
+        if stats_fn is not None:
+            assign, p_out, stats = stats_fn(cost, auction_config, prices)
+        else:
+            assign, p_out = solver_obj.solve(cost, auction_config,
+                                             prices)  # (G, k) batched
     # centroid running mean: mu_k += (x - mu_k) / new_count  (Algorithm 1)
     new_counts = counts.at[garange, assign].add(is_real.astype(jnp.int32))
     delta = xb - jnp.take_along_axis(cents, assign[..., None], axis=1)
@@ -155,7 +170,7 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
         cat_counts = cat_counts.at[
             garange[..., None], assign[..., None], cb].add(
             is_real[..., None].astype(jnp.int32))
-    return cents, new_counts, cat_counts, assign, p_out
+    return cents, new_counts, cat_counts, assign, p_out, stats
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +180,8 @@ def _assign_batch(solver_obj, fused, auction_config, cents, counts,
 @functools.partial(
     jax.jit,
     static_argnames=("k", "variant", "n_categories", "n_fair_codes",
-                     "solver", "auction_config", "return_state"),
+                     "solver", "auction_config", "return_state",
+                     "telemetry"),
 )
 def aba_core(
     x: jnp.ndarray,
@@ -181,6 +197,7 @@ def aba_core(
     auction_config: AuctionConfig = AuctionConfig(),
     prices: jnp.ndarray | None = None,
     return_state: bool = False,
+    telemetry: bool = False,
 ) -> jnp.ndarray:
     """Assignment-Based Anticlustering on a ``(G, M, D)`` stack of problems.
 
@@ -231,6 +248,14 @@ def aba_core(
         ``"prices"`` ((G, k) final prices of the last batch, the warm start
         for a repeated same-shape run) and ``"mu"`` ((G, d) per-group
         centrality centroid, the running moment of the sort phase).
+      telemetry: (requires ``return_state``) the state dict additionally
+        carries ``"telemetry"``: the solver's per-batch stats pytree stacked
+        over the scan (auction rounds per eps phase, eps schedule, warm
+        re-entry decisions; leading axis ``n_batches - 1``), or ``None``
+        when the resolved solve path registers no telemetry twin or no
+        batch LAP runs (``n_batches == 1``).  The labels and prices are
+        bit-identical to the ``telemetry=False`` call; the flag is static,
+        so the default executable is untouched.
 
     Returns:
       (G, M) int32 labels in [0, k); with ``return_state`` a
@@ -239,6 +264,9 @@ def aba_core(
     G, M, D = x.shape
     if k > M:
         raise ValueError(f"k={k} > M={M}")
+    if telemetry and not return_state:
+        raise ValueError("telemetry=True requires return_state=True (the "
+                         "stats pytree rides the state dict)")
     solver_obj = get_solver(solver)
     xf = x.astype(jnp.float32)
     garange = jnp.arange(G)[:, None]
@@ -342,11 +370,20 @@ def aba_core(
         if return_state:
             p_out = (jnp.zeros((G, k), jnp.float32) if prices_in is None
                      else prices_in)
-            return out[:, :M], {"prices": p_out, "mu": mu}
+            state = {"prices": p_out, "mu": mu}
+            if telemetry:
+                state["telemetry"] = None  # no batch LAP ran
+            return out[:, :M], state
         return out[:, :M]
 
     # --- scan over remaining batches: one (G, k, k) LAP stack per step -----
     fused = (solver_obj.factored is not None and ub is None)
+    # telemetry statically downgrades to None when the resolved solve path
+    # has no stats twin (greedy/scipy/custom backends)
+    stats_fn = None
+    if telemetry:
+        stats_fn = (solver_obj.factored_stats if fused
+                    else solver_obj.solve_stats)
     p_init = (jnp.zeros((G, k), jnp.float32) if prices_in is None
               else prices_in)
 
@@ -360,14 +397,22 @@ def aba_core(
         # every batch warm-starts from the SAME carried epoch prices (not the
         # previous batch's): the cold path (prices=None -> per-batch zeros)
         # stays bit-identical, and warm prices never compound across batches
-        cents, new_counts, cat_counts, assign, p_out = _assign_batch(
+        cents, new_counts, cat_counts, assign, p_out, stats = _assign_batch(
             solver_obj, fused, auction_config, cents, counts, cat_counts,
-            xb, is_real, cb=cb, ub=ub, prices=prices_in)
-        return (cents, new_counts, cat_counts, p_out), assign
+            xb, is_real, cb=cb, ub=ub, prices=prices_in, stats_fn=stats_fn)
+        if stats_fn is None:
+            return (cents, new_counts, cat_counts, p_out), assign
+        return (cents, new_counts, cat_counts, p_out), (assign, stats)
 
-    (_, _, _, prices_f), assigns = jax.lax.scan(
-        step, (centroids0, counts0, cat_counts0, p_init),
-        (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
+    tele = None
+    if stats_fn is None:
+        (_, _, _, prices_f), assigns = jax.lax.scan(
+            step, (centroids0, counts0, cat_counts0, p_init),
+            (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
+    else:
+        (_, _, _, prices_f), (assigns, tele) = jax.lax.scan(
+            step, (centroids0, counts0, cat_counts0, p_init),
+            (batches[:, 1:].swapaxes(0, 1), real[:, 1:].swapaxes(0, 1)))
 
     labels_all = jnp.concatenate(
         [labels0[:, None], assigns.swapaxes(0, 1)], axis=1)  # (G, B, k)
@@ -376,7 +421,10 @@ def aba_core(
     ].set(labels_all.reshape(G, -1), mode="drop")
     # padding rows of the *input* keep whatever label they drew (callers mask)
     if return_state:
-        return out[:, :M], {"prices": prices_f, "mu": mu}
+        state = {"prices": prices_f, "mu": mu}
+        if telemetry:
+            state["telemetry"] = tele
+        return out[:, :M], state
     return out[:, :M]
 
 
@@ -388,7 +436,7 @@ def aba_core(
     jax.jit,
     static_argnames=("k", "chunk_size", "variant", "n_categories",
                      "n_fair_codes", "solver", "auction_config",
-                     "return_state"),
+                     "return_state", "telemetry"),
 )
 def aba_stream(
     x: jnp.ndarray,
@@ -405,6 +453,7 @@ def aba_stream(
     auction_config: AuctionConfig = AuctionConfig(),
     prices: jnp.ndarray | None = None,
     return_state: bool = False,
+    telemetry: bool = False,
 ) -> jnp.ndarray:
     """Streaming ABA on flat ``(n, d)`` features: Algorithm 1 in fixed-size
     chunks, for n far beyond what the dense core's working set allows.
@@ -469,6 +518,13 @@ def aba_stream(
         is the bit-identical cold path).
       return_state: also return ``{"prices": (1, k), "mu": (d,)}`` -- the
         final batch's prices and the running-moment global centroid.
+      telemetry: (requires ``return_state``) the state dict additionally
+        carries ``"telemetry"``: the solver's per-batch stats pytree with
+        leading axis ``n_batches - 1`` (the chunk structure flattened back
+        out and the sentinel pad batches dropped, so the layout matches the
+        dense core's), or ``None`` when the resolved solve path has no
+        telemetry twin or only one batch runs.  Labels/prices stay
+        bit-identical; the flag is static (default executable untouched).
 
     Returns:
       (n,) int32 labels in [0, k); with ``return_state`` a
@@ -477,6 +533,9 @@ def aba_stream(
     n, d = x.shape
     if k > n:
         raise ValueError(f"k={k} > n={n}")
+    if telemetry and not return_state:
+        raise ValueError("telemetry=True requires return_state=True (the "
+                         "stats pytree rides the state dict)")
     solver_obj = get_solver(solver)
     xf = x.astype(jnp.float32)
     cpb = max(1, int(chunk_size) // k)  # batches per chunk
@@ -649,7 +708,10 @@ def aba_stream(
         if return_state:
             p_out = (jnp.zeros((1, k), jnp.float32) if prices_in is None
                      else prices_in)
-            return out1, {"prices": p_out, "mu": mu}
+            state = {"prices": p_out, "mu": mu}
+            if telemetry:
+                state["telemetry"] = None  # no batch LAP ran
+            return out1, state
         return out1
 
     # --- stream the remaining batches in chunks of cpb ----------------------
@@ -669,6 +731,12 @@ def aba_stream(
     # same rule as the dense core: the categorical quota mask cannot be
     # factored, so a factored solver falls back to its dense solve under it
     fused = solver_obj.factored is not None and categories is None
+    # telemetry statically downgrades to None when the resolved solve path
+    # has no stats twin (greedy/scipy/custom backends)
+    stats_fn = None
+    if telemetry:
+        stats_fn = (solver_obj.factored_stats if fused
+                    else solver_obj.solve_stats)
     p_init = (jnp.zeros((1, k), jnp.float32) if prices_in is None
               else prices_in)
 
@@ -690,27 +758,44 @@ def aba_stream(
             else:
                 (xb, is_real), cb = binp, None
             # same epoch-carried warm start per batch as the dense core
-            bcents, bcounts, bcat, assign, p_out = _assign_batch(
+            bcents, bcounts, bcat, assign, p_out, stats = _assign_batch(
                 solver_obj, fused, auction_config, bcents, bcounts, bcat,
                 xb[None], is_real[None],
                 cb=None if cb is None else cb[None], ub=ub,
-                prices=prices_in)
-            return (bcents, bcounts, bcat, p_out), assign[0]
+                prices=prices_in, stats_fn=stats_fn)
+            if stats_fn is None:
+                return (bcents, bcounts, bcat, p_out), assign[0]
+            return (bcents, bcounts, bcat, p_out), (assign[0], stats)
 
-        (cents, counts, ccat, p_last), assigns = jax.lax.scan(
+        (cents, counts, ccat, p_last), ys = jax.lax.scan(
             batch_step, (cents, counts, ccat, p_last), xs)
-        return (cents, counts, ccat, p_last), assigns  # (cpb, k)
+        return (cents, counts, ccat, p_last), ys  # assigns (cpb, k) [+stats]
 
-    (_, _, _, prices_f), assigns = jax.lax.scan(
-        chunk_step, (centroids0, counts0, cat0, p_init),
-        (idx_rest, real_rest))
+    tele = None
+    if stats_fn is None:
+        (_, _, _, prices_f), assigns = jax.lax.scan(
+            chunk_step, (centroids0, counts0, cat0, p_init),
+            (idx_rest, real_rest))
+    else:
+        (_, _, _, prices_f), (assigns, tele_ck) = jax.lax.scan(
+            chunk_step, (centroids0, counts0, cat0, p_init),
+            (idx_rest, real_rest))
+        # (n_bchunks, cpb, ...) -> (n_batches - 1, ...): flatten the chunk
+        # structure and drop the sentinel pad batches, matching aba_core's
+        # per-batch layout
+        tele = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_bchunks * cpb,) + a.shape[2:])[:rem],
+            tele_ck)
 
     labels_all = jnp.concatenate(
         [labels0, assigns.reshape(-1)[:rem * k]])
     out = jnp.zeros((n + 1,), jnp.int32).at[jnp.minimum(order_p, n)].set(
         labels_all, mode="drop")
     if return_state:
-        return out[:n], {"prices": prices_f, "mu": mu}
+        state = {"prices": prices_f, "mu": mu}
+        if telemetry:
+            state["telemetry"] = tele
+        return out[:n], state
     return out[:n]
 
 

@@ -116,6 +116,7 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
                    max_rounds: int, fixed_rounds: int = 0,
                    skip: jnp.ndarray | None = None,
                    seed_top2=None,
+                   return_rounds: bool = False,
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One epsilon phase of batched Jacobi forward auction (maximization).
 
@@ -140,6 +141,10 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
     infeasibility probe is exactly that reduction, so threading it here
     makes the probe free (it becomes round one).  The values are what the
     round would compute itself, so results are unchanged.
+
+    ``return_rounds=True`` additionally returns the phase's executed round
+    count (the ``it`` counter the loop already carries) -- the solver
+    telemetry source, free because the value exists either way.
     """
     B, n = prices.shape
     rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
@@ -202,10 +207,12 @@ def _auction_phase(top2_fn, prices: jnp.ndarray, eps: jnp.ndarray,
         # converged state is a fixed point of body (no bids -> no updates)
         def scan_body(state, _):
             return body(state), None
-        (assign, _owner, prices, _it), _ = jax.lax.scan(
+        (assign, _owner, prices, it), _ = jax.lax.scan(
             scan_body, state0, None, length=rounds)
     else:
-        assign, _owner, prices, _it = jax.lax.while_loop(cond, body, state0)
+        assign, _owner, prices, it = jax.lax.while_loop(cond, body, state0)
+    if return_rounds:
+        return assign, prices, it
     return assign, prices
 
 
@@ -224,8 +231,23 @@ def _eps_schedule(span: jnp.ndarray, n: int, config: AuctionConfig):
 def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
                 config: AuctionConfig,
                 prices0: jnp.ndarray | None = None,
+                return_stats: bool = False,
                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Run the eps-scaling schedule; returns (assignment, final prices).
+
+    ``return_stats=True`` appends a solver telemetry pytree -- the numbers
+    the loops already compute, surfaced instead of discarded, so the stats
+    path costs no extra traced work beyond stacking them:
+
+    * ``rounds``  (n_phases,) int32 -- executed bidding rounds per phase
+      (the phase while-loop's own counter; a skipped warm phase exits on
+      its first predicate check and reports 0/1 rounds).
+    * ``eps``     (n_phases, B)     -- the geometric epsilon schedule.
+    * ``warm``    (B,) bool         -- instances that entered with carried
+      (nonzero) prices.
+    * ``reentry`` (B,) float32      -- the measured re-entry epsilon per
+      instance (-inf on the legacy fixed shortcut; 0 on the cold path).
+    * ``skipped`` (n_phases, B) bool -- which phases each instance sat out.
 
     ``prices0`` warm-starts the solve ((B, n); ``None`` or all-zeros is the
     cold path).  Epsilon scaling exists to tame the round count from
@@ -260,12 +282,27 @@ def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
                                         config.fixed_rounds)
         return prices, assign
 
+    def phase_stats(prices, eps):
+        assign, prices, it = _auction_phase(top2_fn, prices, eps, max_rounds,
+                                            config.fixed_rounds,
+                                            return_rounds=True)
+        return prices, (assign, it)
+
     if prices0 is None:
-        prices, assigns = jax.lax.scan(
-            phase, jnp.zeros((B, n), jnp.float32), eps_sched)
-        # Safety net: if the round cap was hit, columns may be unassigned;
-        # patch them greedily so the result is always a permutation.
-        return _repair_permutation(assigns[-1]), prices
+        if not return_stats:
+            prices, assigns = jax.lax.scan(
+                phase, jnp.zeros((B, n), jnp.float32), eps_sched)
+            # Safety net: if the round cap was hit, columns may be
+            # unassigned; patch them greedily so the result is always a
+            # permutation.
+            return _repair_permutation(assigns[-1]), prices
+        prices, (assigns, rounds) = jax.lax.scan(
+            phase_stats, jnp.zeros((B, n), jnp.float32), eps_sched)
+        stats = {"rounds": rounds.astype(jnp.int32), "eps": eps_sched,
+                 "warm": jnp.zeros((B,), bool),
+                 "reentry": jnp.zeros((B,), jnp.float32),
+                 "skipped": jnp.zeros((n_phases, B), bool)}
+        return _repair_permutation(assigns[-1]), prices, stats
 
     prices0 = prices0.astype(jnp.float32)
     is_warm = jnp.any(prices0 != 0.0, axis=1)          # (B,) per instance
@@ -300,6 +337,16 @@ def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
             skip=skip)
         return prices, assign
 
+    def phase_p_stats(prices, inp):
+        eps, last = inp
+        skip = jnp.logical_and(
+            is_warm,
+            jnp.logical_and(jnp.logical_not(last), eps > reentry))
+        assign, prices, it = _auction_phase(
+            top2_fn, prices, eps, max_rounds, config.fixed_rounds,
+            skip=skip, return_rounds=True)
+        return prices, (assign, it)
+
     # Phase 1 unrolled so it can consume the probe reduction (every instance
     # still holds the incoming prices there); the remaining phases scan.  A
     # skipped phase's while-loop exits on its first predicate check (all
@@ -307,21 +354,39 @@ def _run_phases(top2_fn, eps_sched: jnp.ndarray, n: int,
     # warm at equilibrium, only the final phase live -- costs the same as
     # the old jump-straight-to-the-last-phase shortcut (measured slightly
     # less: a branchless scan of empty phases beats a lax.cond dispatch).
-    assign, prices = _auction_phase(
+    skip0 = jnp.logical_and(
+        is_warm, jnp.logical_and(jnp.logical_not(is_last[0]),
+                                 eps_sched[0] > reentry))
+    if not return_stats:
+        assign, prices = _auction_phase(
+            top2_fn, prices0, eps_sched[0], max_rounds, config.fixed_rounds,
+            skip=skip0, seed_top2=probe)
+        if n_phases > 1:
+            prices, assigns = jax.lax.scan(
+                phase_p, prices, (eps_sched[1:], is_last[1:]))
+            assign = assigns[-1]
+        return _repair_permutation(assign), prices
+    assign, prices, it0 = _auction_phase(
         top2_fn, prices0, eps_sched[0], max_rounds, config.fixed_rounds,
-        skip=jnp.logical_and(
-            is_warm, jnp.logical_and(jnp.logical_not(is_last[0]),
-                                     eps_sched[0] > reentry)),
-        seed_top2=probe)
+        skip=skip0, seed_top2=probe, return_rounds=True)
+    rounds = it0[None]
     if n_phases > 1:
-        prices, assigns = jax.lax.scan(
-            phase_p, prices, (eps_sched[1:], is_last[1:]))
+        prices, (assigns, its) = jax.lax.scan(
+            phase_p_stats, prices, (eps_sched[1:], is_last[1:]))
         assign = assigns[-1]
-    return _repair_permutation(assign), prices
+        rounds = jnp.concatenate([rounds, its])
+    skipped = jnp.logical_and(
+        is_warm[None, :],
+        jnp.logical_and(jnp.logical_not(is_last)[:, None],
+                        eps_sched > reentry[None, :]))
+    stats = {"rounds": rounds.astype(jnp.int32), "eps": eps_sched,
+             "warm": is_warm, "reentry": reentry, "skipped": skipped}
+    return _repair_permutation(assign), prices, stats
 
 
 def _solve_stack(cost: jnp.ndarray, config: AuctionConfig,
                  prices0: jnp.ndarray | None = None,
+                 return_stats: bool = False,
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(B, n, n) -> ((B, n) assignment, (B, n) prices); the dense engine."""
     B, n, _ = cost.shape
@@ -333,14 +398,34 @@ def _solve_stack(cost: jnp.ndarray, config: AuctionConfig,
         return _top2_batched(cost - prices[:, None, :])
 
     return _run_phases(top2_fn, _eps_schedule(span, n, config), n, config,
-                       prices0)
+                       prices0, return_stats=return_stats)
 
 
-@functools.partial(jax.jit, static_argnames=("config", "return_prices"))
+def _zero_stats(B: int, config: AuctionConfig) -> dict:
+    """The telemetry pytree for solves that run no phases (n == 1)."""
+    p = max(int(config.n_phases), 1)
+    return {"rounds": jnp.zeros((p,), jnp.int32),
+            "eps": jnp.zeros((p, B), jnp.float32),
+            "warm": jnp.zeros((B,), bool),
+            "reentry": jnp.zeros((B,), jnp.float32),
+            "skipped": jnp.zeros((p, B), bool)}
+
+
+def _squeeze_stats(stats: dict) -> dict:
+    """Drop the B axis for single-instance (squeezed) solves."""
+    return {"rounds": stats["rounds"], "eps": stats["eps"][:, 0],
+            "warm": stats["warm"][0], "reentry": stats["reentry"][0],
+            "skipped": stats["skipped"][:, 0]}
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("config", "return_prices",
+                                    "return_stats"))
 def auction_solve(cost: jnp.ndarray,
                   config: AuctionConfig = AuctionConfig(), *,
                   prices: jnp.ndarray | None = None,
-                  return_prices: bool = False) -> jnp.ndarray:
+                  return_prices: bool = False,
+                  return_stats: bool = False) -> jnp.ndarray:
     """eps-optimal max-cost assignment; single matrix or batched stack.
 
     ``(n, n)`` input returns ``row_to_col`` (n,) int32; a stacked
@@ -356,6 +441,10 @@ def auction_solve(cost: jnp.ndarray,
     pre-warm-start behaviour).  ``return_prices=True`` additionally returns
     the final prices (the shape of the assignment), which is what the
     registry's price-carrying ``solve`` signature exposes.
+    ``return_stats=True`` returns ``(assignment, prices, stats)`` where
+    ``stats`` is the solver telemetry pytree of :func:`_run_phases` (rounds
+    per eps phase, the eps schedule, warm re-entry decisions); the
+    assignment and prices are identical to the plain call.
     """
     cost = cost.astype(jnp.float32)
     in_shape = cost.shape
@@ -368,25 +457,37 @@ def auction_solve(cost: jnp.ndarray,
     B, n, n2 = cost.shape
     if n != n2:
         raise ValueError(f"cost must be square, got {in_shape}")
+    stats = None
     if n == 1:
         out = jnp.zeros((B, 1), jnp.int32)
         p_out = (jnp.zeros((B, 1), jnp.float32) if prices is None
                  else prices.astype(jnp.float32))
+        if return_stats:
+            stats = _zero_stats(B, config)
+    elif return_stats:
+        out, p_out, stats = _solve_stack(cost, config, prices,
+                                         return_stats=True)
     else:
         out, p_out = _solve_stack(cost, config, prices)
+    if return_stats:
+        if squeeze:
+            return out[0], p_out[0], _squeeze_stats(stats)
+        return out, p_out, stats
     if return_prices:
         return (out[0], p_out[0]) if squeeze else (out, p_out)
     return out[0] if squeeze else out
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("config", "force", "return_prices"))
+                   static_argnames=("config", "force", "return_prices",
+                                    "return_stats"))
 def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
                            is_real: jnp.ndarray | None = None,
                            config: AuctionConfig = AuctionConfig(),
                            force: str | None = None,
                            prices: jnp.ndarray | None = None,
-                           return_prices: bool = False) -> jnp.ndarray:
+                           return_prices: bool = False,
+                           return_stats: bool = False) -> jnp.ndarray:
     """Matrix-free auction on ``cost[i, j] = -2 x_i . c_j + ||c_j||^2``.
 
     This is the ABA batch-to-centroid LAP with the row-constant ``||x||^2``
@@ -403,7 +504,8 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
     ``is_real`` marks dummy rows whose cost is the neutral constant 0,
     matching the dense masked path in :func:`repro.core.aba.aba_core`.
     ``prices`` / ``return_prices`` carry the auction's dual state exactly as
-    in :func:`auction_solve` (warm start in, final prices out).
+    in :func:`auction_solve` (warm start in, final prices out);
+    ``return_stats`` appends the solver telemetry pytree, also as there.
     Returns ``row_to_col`` (k,) / (G, k) int32.
     """
     from repro.kernels.ops import bid_top2
@@ -419,9 +521,14 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
     G, n, _ = x.shape
     if n == 1:
         out = jnp.zeros((G, 1), jnp.int32)
-        if return_prices:
+        if return_prices or return_stats:
             p_out = (jnp.zeros((G, 1), jnp.float32) if prices is None
                      else prices.astype(jnp.float32))
+            if return_stats:
+                stats = _zero_stats(G, config)
+                if squeeze:
+                    return out[0], p_out[0], _squeeze_stats(stats)
+                return out, p_out, stats
             return (out[0], p_out[0]) if squeeze else (out, p_out)
         return out[0] if squeeze else out
     x = x.astype(jnp.float32)
@@ -456,6 +563,13 @@ def auction_solve_factored(x: jnp.ndarray, c: jnp.ndarray, *,
             v2 = jnp.where(is_real, v2, dv2[:, None])
         return v1, j1, v2
 
+    if return_stats:
+        out, p_out, stats = _run_phases(
+            top2_fn, _eps_schedule(span, n, config), n, config, prices,
+            return_stats=True)
+        if squeeze:
+            return out[0], p_out[0], _squeeze_stats(stats)
+        return out, p_out, stats
     out, p_out = _run_phases(top2_fn, _eps_schedule(span, n, config), n,
                              config, prices)
     if return_prices:
@@ -590,11 +704,21 @@ class Solver(NamedTuple):
     engine's non-blocking path (``AnticlusterEngine.dispatch_repartition``,
     ``repro.train.pipeline``) refuses it up front and falls back to the
     synchronous route.
+
+    ``solve_stats`` / ``factored_stats`` are the optional telemetry twins:
+    the same signatures as ``solve`` / ``factored`` but returning
+    ``(row_to_col, prices, stats)`` where ``stats`` is the auction telemetry
+    pytree (see ``_run_phases``).  Backends without internals worth
+    reporting leave them ``None`` and the engine's
+    ``AnticlusterSpec(telemetry=True)`` path statically degrades to no
+    telemetry for them -- never a traced-op cost on anyone's default path.
     """
 
     solve: Callable
     factored: Callable | None = None
     host_callback: bool = False
+    solve_stats: Callable | None = None
+    factored_stats: Callable | None = None
 
 
 _REGISTRY: dict[str, Solver] = {}
@@ -634,6 +758,8 @@ def _legacy_factored_shim(factored: Callable) -> Callable:
 def register_solver(name: str, solve: Callable, *,
                     factored: Callable | None = None,
                     host_callback: bool = False,
+                    solve_stats: Callable | None = None,
+                    factored_stats: Callable | None = None,
                     overwrite: bool = False) -> Solver:
     """Register a LAP backend under ``name`` (see :class:`Solver`).
 
@@ -673,7 +799,9 @@ def register_solver(name: str, solve: Callable, *,
             DeprecationWarning, stacklevel=2)
         factored = _legacy_factored_shim(factored)
     solver = Solver(solve=solve, factored=factored,
-                    host_callback=host_callback)
+                    host_callback=host_callback,
+                    solve_stats=solve_stats,
+                    factored_stats=factored_stats)
     _REGISTRY[name] = solver
     return solver
 
@@ -710,6 +838,22 @@ def _auction_factored_p(x: jnp.ndarray, c: jnp.ndarray, *,
     """Registry entry: price-carrying wrapper over the matrix-free auction."""
     return auction_solve_factored(x, c, is_real=is_real, config=config,
                                   prices=prices, return_prices=True)
+
+
+def _auction_solve_stats(cost: jnp.ndarray,
+                         config: AuctionConfig = AuctionConfig(),
+                         prices: jnp.ndarray | None = None):
+    """Registry entry: telemetry twin of ``_auction_solve_p``."""
+    return auction_solve(cost, config, prices=prices, return_stats=True)
+
+
+def _auction_factored_stats(x: jnp.ndarray, c: jnp.ndarray, *,
+                            is_real: jnp.ndarray | None = None,
+                            config: AuctionConfig = AuctionConfig(),
+                            prices: jnp.ndarray | None = None):
+    """Registry entry: telemetry twin of ``_auction_factored_p``."""
+    return auction_solve_factored(x, c, is_real=is_real, config=config,
+                                  prices=prices, return_stats=True)
 
 
 def _greedy_stack(cost: jnp.ndarray,
@@ -749,8 +893,11 @@ def scipy_solve_jax(cost: jnp.ndarray,
     return out[0] if squeeze else out, _prices_or_zeros(cost, prices)
 
 
-register_solver("auction", _auction_solve_p)
+register_solver("auction", _auction_solve_p,
+                solve_stats=_auction_solve_stats)
 register_solver("auction_fused", _auction_solve_p,
-                factored=_auction_factored_p)
+                factored=_auction_factored_p,
+                solve_stats=_auction_solve_stats,
+                factored_stats=_auction_factored_stats)
 register_solver("greedy", _greedy_stack)
 register_solver("scipy", scipy_solve_jax, host_callback=True)

@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.anticluster import (ABAState, AnticlusterEngine, AnticlusterResult,
                                AnticlusterSpec, _certificate, _cluster_prices,
                                _resolve_spec, _result_stats)
@@ -224,6 +225,13 @@ def _carried_state(state: ABAState, new_n: int, added_x,
 def engine_update(engine: AnticlusterEngine, x, state: ABAState, *,
                   added=None, removed=None):
     """Implementation of :meth:`AnticlusterEngine.update` (see its doc)."""
+    with obs.span("engine/update") as _sp:
+        return _engine_update(engine, x, state, _sp,
+                              added=added, removed=removed)
+
+
+def _engine_update(engine: AnticlusterEngine, x, state: ABAState, _sp, *,
+                   added=None, removed=None):
     spec = engine.spec
     x = jnp.asarray(x).astype(spec.dtype)
     shape = tuple(x.shape)
@@ -282,6 +290,7 @@ def engine_update(engine: AnticlusterEngine, x, state: ABAState, *,
                 keep[rem] = False
                 r = int(rem.size)
     m = 0 if added_x is None else int(added_x.shape[0])
+    _sp.set(n=n, added=m, removed=r, fallback=False)
 
     if m == 0 and r == 0:
         # zero delta IS a repartition (pinned bit-for-bit by tests)
@@ -299,11 +308,12 @@ def engine_update(engine: AnticlusterEngine, x, state: ABAState, *,
     new_x = x_kept if m == 0 else jnp.concatenate([x_kept, added_x])
 
     def _fallback(reason: str):
+        _sp.set(fallback=True, reason=reason)
         warnings.warn(
             f"update(added={m}, removed={r}) on n={n}: {reason}; falling "
             "back to a full warm repartition of the post-delta rows "
             "(bit-for-bit identical to repartition() with the carried "
-            "prices)", RuntimeWarning, stacklevel=3)
+            "prices)", RuntimeWarning, stacklevel=4)
         res, st = engine.repartition(
             new_x, _carried_state(state, new_n, added_x, removed_x))
         return res, new_x, st

@@ -1,0 +1,153 @@
+"""Memory profiling: compiler-measured footprints + host peak-RSS sampling.
+
+Two complementary views, because the ROADMAP streaming receipt ("O(chunk*d +
+k*d), measured, not asserted") needs both:
+
+* :func:`memory_profile` asks XLA what a jitted call *would* allocate --
+  ``fn.lower(...).compile().memory_analysis()`` -- without ever running it.
+  Temp (scratch) bytes are the honest "live memory beyond inputs/outputs"
+  number the streaming-vs-dense comparison hinges on, and lowering is cheap
+  enough to run inside a benchmark (generalizes the one-off ``_temp_bytes``
+  that lived in ``benchmarks/table10_scale``).
+* :func:`peak_rss_bytes` / :func:`rss_sampling` read the host side -- the
+  process high-water mark (``VmHWM``) and a sampled during-call peak -- for
+  paths XLA cannot see (host callbacks, NumPy staging, the router's queues).
+
+Some CPU builds ship no memory analysis; :class:`MemoryProfile` then carries
+``available=False`` and ``-1`` byte counts, and callers record that honestly
+rather than failing (the BENCH rows keep the column, gated on wall only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from contextlib import contextmanager
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryProfile:
+    """Compiler-measured footprint of one jitted call (bytes; -1 unknown)."""
+
+    temp_bytes: int = -1           # scratch: live memory beyond args/outputs
+    argument_bytes: int = -1
+    output_bytes: int = -1
+    generated_code_bytes: int = -1
+    available: bool = False
+
+    @property
+    def total_bytes(self) -> int:
+        """Sum of the known components (-1 when none is known)."""
+        known = [b for b in (self.temp_bytes, self.argument_bytes,
+                             self.output_bytes, self.generated_code_bytes)
+                 if b >= 0]
+        return sum(known) if known else -1
+
+
+def _mem_attr(mem, name: str) -> int:
+    try:
+        v = getattr(mem, name)
+        return int(v) if v is not None else -1
+    except Exception:
+        return -1
+
+
+def memory_profile(fn, *args, **kwargs) -> MemoryProfile:
+    """XLA memory analysis for ``fn(*args, **kwargs)`` where ``fn`` is a
+    jitted callable.  Lowers and compiles (does NOT execute); returns an
+    ``available=False`` profile when the backend exposes no analysis."""
+    try:
+        mem = fn.lower(*args, **kwargs).compile().memory_analysis()
+        if mem is None:
+            return MemoryProfile()
+        return MemoryProfile(
+            temp_bytes=_mem_attr(mem, "temp_size_in_bytes"),
+            argument_bytes=_mem_attr(mem, "argument_size_in_bytes"),
+            output_bytes=_mem_attr(mem, "output_size_in_bytes"),
+            generated_code_bytes=_mem_attr(mem, "generated_code_size_in_bytes"),
+            available=True)
+    except Exception:
+        return MemoryProfile()
+
+
+def _read_status_kb(field: str) -> int:
+    """A ``/proc/self/status`` field in kB, or -1 off-Linux."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith(field + ":"):
+                    return int(line.split()[1])
+    except Exception:
+        pass
+    return -1
+
+
+def current_rss_bytes() -> int:
+    """Current resident set size in bytes (-1 when unavailable)."""
+    kb = _read_status_kb("VmRSS")
+    return kb * 1024 if kb >= 0 else -1
+
+
+def peak_rss_bytes() -> int:
+    """Process peak RSS (high-water mark) in bytes; -1 when unavailable."""
+    kb = _read_status_kb("VmHWM")
+    if kb >= 0:
+        return kb * 1024
+    try:
+        import resource
+        # Linux reports ru_maxrss in kB
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    except Exception:
+        return -1
+
+
+class RssSample:
+    """Mutable holder filled by :func:`rss_sampling`."""
+
+    __slots__ = ("peak_bytes", "samples")
+
+    def __init__(self):
+        self.peak_bytes = -1
+        self.samples = 0
+
+
+@contextmanager
+def rss_sampling(interval_s: float = 0.01):
+    """Sample current RSS on a daemon thread for the duration of the block;
+    yields an :class:`RssSample` whose ``peak_bytes`` is the observed
+    maximum (plus one final sample at exit)."""
+    sample = RssSample()
+    stop = threading.Event()
+
+    def _poll():
+        while not stop.is_set():
+            rss = current_rss_bytes()
+            if rss > sample.peak_bytes:
+                sample.peak_bytes = rss
+            sample.samples += 1
+            stop.wait(interval_s)
+
+    t = threading.Thread(target=_poll, daemon=True)
+    t.start()
+    try:
+        yield sample
+    finally:
+        stop.set()
+        t.join(timeout=5.0)
+        rss = current_rss_bytes()
+        if rss > sample.peak_bytes:
+            sample.peak_bytes = rss
+        sample.samples += 1
+
+
+def sample_rss(fn, *args, interval_s: float = 0.01, **kwargs):
+    """Run ``fn(*args, **kwargs)`` under RSS sampling; returns
+    ``(result, peak_rss_bytes_during_call)``."""
+    with rss_sampling(interval_s) as s:
+        out = fn(*args, **kwargs)
+    return out, s.peak_bytes
+
+
+# re-exported for callers that want to timestamp samples themselves
+monotonic = time.monotonic

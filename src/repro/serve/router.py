@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.anticluster import (AnticlusterEngine, AnticlusterResult,
                                AnticlusterSpec, _mesh_shards, _resolve_spec)
 
@@ -212,6 +213,14 @@ class ServiceMetrics:
     update_calls: int = 0
     update_fallbacks: int = 0
     live_partitions: int = 0
+    # request-latency / queue-wait percentiles (seconds) over the router's
+    # retained sample window (``repro.obs.Histogram``); 0.0 before any
+    # request completes.  Latency is submit -> ticket resolution; queue
+    # wait is submit -> the serve that picked the request up.
+    latency_p50: float = 0.0
+    latency_p99: float = 0.0
+    queue_wait_p50: float = 0.0
+    queue_wait_p99: float = 0.0
 
     @property
     def update_fallback_rate(self) -> float:
@@ -378,6 +387,10 @@ class AnticlusterRouter:
         self._row_filled = 0
         self._update_calls = 0
         self._update_fallbacks = 0
+        # latency/queue-wait reservoirs: internally locked, recorded outside
+        # self._cv (histogram recording must not lengthen the metrics lock)
+        self._lat_hist = obs.Histogram()
+        self._qwait_hist = obs.Histogram()
         # live named partitions (the delta-update lane).  _live_names is
         # the synchronous reservation set (admission-time duplicate/unknown
         # checks); _live maps name -> IncrementalPartition once the open
@@ -475,6 +488,8 @@ class AnticlusterRouter:
             deadline_at=None if deadline is None else now + deadline,
             key=key, bucket=bucket, op=op, payload=payload))
         self._submitted += 1
+        obs.event("serve/admit", n=n, d=d, op=op,
+                  queue_depth=len(self._queue))
         if self._background and (self._worker is None
                                  or not self._worker.is_alive()):
             self._worker = threading.Thread(
@@ -687,6 +702,11 @@ class AnticlusterRouter:
         return group
 
     def _serve(self, group: list[_Request]) -> None:
+        now = self._clock()
+        for r in group:
+            wait = now - r.ticket.submitted_at
+            self._qwait_hist.record(wait)
+            obs.event("serve/queue_wait", wait=wait, n=r.n)
         head = group[0]
         if head.key[0] == "update":
             # one live partition's ops, in FIFO order (the admission key
@@ -705,6 +725,11 @@ class AnticlusterRouter:
             self._serve_solo(head)
             return
         self._serve_stacked(group)
+
+    def _resolve_served(self, r: "_Request", result, at: float) -> None:
+        """Resolve a served ticket, recording its end-to-end latency."""
+        self._lat_hist.record(at - r.ticket.submitted_at)
+        r.ticket._resolve(result=result, at=at)
 
     def _serve_live(self, r: _Request) -> None:
         """Apply one live-partition op (runs under ``_serve_mutex``).
@@ -728,7 +753,7 @@ class AnticlusterRouter:
                 self._cold_calls += 1
                 self._solo_calls += 1
                 self._completed += 1
-            r.ticket._resolve(result=part.result, at=self._clock())
+            self._resolve_served(r, part.result, self._clock())
             return
         with self._cv:
             part = self._live.get(name)
@@ -737,20 +762,21 @@ class AnticlusterRouter:
                 f"live partition {name!r} was closed (or its open "
                 "errored) before this update was served")
         added, removed = r.payload
-        res = part.update(added=added, removed=removed)
+        with obs.span("serve/update", partition=name):
+            res = part.update(added=added, removed=removed)
         with self._cv:
             self._update_calls += 1
             if not res.updated:
                 self._update_fallbacks += 1
             self._completed += 1
-        r.ticket._resolve(result=res, at=self._clock())
+        self._resolve_served(r, res, self._clock())
 
     def _serve_solo(self, r: _Request) -> None:
         res, _warm = self._call_lane(("solo", (r.n, r.d)), r.x, None)
         with self._cv:
             self._solo_calls += 1
             self._completed += 1
-        r.ticket._resolve(result=res, at=self._clock())
+        self._resolve_served(r, res, self._clock())
 
     def _serve_stacked(self, group: list[_Request]) -> None:
         head = group[0]
@@ -780,7 +806,7 @@ class AnticlusterRouter:
             self._row_filled += sum(r.n for r in group)
         now = self._clock()
         for g, r in enumerate(group):
-            r.ticket._resolve(result=AnticlusterResult(
+            self._resolve_served(r, AnticlusterResult(
                 labels=res.labels[g][:r.n],
                 cluster_sizes=res.cluster_sizes[g],
                 diversity_sd=res.diversity_sd[g],
@@ -789,7 +815,7 @@ class AnticlusterRouter:
                 variant=res.variant,
                 dual_bound=None if res.dual_bound is None
                 else res.dual_bound[g],
-                gap=None if res.gap is None else res.gap[g]), at=now)
+                gap=None if res.gap is None else res.gap[g]), now)
 
     def _call_lane(self, key: tuple, x, vm):
         with self._cv:
@@ -807,7 +833,9 @@ class AnticlusterRouter:
             state = lane.engine.init_state(tuple(x.shape))
             if lane.device is not None:
                 state = jax.device_put(state, lane.device)
-        res, lane.state = lane.engine.repartition(x, state, valid_mask=vm)
+        with obs.span("serve/solve", lane=str(key), warm=warm):
+            res, lane.state = lane.engine.repartition(x, state,
+                                                      valid_mask=vm)
         lane.calls += 1
         with self._cv:
             if warm:
@@ -875,4 +903,8 @@ class AnticlusterRouter:
                 devices=self._pool.device_count,
                 update_calls=self._update_calls,
                 update_fallbacks=self._update_fallbacks,
-                live_partitions=len(self._live))
+                live_partitions=len(self._live),
+                latency_p50=self._lat_hist.percentile(50),
+                latency_p99=self._lat_hist.percentile(99),
+                queue_wait_p50=self._qwait_hist.percentile(50),
+                queue_wait_p99=self._qwait_hist.percentile(99))

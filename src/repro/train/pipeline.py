@@ -42,6 +42,7 @@ from typing import Any, Callable
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.anticluster import AnticlusterEngine
 from repro.data.minibatch import (_auto_or_flat_spec, build_batch_schedule,
                                   epoch_order)
@@ -202,19 +203,27 @@ class ABAPipeline:
                 # consumer abandoned the generator mid-flight: finish the
                 # dispatched solve so self._state never points at buffers
                 # the in-flight call consumed (they were donated)
-                self.result, self._state = pending[0].wait()
+                with obs.span("pipeline/wait", abandoned=True):
+                    self.result, self._state = pending[0].wait()
                 self._flip_to(np.asarray(self.result.labels))
                 pending[0] = None
 
     def _epochs(self, start_epoch, end, features, pending):
         for e in range(start_epoch, end):
             if pending[0] is not None:
-                self.result, self._state = pending[0].wait()
+                # the epoch-boundary sync: how long the consumer actually
+                # stalled on the overlapped solve (0 when it fully drained
+                # during training) -- the signal the obs trace exists for
+                with obs.span("pipeline/wait", epoch=e,
+                              overlapped=self.overlapped):
+                    self.result, self._state = pending[0].wait()
                 self._flip_to(np.asarray(self.result.labels))
             pending[0] = None
             if features is not None and e + 1 < end:
                 x_next = jnp.asarray(
                     np.asarray(features(e + 1))[:self.n_used], self._dtype)
+                obs.event("pipeline/dispatch", epoch=e + 1,
+                          overlapped=self.overlapped)
                 if self.overlapped:
                     pending[0] = self.engine.dispatch_repartition(
                         x_next, self._state)
@@ -228,5 +237,9 @@ class ABAPipeline:
                             "overlap)", RuntimeWarning, stacklevel=2)
                         self._warned_sync = True
                     pending[0] = _SyncSolve(self.engine, x_next, self._state)
-            yield PipelineEpoch(e, self.batches,
-                                epoch_order(self.seed, e, self.k))
+            # the span brackets the consumer's whole epoch (the generator
+            # resumes here when the next epoch is requested), so its dur is
+            # train time the dispatched solve had available to overlap with
+            with obs.span("pipeline/epoch", epoch=e):
+                yield PipelineEpoch(e, self.batches,
+                                    epoch_order(self.seed, e, self.k))

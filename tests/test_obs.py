@@ -1,0 +1,330 @@
+"""The ``repro.obs`` subsystem: span nesting and thread-safety, the
+disabled path's zero-cost contracts (shared no-op span, engine
+``compile_count`` pins), solver telemetry parity (stats path bit-identical
+to the plain path, dense == stream layouts), memory profiling, the trace
+report, and the BenchRecorder schema-collision guard."""
+
+import importlib.util
+import json
+import pathlib
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.anticluster import AnticlusterEngine, AnticlusterSpec
+from repro.core.aba import aba_core, aba_stream
+from repro.core.assignment import AuctionConfig, auction_solve
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _data(n, d, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt):
+        self.now += dt
+
+
+# ---------------------------------------------------------------------------
+# Tracing core
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_records_parents():
+    clock = FakeClock()
+    tr = obs.Trace(clock=clock)
+    with tr.span("outer", a=1) as outer:
+        clock.advance(1.0)
+        with tr.span("inner") as inner:
+            clock.advance(0.25)
+        assert inner._parent == outer._id
+    events = {ev["name"]: ev for ev in tr.snapshot()}
+    assert events["inner"]["parent"] == events["outer"]["id"]
+    assert events["outer"]["parent"] is None
+    assert events["inner"]["dur"] == 0.25
+    assert events["outer"]["dur"] == 1.25
+    assert events["outer"]["attrs"] == {"a": 1}
+    # completion order: inner closes first
+    assert [ev["name"] for ev in tr.snapshot()] == ["inner", "outer"]
+
+
+def test_async_begin_finish_crosses_scopes():
+    clock = FakeClock()
+    tr = obs.Trace(clock=clock)
+    with tr.span("dispatch") as d:
+        sp = tr.begin("inflight", k=4)        # parented under "dispatch"
+    clock.advance(2.0)
+    sp.finish(rounds=7)                       # long after "dispatch" closed
+    sp.finish(rounds=99)                      # idempotent: second is a no-op
+    events = {ev["name"]: ev for ev in tr.snapshot()}
+    assert events["inflight"]["parent"] == d._id
+    assert events["inflight"]["dur"] == 2.0
+    assert events["inflight"]["attrs"] == {"k": 4, "rounds": 7}
+    assert len(tr.snapshot()) == 2
+
+
+def test_instant_events_and_export_roundtrip(tmp_path):
+    tr = obs.Trace(clock=FakeClock())
+    with tr.span("parent"):
+        tr.event("tick", i=3, arr=jnp.float32(1.5))
+    path = str(tmp_path / "t.jsonl")
+    assert tr.export_jsonl(path) == 2
+    lines = [json.loads(line) for line in open(path)]
+    tick = next(ev for ev in lines if ev["name"] == "tick")
+    assert tick["dur"] == 0.0
+    assert tick["attrs"] == {"i": 3, "arr": 1.5}   # jax scalar -> JSON float
+    assert tick["parent"] is not None
+
+
+def test_thread_safety_under_concurrent_nesting():
+    tr = obs.Trace()
+    errors = []
+
+    def work(tid):
+        try:
+            for i in range(50):
+                with tr.span(f"outer{tid}") as o:
+                    with tr.span(f"inner{tid}") as sp:
+                        # the parent must be THIS thread's outer span, never
+                        # another thread's (per-thread stacks)
+                        assert sp._parent == o._id
+                    tr.event(f"ev{tid}", i=i)
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(tr.snapshot()) == 8 * 50 * 3
+    for ev in tr.snapshot():
+        if ev["name"].startswith("inner"):
+            assert ev["parent"] is not None
+
+
+def test_disabled_path_is_shared_noop():
+    assert not obs.enabled()
+    s1, s2 = obs.span("a", x=1), obs.span("b")
+    assert s1 is s2                           # one shared allocation-free nop
+    with s1 as inside:
+        assert inside is s1
+    assert s1.set(k=2) is s1
+    assert s1.finish() is None
+    assert obs.begin("c") is s1
+    obs.event("d", x=1)                       # silently dropped
+    assert obs.active() is None
+
+
+def test_tracing_scope_restores_and_exports(tmp_path):
+    path = str(tmp_path / "scoped.jsonl")
+    prev = obs.enable(obs.Trace())            # an outer trace is active
+    try:
+        with obs.tracing(path) as tr:
+            assert obs.active() is tr and tr is not prev
+            with obs.span("only-here"):
+                pass
+        assert obs.active() is prev           # restored, not disabled
+        assert [json.loads(line)["name"]
+                for line in open(path)] == ["only-here"]
+        assert len(prev.events) == 0          # outer trace untouched
+    finally:
+        obs.disable()
+    assert not obs.enabled()
+
+
+def test_histogram_exact_percentiles():
+    h = obs.Histogram()
+    assert h.percentile(50) == 0.0 and h.count == 0 and h.mean == 0.0
+    for v in (0.25, 0.75):
+        h.record(v)
+    assert h.percentile(50) == 0.25           # nearest-rank: ceil(1.0) = 1
+    assert h.percentile(99) == 0.75
+    assert h.percentile(0) == 0.25 and h.percentile(100) == 0.75
+    assert h.count == 2 and h.mean == 0.5
+    # bounded ring: old samples age out, count/sum stay lifetime-exact
+    small = obs.Histogram(max_samples=2)
+    for v in (1.0, 2.0, 3.0):
+        small.record(v)
+    assert small.count == 3
+    assert small.percentile(99) == 3.0 and small.percentile(1) == 2.0
+    with pytest.raises(ValueError):
+        obs.Histogram(max_samples=0)
+
+
+def test_trace_report_summarize_and_render(tmp_path):
+    spec = importlib.util.spec_from_file_location(
+        "trace_report", REPO / "tools" / "trace_report.py")
+    trace_report = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(trace_report)
+
+    clock = FakeClock()
+    tr = obs.Trace(clock=clock)
+    for dur in (0.1, 0.2, 0.3):
+        with tr.span("solve"):
+            clock.advance(dur)
+    tr.event("admit")
+    path = str(tmp_path / "r.jsonl")
+    tr.export_jsonl(path)
+
+    summary = trace_report.summarize(trace_report.load_events(path))
+    s = summary["solve"]
+    assert s["count"] == 3 and s["max"] == pytest.approx(0.3)
+    assert s["total"] == pytest.approx(0.6) and s["mean"] == pytest.approx(0.2)
+    assert s["p50"] == pytest.approx(0.2) and s["p95"] == pytest.approx(0.3)
+    assert summary["admit"] == {"count": 1}
+    text = trace_report.render(summary)
+    assert "solve" in text and "admit" in text
+
+
+# ---------------------------------------------------------------------------
+# Memory profiling
+# ---------------------------------------------------------------------------
+
+def test_memory_profile_on_jitted_call():
+    x = jnp.asarray(_data(256, 4))
+    prof = obs.memory_profile(aba_core, x[None], 4, solver="auction")
+    assert isinstance(prof, obs.MemoryProfile)
+    if prof.available:                        # CPU builds may lack analysis
+        assert prof.temp_bytes >= 0 and prof.total_bytes >= prof.temp_bytes
+    else:
+        assert prof.temp_bytes == -1 and prof.total_bytes == -1
+    # a non-jitted callable has no .lower: honest unavailable, no raise
+    bad = obs.memory_profile(lambda a: a, x)
+    assert not bad.available
+
+
+def test_rss_sampling_and_peak():
+    assert obs.current_rss_bytes() > 0        # Linux container: /proc works
+    assert obs.peak_rss_bytes() >= obs.current_rss_bytes() > 0
+    out, peak = obs.sample_rss(lambda: np.zeros(1000), interval_s=0.001)
+    assert out.shape == (1000,) and peak > 0
+    with obs.rss_sampling(interval_s=0.001) as s:
+        np.zeros(10000)
+    assert s.peak_bytes > 0 and s.samples >= 1
+
+
+# ---------------------------------------------------------------------------
+# Solver telemetry (the compiled-path stats pytree)
+# ---------------------------------------------------------------------------
+
+def test_auction_return_stats_is_parity_preserving():
+    rng = np.random.default_rng(3)
+    cost = jnp.asarray(rng.normal(size=(3, 24, 24)).astype(np.float32))
+    cfg = AuctionConfig()
+    plain, p_plain = auction_solve(cost, cfg, return_prices=True)
+    out, p_out, stats = auction_solve(cost, cfg, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(out))
+    np.testing.assert_array_equal(np.asarray(p_plain), np.asarray(p_out))
+    n_phases = stats["rounds"].shape[0]
+    assert stats["eps"].shape == (n_phases, 3)
+    assert stats["warm"].shape == (3,) and not bool(stats["warm"].any())
+    assert int(stats["rounds"].sum()) > 0     # a cold solve does real rounds
+    assert not bool(stats["skipped"].any())   # cold: no phase skipping
+    # warm re-entry: carried prices shrink the work and mark warm=True
+    out_w, p_w, stats_w = auction_solve(cost, cfg, prices=p_out,
+                                        return_stats=True)
+    assert bool(stats_w["warm"].all())
+    assert int(stats_w["rounds"].sum()) <= int(stats["rounds"].sum())
+
+
+def test_engine_telemetry_bit_identical_and_single_trace():
+    x = _data(128, 6, seed=5)
+    plain = AnticlusterEngine(AnticlusterSpec(k=4, solver="auction"))
+    tele = AnticlusterEngine(AnticlusterSpec(k=4, solver="auction",
+                                             telemetry=True))
+    r0, s0 = plain.partition(x)
+    r1, s1 = tele.partition(x)
+    np.testing.assert_array_equal(np.asarray(r0.labels),
+                                  np.asarray(r1.labels))
+    assert plain.last_telemetry is None
+    t = tele.last_telemetry
+    assert t is not None and isinstance(t["rounds"], np.ndarray)
+    assert int(t["rounds"].sum()) > 0
+    r0b, _ = plain.repartition(x, s0)
+    r1b, _ = tele.repartition(x, s1)
+    np.testing.assert_array_equal(np.asarray(r0b.labels),
+                                  np.asarray(r1b.labels))
+    # the one-executable contract holds with telemetry riding the output
+    assert plain.compile_count == 1 and tele.compile_count == 1
+    summary = obs.summarize_auction_telemetry(t)
+    assert summary["rounds_total"] == int(t["rounds"].sum())
+    assert summary["batches"] * summary["phases"] == t["rounds"].size
+    assert obs.summarize_auction_telemetry(None) is None
+
+
+def test_tracing_adds_no_retrace_and_no_compiled_ops():
+    """The headline cost contract: enabling tracing around an engine adds
+    host-side spans only -- same executable (no retrace), same labels."""
+    x = _data(96, 5, seed=7)
+    eng = AnticlusterEngine(AnticlusterSpec(k=4, solver="auction"))
+    ref = AnticlusterEngine(AnticlusterSpec(k=4, solver="auction"))
+    _, state = eng.partition(x)
+    _, ref_state = ref.partition(x)
+    assert eng.compile_count == 1
+    with obs.tracing() as tr:
+        res2, state = eng.repartition(x, state)
+    assert eng.compile_count == 1             # no retrace under tracing
+    res_ref, _ = ref.repartition(x, ref_state)   # same warm solve, untraced
+    np.testing.assert_array_equal(np.asarray(res_ref.labels),
+                                  np.asarray(res2.labels))
+    names = [ev["name"] for ev in tr.snapshot()]
+    assert "engine/repartition" in names
+    assert not obs.enabled()                  # scope restored
+    # and a traced cold engine compiles exactly once too
+    with obs.tracing():
+        eng2 = AnticlusterEngine(AnticlusterSpec(k=4, solver="auction"))
+        eng2.partition(x)
+    assert eng2.compile_count == 1
+
+
+def test_stream_telemetry_layout_matches_dense():
+    x = jnp.asarray(_data(144, 4, seed=9))
+    k, chunk = 4, 48
+    _, st_d = aba_core(x[None], k, solver="auction", return_state=True,
+                       telemetry=True)
+    _, st_s = aba_stream(x, k, chunk, solver="auction", return_state=True,
+                         telemetry=True)
+    td, ts = st_d["telemetry"], st_s["telemetry"]
+    assert td is not None and ts is not None
+    for key in ("rounds", "eps", "warm", "reentry", "skipped"):
+        assert td[key].shape == ts[key].shape, key
+    n_batches = x.shape[0] // k
+    assert td["rounds"].shape[0] == n_batches - 1
+
+
+def test_engine_telemetry_unsupported_solver_is_none():
+    # greedy has no stats twin: telemetry downgrades to None, never raises
+    x = _data(64, 4, seed=11)
+    eng = AnticlusterEngine(AnticlusterSpec(k=4, solver="greedy",
+                                            telemetry=True))
+    res, _ = eng.partition(x)
+    assert res.labels.shape == (64,)
+    assert eng.last_telemetry is None
+
+
+# ---------------------------------------------------------------------------
+# BenchRecorder schema guard (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_bench_recorder_rejects_schema_colliding_extras():
+    from benchmarks.common import BenchRecorder
+    rec = BenchRecorder()
+    rec.add("b/ok", "8x2", 0.1, 1.0, extra={"peak_bytes": 7})
+    assert rec.rows[0]["peak_bytes"] == 7
+    with pytest.raises(ValueError, match="wall_s"):
+        rec.add("b/bad", "8x2", 0.1, 1.0, extra={"wall_s": 0.0})
+    with pytest.raises(ValueError, match="collide"):
+        rec.add("b/bad2", "8x2", 0.1, extra={"bench": "x", "note": 1})
+    assert len(rec.rows) == 1                 # failed adds record nothing

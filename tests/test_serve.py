@@ -510,3 +510,36 @@ def test_live_partition_guards():
         r.open_partition("tiny", _data(2, 3, seed=4))
     r.open_partition("tiny", _data(64, 3, seed=5)).result()
     assert r.metrics().live_partitions == 2
+
+
+# ---------------------------------------------------------------------------
+# Latency / queue-wait percentiles (obs histograms, fake clock -- no sleeps)
+# ---------------------------------------------------------------------------
+
+def test_latency_percentiles_fake_clock():
+    clock = FakeClock()
+    r = _router(k=4, plan=None, clock=clock)
+    m = r.metrics()                           # before any request: all 0.0
+    assert m.latency_p50 == m.latency_p99 == 0.0
+    assert m.queue_wait_p50 == m.queue_wait_p99 == 0.0
+
+    r.submit(_data(64, 3, seed=1))
+    clock.advance(0.25)                       # queued for exactly 0.25 s
+    r.drain()                                 # clock frozen while serving
+    m = r.metrics()
+    assert m.latency_p50 == m.latency_p99 == 0.25
+    assert m.queue_wait_p50 == m.queue_wait_p99 == 0.25
+
+    r.submit(_data(64, 3, seed=2))
+    clock.advance(0.5)                        # second sample: 0.5 s
+    r.drain()
+    m = r.metrics()
+    # nearest-rank over [0.25, 0.5]: p50 is the first sample, p99 the last
+    assert m.latency_p50 == 0.25 and m.latency_p99 == 0.5
+    assert m.queue_wait_p50 == 0.25 and m.queue_wait_p99 == 0.5
+    # shed requests never pollute the served-latency reservoir
+    shed = r.submit(_data(64, 3, seed=3), deadline=1.0)
+    clock.advance(10.0)
+    r.drain()
+    assert shed.rejection is not None
+    assert r.metrics().latency_p99 == 0.5

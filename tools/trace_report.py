@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Summarize a ``repro.obs`` trace JSONL (span durations grouped by name).
+
+Usage::
+
+    PYTHONPATH=src python tools/trace_report.py TRACE.jsonl [--top N]
+
+One row per span name: count, total/mean/p50/p95/max duration, sorted by
+total time.  Instant events (``dur == 0``) are listed separately with their
+counts, so a report shows both where time went (spans) and what happened
+(admissions, dispatches, solver phases).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load_events(path: str) -> list[dict]:
+    """Parse one trace event per JSONL line (blank lines ignored)."""
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def _pct(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile of a pre-sorted non-empty list."""
+    n = len(sorted_vals)
+    rank = max(1, min(n, -(-int(q * n) // 100)))
+    return sorted_vals[rank - 1]
+
+
+def summarize(events: list[dict]) -> dict[str, dict]:
+    """Per-name duration statistics over the span events.
+
+    Returns ``{name: {count, total, mean, p50, p95, max}}`` for spans and
+    ``{name: {count}}`` (no duration keys) for instant events; the split is
+    on recorded duration (an event records ``dur == 0`` by construction).
+    """
+    spans: dict[str, list[float]] = {}
+    instants: dict[str, int] = {}
+    for ev in events:
+        dur = float(ev.get("dur", 0.0))
+        name = ev.get("name", "?")
+        if dur > 0.0:
+            spans.setdefault(name, []).append(dur)
+        else:
+            instants[name] = instants.get(name, 0) + 1
+    out: dict[str, dict] = {}
+    for name, durs in spans.items():
+        durs.sort()
+        total = sum(durs)
+        out[name] = {
+            "count": len(durs), "total": total,
+            "mean": total / len(durs),
+            "p50": _pct(durs, 50), "p95": _pct(durs, 95),
+            "max": durs[-1],
+        }
+    for name, count in instants.items():
+        out.setdefault(name, {"count": count})
+    return out
+
+
+def render(summary: dict[str, dict], top: int | None = None) -> str:
+    """The report table as a string (span rows first, by total desc)."""
+    spans = [(n, s) for n, s in summary.items() if "total" in s]
+    instants = [(n, s) for n, s in summary.items() if "total" not in s]
+    spans.sort(key=lambda it: -it[1]["total"])
+    instants.sort(key=lambda it: -it[1]["count"])
+    if top is not None:
+        spans = spans[:top]
+    lines = [f"{'span':<28} {'count':>6} {'total_s':>10} {'mean_s':>10} "
+             f"{'p50_s':>10} {'p95_s':>10} {'max_s':>10}"]
+    for name, s in spans:
+        lines.append(
+            f"{name:<28} {s['count']:>6} {s['total']:>10.4f} "
+            f"{s['mean']:>10.5f} {s['p50']:>10.5f} {s['p95']:>10.5f} "
+            f"{s['max']:>10.5f}")
+    if instants:
+        lines.append("")
+        lines.append(f"{'event':<28} {'count':>6}")
+        for name, s in instants:
+            lines.append(f"{name:<28} {s['count']:>6}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSONL written by obs.tracing()")
+    ap.add_argument("--top", type=int, default=None,
+                    help="show only the N hottest span names")
+    args = ap.parse_args(argv)
+    events = load_events(args.trace)
+    print(f"# {len(events)} events from {args.trace}")
+    print(render(summarize(events), top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
